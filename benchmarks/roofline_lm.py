@@ -1,0 +1,35 @@
+"""LM roofline summary from the dry-run artifacts (reads experiments/dryrun).
+
+One row per baselined (arch x shape) cell on the single-pod mesh; empty if the
+dry-run has not been executed yet (run ``python -m repro.launch.dryrun``)."""
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> List[Dict]:
+    try:
+        from repro.roofline.analysis import build_table
+    except Exception:
+        return []
+    if not os.path.isdir(DRYRUN_DIR):
+        return [{"name": "roofline_lm/missing", "us_per_call": 0.0,
+                 "derived": "run python -m repro.launch.dryrun first"}]
+    rows = []
+    for r in build_table(DRYRUN_DIR, "single_pod"):
+        if r.get("status") != "ok":
+            continue
+        rows.append(
+            {
+                "name": f"roofline_lm/{r['arch']}/{r['shape']}",
+                "us_per_call": max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                "derived": (
+                    f"dominant={r['dominant']};mfu_proxy={r['mfu_proxy']:.3f};"
+                    f"useful={r['useful_ratio']:.2f};hbm_gb={r['hbm_gb_per_chip']:.1f}"
+                ),
+            }
+        )
+    return rows

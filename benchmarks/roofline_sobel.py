@@ -1,0 +1,37 @@
+"""Analytic TPU roofline for the fused Sobel kernel (the paper's workload).
+
+The fused RG-v2 kernel is one-touch: reads the padded image once, writes the
+magnitude once. At ~82 MAC/px vs 8 bytes/px it sits far below the v5e knee
+(240 flop/byte), i.e. HBM-bound — the same conclusion the paper reaches on
+GPU ("our kernel is memory limited")."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.roofline.constants import HBM_BW, PEAK_FLOPS_BF16
+
+MACS = {"direct": 200, "separable": 138, "v1": 96, "v2": 82}
+
+
+def run() -> List[Dict]:
+    rows = []
+    for n in (1024, 2048, 8192):
+        px = n * n
+        bytes_touched = px * 4 * 2                    # f32 in + f32 out, one touch
+        mem_t = bytes_touched / HBM_BW
+        for variant, macs in MACS.items():
+            flops = 2 * macs * px
+            comp_t = flops / PEAK_FLOPS_BF16
+            bound = max(mem_t, comp_t)
+            rows.append(
+                {
+                    "name": f"roofline_sobel/{variant}/{n}x{n}",
+                    "us_per_call": bound * 1e6,
+                    "derived": (
+                        f"compute_us={comp_t*1e6:.1f};memory_us={mem_t*1e6:.1f};"
+                        f"bound={'memory' if mem_t >= comp_t else 'compute'};"
+                        f"intensity={2*macs/8.0:.1f}flop/B"
+                    ),
+                }
+            )
+    return rows

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure + roofline summaries.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig6_blocksweep, fig7_ssim, roofline_lm, roofline_sobel, table1_variants, table2_throughput
+
+    suites = [
+        ("table1", table1_variants),
+        ("table2", table2_throughput),
+        ("fig6", fig6_blocksweep),
+        ("fig7", fig7_ssim),
+        ("roofline_sobel", roofline_sobel),
+        ("roofline_lm", roofline_lm),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        if only and only != name:
+            continue
+        for row in mod.run():
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

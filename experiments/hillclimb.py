@@ -1,0 +1,137 @@
+"""§Perf hillclimbing driver: lower ONE cell with optional config/sharding
+overrides, compile, and print the three roofline terms + deltas vs baseline.
+
+    PYTHONPATH=src python experiments/hillclimb.py qwen3-moe-30b-a3b train_4k \
+        --variant attn_dp
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+from repro.configs import get_config
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import model_flops
+from repro.roofline.constants import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.hlo import module_cost
+from repro.sharding.rules import TRAIN_RULES, get_rules
+
+# --- named experiment variants (hypothesis -> concrete override) -------------
+
+def _variant(arch, shape, name):
+    """Returns (cfg, rules) for a named hillclimb variant."""
+    cfg = get_config(arch)
+    kind = "train" if shape.startswith("train") else "serve"
+    base_rules = dict(get_rules(kind))
+    if name == "baseline":
+        return cfg, None
+    if name == "attn_dp":
+        # replicate attention weights (no TP for attention); experts/mlp keep TP
+        rules = dict(base_rules)
+        rules["heads"] = ()
+        rules["kv_heads"] = ()
+        return cfg, rules
+    if name == "no_tp":
+        # fully batch-parallel: no model-axis sharding of any weight
+        rules = dict(base_rules)
+        for k in ("heads", "kv_heads", "mlp", "vocab", "embed_td", "ssm_inner",
+                  "ssm_heads", "qk_rank", "kv_rank"):
+            rules[k] = ()
+        return cfg, rules
+    if name == "experts_only_tp":
+        rules = dict(base_rules)
+        for k in ("heads", "kv_heads", "vocab", "embed_td"):
+            rules[k] = ()
+        return cfg, rules
+    if name == "scan_bf16":
+        return cfg.replace(ssm_scan_dtype="bfloat16"), None
+    if name == "scan_bf16_chunk128":
+        return cfg.replace(ssm_scan_dtype="bfloat16", ssm_chunk=128), None
+    if name == "rows_dp":
+        # pure data-parallel images (no row sharding -> no halo exchange)
+        rules = dict(base_rules)
+        rules["image_rows"] = ()
+        return cfg, rules
+    if name.startswith("variant_"):
+        return cfg.replace(sobel_variant=name.split("_", 1)[1]), None
+    if name == "mb8":
+        return cfg, None  # microbatches handled in dryrun; placeholder
+    if name == "chunk4":
+        return cfg.replace(ssm_chunk=4), None
+    if name == "chunk8":
+        return cfg.replace(ssm_chunk=8), None
+    if name == "chunk16":
+        return cfg.replace(ssm_chunk=16), None
+    if name == "chunk32":
+        return cfg.replace(ssm_chunk=32), None
+    if name == "chunk64":
+        return cfg.replace(ssm_chunk=64), None
+    if name == "chunk128":
+        return cfg.replace(ssm_chunk=128), None
+    if name == "chunk512":
+        return cfg.replace(ssm_chunk=512), None
+    if name == "remat_dots":
+        return cfg.replace(remat_policy="dots"), None
+    if name == "group8k":
+        return cfg.replace(moe_group_size=8192), None
+    if name == "group2k":
+        return cfg.replace(moe_group_size=2048), None
+    if name == "capacity1":
+        return cfg.replace(moe_capacity_factor=1.0), None
+    if name.startswith("sobel_"):
+        return cfg.replace(sobel_variant=name.split("_", 1)[1]), None
+    raise KeyError(name)
+
+
+def run(arch, shape, variant, mesh_name="single_pod", out_dir="experiments/perf"):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi_pod"))
+    chips = 512 if mesh_name == "multi_pod" else 256
+    cfg, rules = _variant(arch, shape, variant)
+    t0 = time.time()
+    lowered = lower_cell(arch, shape, mesh, cfg=cfg, rules=rules)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    mc = module_cost(compiled.as_text())
+    mem = compiled.memory_analysis()
+    kind = "train" if shape.startswith("train") else ("image" if arch == "sobel-hd" else "serve")
+    mf = model_flops(arch, shape, "train" if kind == "train" else ("image" if kind == "image" else ("decode" if "decode" in shape or "long" in shape else "prefill")))
+
+    flops_dev = max(mc["flops"], mf["model_flops"] / chips)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS_BF16,
+        "memory_s": mc["bytes_fused"] / HBM_BW,
+        "collective_s": mc["collective_bytes"].get("total_bf16_wire", 0.0) / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    extra = {"memory_upper_s": mc["bytes"] / HBM_BW}
+    ideal = mf["model_flops"] / (chips * PEAK_FLOPS_BF16)
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant, "mesh": mesh_name,
+        **{k: round(v, 6) for k, v in terms.items()},
+        **{k: round(v, 6) for k, v in extra.items()},
+        "dominant": dominant,
+        "mfu_proxy": round(ideal / max(terms.values()), 4),
+        "hbm_gb": round((mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30, 2),
+        "hbm_gb_tpu_est": round((mem.argument_size_in_bytes + mem.temp_size_in_bytes / 2) / 2**30, 2),
+        "collectives_gb": {k: round(v / 2**30, 2) for k, v in mc["collective_bytes"].items()},
+        "compile_s": round(dt, 1),
+    }
+    path = os.path.join(out_dir, f"{arch}__{shape}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", default="single_pod")
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.variant, args.mesh)

@@ -1,0 +1,37 @@
+"""Recompute parsed_cost/collective_bytes in dry-run JSONs from the stored
+compiled HLO (.hlo.gz) — lets the roofline evolve without recompiling.
+
+    PYTHONPATH=src python experiments/reanalyze.py [experiments/dryrun]
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.roofline.hlo import module_cost
+
+
+def main(dryrun_dir="experiments/dryrun"):
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        hf = jf.replace(".json", ".hlo.gz")
+        if not os.path.exists(hf):
+            print(f"[no hlo] {jf}")
+            continue
+        with gzip.open(hf, "rt") as z:
+            txt = z.read()
+        mc = module_cost(txt)
+        rec["parsed_cost"] = {k: v for k, v in mc.items() if k != "collective_bytes"}
+        rec["collective_bytes"] = mc["collective_bytes"]
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

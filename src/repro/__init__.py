@@ -1,0 +1,4 @@
+"""repro: multi-directional Sobel operator (Chang et al., CS.DC 2023),
+TPU-native, embedded in a multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Architecture configs (one module per assigned arch)."""
+from repro.configs.base import ARCH_IDS, SHAPES, ModelConfig, ShapeConfig, get_config, list_archs  # noqa: F401

@@ -1,0 +1,14 @@
+"""sobel-hd [image] — the paper's own workload as an 11th architecture:
+batched four-directional 5x5 Sobel edge detection (RG-v2), sharded
+batch -> (pod, data), image rows -> model.
+"""
+from repro.configs.base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="sobel-hd", family="image",
+    image_h=2048, image_w=2048, sobel_size=5, sobel_directions=4, sobel_variant="v2",
+)
+
+SMOKE = FULL.replace(name="sobel-hd-smoke", image_h=64, image_w=64)
+
+register("sobel-hd", FULL, SMOKE)

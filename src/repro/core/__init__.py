@@ -1,0 +1,19 @@
+"""Core library: the paper's multi-directional Sobel operator."""
+from repro.core.filters import (  # noqa: F401
+    SobelParams,
+    filter_bank_3x3,
+    filter_bank_5x5,
+    kd,
+    kd_minus,
+    kd_minus_factors,
+    kd_plus,
+    kd_plus_rows,
+    kdt,
+    kx,
+    kx_factors,
+    ky,
+    ky_factors,
+)
+from repro.core.pipeline import edge_detect, make_sharded_edge_fn, rgb_to_gray  # noqa: F401
+from repro.core.sobel import VARIANTS, magnitude, sobel, sobel_components  # noqa: F401
+from repro.core.ssim import ssim  # noqa: F401

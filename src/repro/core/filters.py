@@ -1,0 +1,192 @@
+"""Generalized multi-directional Sobel filters (paper §3.1–§3.2, Eqs. 3, 5, 10, 18).
+
+All filters are parameterized by ``SobelParams(a, b, m, n)``; the paper's (and
+OpenCV's) 5x5 weights correspond to ``a=1, b=2, m=6, n=4``.
+
+Orientation convention: filters are applied as *correlation* (OpenCV
+``filter2D`` semantics), i.e. ``G[y, x] = sum_{i,j} K[i, j] * I[y+i-r, x+j-r]``.
+This matches the paper's row-indexed aggregation equations (Eq. 7, 13, 17),
+where vector ``k_i`` is applied to input row ``v - r + i``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SobelParams",
+    "kx",
+    "ky",
+    "kd",
+    "kdt",
+    "kd_plus",
+    "kd_minus",
+    "kx_factors",
+    "ky_factors",
+    "kd_plus_rows",
+    "kd_minus_factors",
+    "filter_bank_5x5",
+    "filter_bank_3x3",
+    "SOBEL3_GX",
+    "SOBEL3_GY",
+    "SOBEL3_GD",
+    "SOBEL3_GDT",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SobelParams:
+    """Generalized 5x5 Sobel weights (paper Eq. 5). Defaults = OpenCV weights."""
+
+    a: float = 1.0
+    b: float = 2.0
+    m: float = 6.0
+    n: float = 4.0
+
+    def as_tuple(self) -> Tuple[float, float, float, float]:
+        return (self.a, self.b, self.m, self.n)
+
+
+def _arr(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Separable factors (the mathematical heart of the paper's optimization)
+# ---------------------------------------------------------------------------
+
+def kx_factors(p: SobelParams = SobelParams()):
+    """K_x = a * col([1,n,m,n,1]) x row([-1,-b,0,b,1])  (Eq. 5)."""
+    col = _arr([1.0, p.n, p.m, p.n, 1.0])
+    row = _arr([-1.0, -p.b, 0.0, p.b, 1.0])
+    return p.a, col, row
+
+
+def ky_factors(p: SobelParams = SobelParams()):
+    """K_y = a * col([-1,-b,0,b,1]) x row([1,n,m,n,1])  (Eq. 5)."""
+    col = _arr([-1.0, -p.b, 0.0, p.b, 1.0])
+    row = _arr([1.0, p.n, p.m, p.n, 1.0])
+    return p.a, col, row
+
+
+def kd_plus_rows(p: SobelParams = SobelParams()):
+    """The two independent row vectors of K_d+ (Eq. 10/12).
+
+    K_d+ rows are ``[k0, k1, 0, -k1, -k0]`` (odd symmetry, Eq. 14), so the
+    whole filter is described by k0 and k1.  The returned vectors *include*
+    the leading factor ``a``.
+    """
+    a, b, m, n = p.as_tuple()
+    k0 = _arr([-m, -(n + b), -2.0, -(n + b), -m]) * a
+    k1 = _arr([b - n, -m * b, -2.0 * n * b, -m * b, b - n]) * a
+    return k0, k1
+
+
+def kd_minus_factors(p: SobelParams = SobelParams()):
+    """Eq. 18: K_d- = a*(colF x rowF  -  colD x rowD).
+
+    ``rowF = [-1,-b,0,b,1]`` is **identical to K_x's row vector**, so its
+    horizontal pass F is reused verbatim (RG-v2's key reuse).
+    ``rowD = [0,-1,0,1,0]`` is a 2-tap difference D = p[3] - p[1].
+    Returned columns include the factor ``a``.
+    """
+    a, b, m, n = p.as_tuple()
+    col_f = _arr([m, n + b, 2.0, n + b, m]) * a
+    row_f = _arr([-1.0, -b, 0.0, b, 1.0])
+    col_d = _arr(
+        [
+            m * b + b - n,
+            n * b + b * b - m * b,
+            2.0 * b - 2.0 * n * b,
+            n * b + b * b - m * b,
+            m * b + b - n,
+        ]
+    ) * a
+    row_d = _arr([0.0, -1.0, 0.0, 1.0, 0.0])
+    return (col_f, row_f), (col_d, row_d)
+
+
+# ---------------------------------------------------------------------------
+# Dense 5x5 filters
+# ---------------------------------------------------------------------------
+
+def kx(p: SobelParams = SobelParams()) -> np.ndarray:
+    a, col, row = kx_factors(p)
+    return a * np.outer(col, row)
+
+
+def ky(p: SobelParams = SobelParams()) -> np.ndarray:
+    a, col, row = ky_factors(p)
+    return a * np.outer(col, row)
+
+
+def kd(p: SobelParams = SobelParams()) -> np.ndarray:
+    """45-degree filter (paper Eq. 5, third block)."""
+    a, b, m, n = p.as_tuple()
+    k = _arr(
+        [
+            [-m, -n, -1, -b, 0],
+            [-n, -m * b, -n * b, 0, b],
+            [-1, -n * b, 0, n * b, 1],
+            [-b, 0, n * b, m * b, n],
+            [0, b, 1, n, m],
+        ]
+    )
+    return a * k
+
+
+def kdt(p: SobelParams = SobelParams()) -> np.ndarray:
+    """135-degree filter (paper Eq. 5, fourth block)."""
+    a, b, m, n = p.as_tuple()
+    k = _arr(
+        [
+            [0, -b, -1, -n, -m],
+            [b, 0, -n * b, -m * b, -n],
+            [1, n * b, 0, -n * b, -1],
+            [n, m * b, n * b, 0, -b],
+            [m, n, 1, b, 0],
+        ]
+    )
+    return a * k
+
+
+def kd_plus(p: SobelParams = SobelParams()) -> np.ndarray:
+    """K_d+ = K_d + K_dt (Eq. 10)."""
+    return kd(p) + kdt(p)
+
+
+def kd_minus(p: SobelParams = SobelParams()) -> np.ndarray:
+    """K_d- = K_d - K_dt (Eq. 10)."""
+    return kd(p) - kdt(p)
+
+
+def filter_bank_5x5(p: SobelParams = SobelParams()) -> np.ndarray:
+    """(4, 5, 5) stack: [K_x, K_y, K_d, K_dt] — paper Eq. 3 when p is default."""
+    return np.stack([kx(p), ky(p), kd(p), kdt(p)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Classical 3x3 filters (baseline operator; paper Table 1 "3x3" rows)
+# ---------------------------------------------------------------------------
+
+SOBEL3_GX = _arr([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]])
+SOBEL3_GY = _arr([[-1, -2, -1], [0, 0, 0], [1, 2, 1]])
+# 45 / 135 degree 3x3 (Fig. 1(c)'s four-directional operator).
+SOBEL3_GD = _arr([[-2, -1, 0], [-1, 0, 1], [0, 1, 2]])
+SOBEL3_GDT = _arr([[0, -1, -2], [1, 0, -1], [2, 1, 0]])
+
+
+def filter_bank_3x3(directions: int = 2) -> np.ndarray:
+    """(D, 3, 3) stack of the classical 3x3 Sobel filters."""
+    if directions == 2:
+        return np.stack([SOBEL3_GX, SOBEL3_GY], axis=0)
+    if directions == 4:
+        return np.stack([SOBEL3_GX, SOBEL3_GY, SOBEL3_GD, SOBEL3_GDT], axis=0)
+    raise ValueError(f"directions must be 2 or 4, got {directions}")
+
+
+def as_jnp(bank: np.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(bank, dtype=dtype)

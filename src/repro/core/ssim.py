@@ -1,0 +1,86 @@
+"""Structural Similarity Index (paper Eq. 20, used for Fig. 7 correctness).
+
+Standard Wang et al. SSIM with an 11x11 Gaussian window (sigma = 1.5),
+C1 = (0.01 L)^2, C2 = (0.03 L)^2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ssim"]
+
+
+def _gaussian_window(size: int = 11, sigma: float = 1.5) -> np.ndarray:
+    ax = np.arange(size, dtype=np.float64) - (size - 1) / 2.0
+    g = np.exp(-(ax ** 2) / (2.0 * sigma ** 2))
+    g /= g.sum()
+    return g.astype(np.float32)
+
+
+def _filter2(x: jnp.ndarray, win: np.ndarray) -> jnp.ndarray:
+    """Separable valid-mode Gaussian filtering over the last two axes."""
+    k = win.shape[0]
+    # horizontal
+    out_w = x.shape[-1] - k + 1
+    acc = None
+    for t in range(k):
+        term = win[t] * x[..., :, t : t + out_w]
+        acc = term if acc is None else acc + term
+    x = acc
+    # vertical
+    out_h = x.shape[-2] - k + 1
+    acc = None
+    for t in range(k):
+        term = win[t] * x[..., t : t + out_h, :]
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def ssim(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    data_range: float | None = None,
+    win_size: int = 11,
+    sigma: float = 1.5,
+) -> jnp.ndarray:
+    """Mean SSIM between images ``x`` and ``y`` of shape ``(..., H, W)``.
+
+    Returns a scalar per leading batch element (shape ``(...)``).
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if data_range is None:
+        rng = jnp.maximum(
+            jnp.max(x, axis=(-2, -1)) - jnp.min(x, axis=(-2, -1)),
+            jnp.max(y, axis=(-2, -1)) - jnp.min(y, axis=(-2, -1)),
+        )
+        rng = jnp.maximum(rng, 1e-8)[..., None, None]
+    else:
+        rng = jnp.float32(data_range)
+
+    c1 = (0.01 * rng) ** 2
+    c2 = (0.03 * rng) ** 2
+    win = _gaussian_window(win_size, sigma)
+
+    mu_x = _filter2(x, win)
+    mu_y = _filter2(y, win)
+    mu_xx = mu_x * mu_x
+    mu_yy = mu_y * mu_y
+    mu_xy = mu_x * mu_y
+    sigma_xx = _filter2(x * x, win) - mu_xx
+    sigma_yy = _filter2(y * y, win) - mu_yy
+    sigma_xy = _filter2(x * y, win) - mu_xy
+
+    if data_range is None:
+        c1 = c1[..., : mu_x.shape[-2], : mu_x.shape[-1]] * jnp.ones_like(mu_x)
+        c2 = c2[..., : mu_x.shape[-2], : mu_x.shape[-1]] * jnp.ones_like(mu_x)
+
+    num = (2.0 * mu_xy + c1) * (2.0 * sigma_xy + c2)
+    den = (mu_xx + mu_yy + c1) * (sigma_xx + sigma_yy + c2)
+    return jnp.mean(num / den, axis=(-2, -1))
+
+
+ssim_jit = jax.jit(ssim, static_argnames=("win_size",))

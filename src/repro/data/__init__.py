@@ -1,0 +1,2 @@
+from repro.data.loader import DataLoader, batch_shardings  # noqa: F401
+from repro.data.synthetic import image_batch, lm_batch  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the Sobel operator).
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrappers), ``ref.py`` (pure-jnp oracle).
+"""
+from repro.kernels.ops import sobel  # noqa: F401
+from repro.kernels.ref import sobel_ref  # noqa: F401

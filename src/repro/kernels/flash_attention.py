@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: fused causal attention (flash-style online softmax).
+
+Motivation (EXPERIMENTS.md §Roofline): every dense train cell is
+memory-dominant, and the per-op audit shows the (B, H, S, S) score
+materialization (dot -> reduce -> dot, 3 HBM round-trips of ~0.5 GB/layer at
+train_4k) as the largest single contributor. This kernel keeps the running
+(max, denom, accumulator) in VMEM so scores never reach HBM:
+
+    grid = (B, KV_heads*G, S/block_q, T/block_kv)   (kv axis fastest)
+    scratch: m (block_q,), l (block_q,), acc (block_q, head_dim) — persistent
+    across the kv-chunk axis, finalized at the last chunk.
+
+Supports GQA by folding the group dim into the head grid axis, and causality
+via position-block masking (whole kv-blocks strictly above the diagonal are
+masked; Pallas still visits them — skipping is a further ~2x for long S).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _scr(shape):
+        return pltpu.VMEM(shape, jnp.float32)
+except Exception:  # pragma: no cover
+    def _scr(shape):
+        return pl.VMEM(shape, jnp.float32)
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q, block_kv, d, scale, causal, n_kv):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full((block_q,), _NEG, jnp.float32)
+        l_ref[...] = jnp.zeros((block_q,), jnp.float32)
+        acc_ref[...] = jnp.zeros((block_q, d), jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale             # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (bkv, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = q @ k.T                                             # (bq, bkv)
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        cols = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        s = jnp.where(rows >= cols, s, _NEG)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_new = acc_prev * corr[:, None] + p @ v
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,       # (B, H, S, D)
+    k: jnp.ndarray,       # (B, H, T, D)   (repeat KV heads for GQA upstream)
+    v: jnp.ndarray,       # (B, H, T, D)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, s_len, d = q.shape
+    t = k.shape[2]
+    block_q = min(block_q, s_len)
+    block_kv = min(block_kv, t)
+    assert s_len % block_q == 0 and t % block_kv == 0, (s_len, block_q, t, block_kv)
+    n_kv = t // block_kv
+    grid = (b, h, s_len // block_q, n_kv)
+    scale = 1.0 / math.sqrt(d)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, kj: (b_, h_, qi, 0)),
+        pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, kj: (b_, h_, kj, 0)),
+        pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, kj: (b_, h_, kj, 0)),
+    ]
+    out_specs = pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, kj: (b_, h_, qi, 0))
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_kv=block_kv, d=d, scale=scale,
+        causal=causal, n_kv=n_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[_scr((block_q,)), _scr((block_q,)), _scr((block_q, d))],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the Pallas Sobel kernels.
+
+The oracle is the *dense direct 2-D correlation* path of ``repro.core.sobel``
+(i.e. a different code path from the separable math used inside the fused
+kernels), so kernel-vs-ref agreement validates the whole RG-v1/v2 algebra,
+not just the plumbing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.filters import SobelParams
+from repro.core.sobel import magnitude, sobel_components
+
+__all__ = ["sobel_ref", "sobel_components_ref"]
+
+
+def sobel_components_ref(
+    image: jnp.ndarray,
+    *,
+    size: int = 5,
+    directions: int = 4,
+    params: SobelParams = SobelParams(),
+    padding: str = "reflect",
+):
+    return sobel_components(
+        image,
+        size=size,
+        directions=directions,
+        variant="direct",
+        params=params,
+        padding=padding,
+    )
+
+
+def sobel_ref(
+    image: jnp.ndarray,
+    *,
+    size: int = 5,
+    directions: int = 4,
+    params: SobelParams = SobelParams(),
+    padding: str = "reflect",
+) -> jnp.ndarray:
+    """(..., H, W) -> (..., H, W) edge magnitude, direct dense math."""
+    return magnitude(
+        sobel_components_ref(
+            image, size=size, directions=directions, params=params, padding=padding
+        )
+    )

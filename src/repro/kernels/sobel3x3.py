@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: classical 3x3 Sobel (paper Table 1 "3x3" baseline rows).
+
+Same strip/halo pipeline as ``sobel5x5`` with r = 1 (2-row halo).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import filters as F
+from repro.core.sobel import _correlate2d, _hpass, _vpass
+
+__all__ = ["sobel3x3_pallas"]
+
+VARIANTS = ("direct", "separable")
+
+
+def _strip_components(x, variant: str, bh: int, w: int, directions: int):
+    if variant == "direct":
+        bank = F.filter_bank_3x3(directions)
+        return tuple(_correlate2d(x, k, bh, w) for k in bank)
+    gx = _vpass(_hpass(x, np.float32([-1, 0, 1]), w), np.float32([1, 2, 1]), bh)
+    gy = _vpass(_hpass(x, np.float32([1, 2, 1]), w), np.float32([-1, 0, 1]), bh)
+    if directions == 2:
+        return gx, gy
+    gd = _correlate2d(x, F.SOBEL3_GD, bh, w)
+    gdt = _correlate2d(x, F.SOBEL3_GDT, bh, w)
+    return gx, gy, gd, gdt
+
+
+def _kernel(x_main_ref, x_halo_ref, o_ref, *, variant, directions, bh, w):
+    x = jnp.concatenate([x_main_ref[0], x_halo_ref[0]], axis=0).astype(jnp.float32)
+    comps = _strip_components(x, variant, bh, w, directions)
+    acc = None
+    for g in comps:
+        acc = g * g if acc is None else acc + g * g
+    o_ref[0] = jnp.sqrt(acc)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("variant", "directions", "block_h", "interpret"),
+)
+def sobel3x3_pallas(
+    padded: jnp.ndarray,
+    *,
+    variant: str = "separable",
+    directions: int = 2,
+    block_h: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(N, H + 2, W + 2) padded float32 -> (N, H, W) magnitude."""
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    n, hp, wp = padded.shape
+    h, w = hp - 2, wp - 2
+    if h % block_h != 0:
+        raise ValueError(f"H={h} not a multiple of block_h={block_h}")
+    if block_h % 2 != 0:
+        raise ValueError(f"block_h={block_h} must be even")
+    bh = block_h
+    grid = (n, h // bh)
+    in_specs = [
+        pl.BlockSpec((1, bh, wp), lambda i, k: (i, k, 0)),
+        pl.BlockSpec((1, 2, wp), lambda i, k: (i, (k + 1) * (bh // 2), 0)),
+    ]
+    out_specs = pl.BlockSpec((1, bh, w), lambda i, k: (i, k, 0))
+    out_shape = jax.ShapeDtypeStruct((n, h, w), jnp.float32)
+    kernel = functools.partial(_kernel, variant=variant, directions=directions, bh=bh, w=w)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(padded, padded)

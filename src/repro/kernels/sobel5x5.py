@@ -1,0 +1,191 @@
+"""Pallas TPU kernel: fused four-directional 5x5 Sobel (paper §4, TPU-native).
+
+GPU -> TPU mapping (see DESIGN.md §2):
+
+  * paper's CUDA-block row ownership + 2r overlap (§4.3.1)  ->  row-strip grid:
+    grid step k owns ``block_h`` output rows and reads ``block_h + 4`` input
+    rows via a main BlockSpec plus a 4-row halo BlockSpec (the halo is the
+    paper's inter-block overlap, re-read amplification = 4/block_h).
+  * warp-shuffle register taps (§4.3.3)                      ->  static strided
+    slices of the VMEM-resident row strip feeding the VPU.
+  * explicit prefetch of the next row (§4.3.4)               ->  Pallas's
+    automatic double-buffered pipeline: the HBM->VMEM DMA for grid step k+1
+    is issued while step k computes.
+  * per-row ring buffer f(x) = x mod 5/6 (Eq. 8/9)           ->  vectorized
+    across sublanes: all ``block_h + 4`` horizontal passes of a strip are one
+    VPU op; the separable-reuse FLOP savings (Eq. 5-19) carry over unchanged.
+
+Variant ladder (identical math to ``repro.core.sobel``):
+  ``direct``    4 dense 5x5 correlations               (~200 MAC/px)  "GM"
+  ``separable`` Kx/Ky separable, Kd/Kdt dense          (~138 MAC/px)  "RG"
+  ``v1``        + diagonal transform K_d+-             (~ 96 MAC/px)  "RG-v1"
+  ``v2``        + Eq.18 split of K_d- (reuses F)       (~ 82 MAC/px)  "RG-v2"
+
+The kernel is fused end-to-end: one HBM read of the (padded) image, one HBM
+write of the RSS magnitude (Eq. 4) — i.e. it sits on the HBM roofline, and the
+variants then trade VPU work, mirroring the paper's Table 1 ladder.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import filters as F
+from repro.core.filters import SobelParams
+from repro.core.sobel import _correlate2d, _hpass, _vpass
+
+__all__ = ["sobel5x5_pallas", "VARIANTS"]
+
+VARIANTS = ("direct", "separable", "v1", "v2")
+
+
+# ---------------------------------------------------------------------------
+# Kernel body — pure math on the VMEM-resident strip (bh+4, W+4)
+# ---------------------------------------------------------------------------
+
+def _strip_components(x, p: SobelParams, variant: str, bh: int, w: int):
+    """Four direction components for one row strip.
+
+    ``x``: (bh+4, w+4) padded strip; returns 4 arrays of shape (bh, w).
+    """
+    if variant == "direct":
+        bank = F.filter_bank_5x5(p)
+        return tuple(_correlate2d(x, k, bh, w) for k in bank)
+
+    a, col_x, row_f = F.kx_factors(p)
+    _, col_y, row_s = F.ky_factors(p)
+    f = _hpass(x, row_f, w)                 # (bh+4, w): the reused F pass
+    s = _hpass(x, row_s, w)
+    gx = _vpass(f, a * col_x, bh)
+    gy = _vpass(s, a * col_y, bh)
+
+    if variant == "separable":
+        gd = _correlate2d(x, F.kd(p), bh, w)
+        gdt = _correlate2d(x, F.kdt(p), bh, w)
+        return gx, gy, gd, gdt
+
+    # K_d+ (Eq. 13-15): rows [k0, k1, 0, -k1, -k0]
+    k0, k1 = F.kd_plus_rows(p)
+    fk0 = _hpass(x, k0, w)
+    fk1 = _hpass(x, k1, w)
+    gd_plus = (
+        fk0[0:bh, :] + fk1[1 : 1 + bh, :] - fk1[3 : 3 + bh, :] - fk0[4 : 4 + bh, :]
+    )
+
+    if variant == "v1":
+        kdm = F.kd_minus(p)
+        f0 = _hpass(x, kdm[0], w)
+        f1 = _hpass(x, kdm[1], w)
+        f2 = _hpass(x, kdm[2], w)
+        gd_minus = (
+            f0[0:bh, :]
+            + f1[1 : 1 + bh, :]
+            + f2[2 : 2 + bh, :]
+            + f1[3 : 3 + bh, :]
+            + f0[4 : 4 + bh, :]
+        )
+    elif variant == "v2":
+        (col_f, _), (col_d, row_d) = F.kd_minus_factors(p)
+        d = _hpass(x, row_d, w)             # 2-tap difference D = p3 - p1
+        gd_minus = _vpass(f, col_f, bh) - _vpass(d, col_d, bh)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    gd = (gd_plus + gd_minus) * 0.5
+    gdt = (gd_plus - gd_minus) * 0.5
+    return gx, gy, gd, gdt
+
+
+def _kernel_magnitude(x_main_ref, x_halo_ref, o_ref, *, p, variant, directions, bh, w):
+    x = jnp.concatenate(
+        [x_main_ref[0], x_halo_ref[0]], axis=0
+    ).astype(jnp.float32)                   # (bh+4, w+4)
+    comps = _strip_components(x, p, variant, bh, w)[:directions]
+    acc = None
+    for g in comps:
+        acc = g * g if acc is None else acc + g * g
+    o_ref[0] = jnp.sqrt(acc)
+
+
+def _kernel_components(x_main_ref, x_halo_ref, o_ref, *, p, variant, directions, bh, w):
+    x = jnp.concatenate(
+        [x_main_ref[0], x_halo_ref[0]], axis=0
+    ).astype(jnp.float32)
+    comps = _strip_components(x, p, variant, bh, w)[:directions]
+    o_ref[0] = jnp.stack(comps, axis=0)     # (directions, bh, w)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrapper (operates on a pre-padded batch)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "variant",
+        "params",
+        "directions",
+        "block_h",
+        "out_components",
+        "interpret",
+    ),
+)
+def sobel5x5_pallas(
+    padded: jnp.ndarray,
+    *,
+    variant: str = "v2",
+    params: SobelParams = SobelParams(),
+    directions: int = 4,
+    block_h: int = 64,
+    out_components: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Run the fused kernel on ``padded``: (N, H + 4, W + 4) float32.
+
+    ``H`` must be a multiple of ``block_h`` (the public ``ops.sobel`` wrapper
+    takes care of padding/slicing arbitrary sizes).  Returns (N, H, W)
+    magnitude, or (N, directions, H, W) when ``out_components``.
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    n, hp, wp = padded.shape
+    h, w = hp - 4, wp - 4
+    if h % block_h != 0:
+        raise ValueError(f"H={h} not a multiple of block_h={block_h}")
+    if block_h % 4 != 0:
+        raise ValueError(f"block_h={block_h} must be a multiple of 4")
+    bh = block_h
+    grid = (n, h // bh)
+
+    # Main strip: rows [k*bh, k*bh + bh); halo: the next 4 rows (the paper's
+    # 2r inter-block overlap). Halo block index is in units of 4 rows:
+    # element offset 4 * ((k+1) * bh/4) = k*bh + bh.
+    in_specs = [
+        pl.BlockSpec((1, bh, wp), lambda i, k: (i, k, 0)),
+        pl.BlockSpec((1, 4, wp), lambda i, k: (i, (k + 1) * (bh // 4), 0)),
+    ]
+    if out_components:
+        out_specs = pl.BlockSpec((1, directions, bh, w), lambda i, k: (i, 0, k, 0))
+        out_shape = jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)
+        body = _kernel_components
+    else:
+        out_specs = pl.BlockSpec((1, bh, w), lambda i, k: (i, k, 0))
+        out_shape = jax.ShapeDtypeStruct((n, h, w), jnp.float32)
+        body = _kernel_magnitude
+
+    kernel = functools.partial(
+        body, p=params, variant=variant, directions=directions, bh=bh, w=w
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(padded, padded)

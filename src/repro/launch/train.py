@@ -1,0 +1,61 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Builds the largest mesh the device population supports (elastic), constructs
+the Trainer with TP+FSDP shardings, and drives the fault-tolerant fit loop
+with checkpoint/auto-resume. On the CPU container this runs smoke configs;
+on a pod the same entry point spans (pod, data, model).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataLoader
+from repro.models import Model
+from repro.runtime.elastic import make_mesh
+from repro.train import TrainConfig, Trainer
+
+
+def main() -> None:
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_mesh(model_parallel=args.model_parallel, pods=args.pods)
+    n_dev = len(jax.devices())
+    print(f"arch={cfg.name} devices={n_dev} mesh={dict(mesh.shape)}")
+    print(f"params={Model(cfg).param_count():,}")
+
+    tc = TrainConfig(
+        batch=args.batch, seq_len=args.seq, steps=args.steps,
+        microbatches=args.microbatches, peak_lr=args.lr, seed=args.seed,
+        checkpoint_every=max(10, args.steps // 5), log_every=max(1, args.steps // 20),
+    )
+    trainer = Trainer(cfg, tc, mesh=mesh if n_dev > 1 else None)
+    loader = DataLoader(cfg, tc.batch, tc.seq_len, mesh=mesh if n_dev > 1 else None, seed=args.seed)
+    manager = CheckpointManager(args.ckpt, keep=3, async_save=True) if args.ckpt else None
+    hist = trainer.fit(loader, manager=manager)
+    if manager:
+        manager.wait()
+    print(f"done: loss {hist['loss'][0]:.4f} -> {hist['loss'][-1]:.4f}, "
+          f"restarts={hist['restarts']}, stragglers={trainer.monitor.stragglers()}")
+
+
+if __name__ == "__main__":
+    main()

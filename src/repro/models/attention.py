@@ -1,0 +1,448 @@
+"""Attention: GQA (dense + memory-chunked) and MLA (latent, absorbed decode).
+
+Shapes: activations (B, S, d_model); q/k/v (B, S, heads, head_dim) with GQA
+grouping H = KV * G. Decode uses a functional KV cache:
+  * GQA:  {"k": (B, L, KV, D), "v": (B, L, KV, D)}
+  * MLA:  {"ckv": (B, L, kv_rank), "k_rope": (B, L, rope_dim)}  — the latent
+    cache is what makes MLA's long-context decode cheap; the decode path uses
+    the *absorbed* formulation (q projected into latent space) so the cache is
+    never expanded to per-head keys/values.
+
+Tensor-parallel head strategy (picked from the live mesh at trace time):
+  1. KV heads divide the `model` axis -> shard KV heads (classic TP).
+  2. else if Q heads divide            -> replicate KV across TP ranks
+     (repeat to H heads; standard GQA practice, e.g. glm4's kv=2 on 16-way TP).
+  3. else (e.g. whisper's 20 heads)    -> shard the *query sequence* over
+     `model` (Megatron-style sequence parallelism for the attention block).
+
+Masks are always built from position vectors (never a materialized (B, S, T)
+tensor at long context); the chunked path rebuilds the causal mask per KV
+chunk inside the online-softmax scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Spec, apply_rope, shard
+from repro.sharding.rules import current_mesh
+
+__all__ = [
+    "attention_params",
+    "cross_attention_params",
+    "apply_attention",
+    "apply_cross_attention",
+    "init_attn_cache",
+    "dot_attention",
+    "update_cache",
+]
+
+_NEG_INF = -1e30
+
+
+def update_cache(cache_arr: jax.Array, new: jax.Array, index: jax.Array) -> jax.Array:
+    """Write ``new`` (B, S, ...) into the length axis (1) of ``cache_arr``.
+
+    index shapes: scalar -> contiguous at [index, index+S) (prefill);
+    (B,) -> one slot per sequence (continuous-batching decode);
+    (B, S) -> arbitrary per-token destinations (padded prefill; pad tokens
+    aimed at a trash slot).
+    """
+    new = new.astype(cache_arr.dtype)
+    index = jnp.asarray(index)
+    if index.ndim == 0:
+        if new.shape[1] == 1:
+            # Single-token decode: elementwise select over the length axis.
+            # Fully shardable when the cache is length-sharded (GSPMD would
+            # otherwise re-materialize the whole cache for a dynamic update).
+            iota = jnp.arange(cache_arr.shape[1])
+            sel = (iota == index)[None, :, None]
+            sel = sel.reshape(sel.shape + (1,) * (cache_arr.ndim - 3))
+            return jnp.where(sel, new[:, :1], cache_arr)
+        return jax.lax.dynamic_update_slice_in_dim(cache_arr, new, index, axis=1)
+    b = cache_arr.shape[0]
+    if index.ndim == 1:
+        return cache_arr.at[jnp.arange(b), index].set(new[:, 0], mode="drop")
+    b_ix = jnp.broadcast_to(jnp.arange(b)[:, None], index.shape)
+    return cache_arr.at[b_ix, index].set(new, mode="drop")
+
+
+def _model_axis_size() -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get("model", 1))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_params(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.attn_type == "mla":
+        nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        v = cfg.v_head_dim
+        p: Dict[str, Spec] = {
+            "wkv_a": Spec((d, cfg.kv_lora_rank + rope), ("embed", None)),
+            "kv_norm": Spec((cfg.kv_lora_rank,), (None,), "ones"),
+            "wk_b": Spec((cfg.kv_lora_rank, h, nope), (None, "heads", None)),
+            "wv_b": Spec((cfg.kv_lora_rank, h, v), (None, "heads", None)),
+            "wo": Spec((h, v, d), ("heads", None, "embed")),
+        }
+        if cfg.q_lora_rank:
+            p["wq_a"] = Spec((d, cfg.q_lora_rank), ("embed", "qk_rank"))
+            p["q_norm"] = Spec((cfg.q_lora_rank,), (None,), "ones")
+            p["wq_b"] = Spec((cfg.q_lora_rank, h, nope + rope), (None, "heads", None))
+        else:
+            p["wq"] = Spec((d, h, nope + rope), ("embed", "heads", None))
+        return p
+
+    p = {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = Spec((hd,), (None,), "ones")
+        p["k_norm"] = Spec((hd,), (None,), "ones")
+    return p
+
+
+def cross_attention_params(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wv": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _rms(x, scale, eps):
+    y = x.astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mask_block(pos_q, pos_k, causal: bool):
+    if not causal:
+        return None
+    return pos_q[:, :, None] >= pos_k[:, None, :]          # (B, S, C)
+
+
+def dot_attention(
+    q: jax.Array,              # (B, S, KV, G, D)
+    k: jax.Array,              # (B, T, KV, D)
+    v: jax.Array,              # (B, T, KV, Dv)
+    *,
+    pos_q: Optional[jax.Array] = None,    # (B, S)
+    pos_k: Optional[jax.Array] = None,    # (B, T)
+    causal: bool = True,
+    impl: str = "dense",
+    chunk: int = 1024,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Grouped-query attention core. Returns (B, S, KV, G, Dv).
+
+    The mask is derived from positions (``pos_q >= pos_k`` when causal) and
+    built per KV chunk — an (S x T) mask tensor is never materialized.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    q = (q * scale).astype(q.dtype)
+    b, s_len = q.shape[0], q.shape[1]
+    t = k.shape[1]
+    if causal:
+        assert pos_q is not None and pos_k is not None
+
+    if impl == "dense" or t <= chunk:
+        s = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _mask_block(pos_q, pos_k, causal)
+        if mask is not None:
+            s = jnp.where(mask[:, None, None], s, _NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgst,btkd->bskgd", w, v)
+
+    # Chunked online-softmax (flash-style): scan over KV chunks with running
+    # (max, denom, acc) so the (S x T) score matrix is never materialized.
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    kc = k.reshape(b, nc, chunk, k.shape[2], -1).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, v.shape[2], -1).transpose(1, 0, 2, 3, 4)
+    if pos_k is None:
+        pos_k = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    pkc = pos_k.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        k_j, v_j, pk_j = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", q, k_j).astype(jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask_j = _mask_block(pos_q, pk_j, causal)
+        if mask_j is not None:
+            s = jnp.where(mask_j[:, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), v_j
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    kv_h, g = q.shape[2], q.shape[3]
+    m0 = jnp.full((b, kv_h, g, s_len), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_h, g, s_len), jnp.float32)
+    a0 = jnp.zeros((b, kv_h, g, s_len, v.shape[-1]), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pkc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,S,KV,G,Dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _gqa_qkv(params, cfg: ModelConfig, x, positions):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = _rms(q, params["q_norm"], cfg.norm_eps)
+        k = _rms(k, params["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _head_layout(cfg: ModelConfig, q, k, v):
+    """Pick the TP layout (see module docstring). Returns (q5, k, v, strategy)."""
+    b, s = q.shape[0], q.shape[1]
+    h, kv_h, hd = cfg.num_heads, cfg.num_kv_heads, q.shape[-1]
+    msize = _model_axis_size()
+    if msize == 1 or kv_h % msize == 0:
+        q5 = q.reshape(b, s, kv_h, h // kv_h, hd)
+        q5 = shard(q5, "batch", None, "kv_heads", None, None)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+        return q5, k, v, "kv_sharded"
+    if h % msize == 0:
+        # replicate KV across TP ranks: repeat to H heads, G = 1
+        reps = h // kv_h
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+        q5 = q.reshape(b, s, h, 1, hd)
+        q5 = shard(q5, "batch", None, "heads", None, None)
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+        return q5, k, v, "kv_replicated"
+    # sequence-parallel attention: q (and out) sharded over seq
+    q5 = q.reshape(b, s, kv_h, h // kv_h, hd)
+    q5 = shard(q5, "batch", "attn_seq", None, None, None)
+    return q5, k, v, "seq_sharded"
+
+
+def _gqa_out(params, cfg, out, strategy):
+    # out: (B, S, KV, G, D) -> (B, S, H, D) -> (B, S, d_model)
+    b, s, kv, g, d = out.shape
+    if strategy == "seq_sharded":
+        out = shard(out, "batch", "attn_seq", None, None, None)
+    out = out.reshape(b, s, kv * g, d)
+    y = jnp.einsum("bshd,hdo->bso", out, params["wo"].astype(out.dtype))
+    return shard(y, "batch", None, None)
+
+
+def apply_attention(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    attn_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Self-attention (GQA or MLA).
+
+    With ``cache``: S == 1 is a decode step reading the cache; S > 1 is a
+    prefill — attention runs over the freshly computed local k/v (never the
+    padded cache) while the cache is written through.
+    """
+    if cfg.attn_type == "mla":
+        return _apply_mla(
+            params, cfg, x, positions, causal=causal, cache=cache, cache_index=cache_index
+        )
+
+    kv_h, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    b, s = x.shape[0], x.shape[1]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "k": update_cache(cache["k"], k, cache_index),
+            "v": update_cache(cache["v"], v, cache_index),
+        }
+
+    if cache is not None and s == 1:
+        # decode read path
+        k_full, v_full = new_cache["k"], new_cache["v"]
+        t = k_full.shape[1]
+        q5 = q.reshape(b, 1, kv_h, g, cfg.head_dim)
+        pos_k = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        out = dot_attention(
+            q5, k_full, v_full, pos_q=positions, pos_k=pos_k, causal=True, impl="dense"
+        )
+        return _gqa_out(params, cfg, out, "decode"), new_cache
+
+    q5, k, v, strategy = _head_layout(cfg, q, k, v)
+    impl = "chunked" if s > 4096 else "dense"
+    out = dot_attention(
+        q5, k, v,
+        pos_q=positions, pos_k=positions, causal=causal,
+        impl=impl, chunk=attn_chunk, softcap=cfg.attn_logit_softcap,
+    )
+    return _gqa_out(params, cfg, out, strategy), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, cfg: ModelConfig, x, positions):
+    dtype = x.dtype
+    nope = cfg.qk_nope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(dtype))
+        cq = _rms(cq, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"].astype(dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, cfg: ModelConfig, x, positions):
+    dtype = x.dtype
+    rank = cfg.kv_lora_rank
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dtype))
+    ckv, k_rope = kv[..., :rank], kv[..., rank:]
+    ckv = _rms(ckv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # shared rope head
+    return ckv, k_rope
+
+
+def _apply_mla(params, cfg: ModelConfig, x, positions, *, causal, cache, cache_index):
+    b, s = x.shape[0], x.shape[1]
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rope)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv_new, k_rope_new = _mla_latent(params, cfg, x, positions)
+    dtype = x.dtype
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "ckv": update_cache(cache["ckv"], ckv_new, cache_index),
+            "k_rope": update_cache(cache["k_rope"], k_rope_new, cache_index),
+        }
+
+    if cache is not None and s == 1:
+        # Absorbed decode: q_nope -> latent space; cache stays compressed.
+        ckv, kr = new_cache["ckv"], new_cache["k_rope"]
+        t = ckv.shape[1]
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, params["wk_b"].astype(dtype))
+        s_lat = jnp.einsum("bshr,blr->bhsl", q_lat, ckv)
+        s_rope = jnp.einsum("bshp,blp->bhsl", q_rope, kr)
+        logits = (s_lat + s_rope).astype(jnp.float32) * scale
+        valid = jnp.arange(t)[None, None, :] <= positions[:, :, None]    # (B, S, t)
+        logits = jnp.where(valid[:, None], logits, _NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(dtype)
+        ctx_lat = jnp.einsum("bhsl,blr->bshr", w, ckv)
+        out_v = jnp.einsum("bshr,rhv->bshv", ctx_lat, params["wv_b"].astype(dtype))
+        out = jnp.einsum("bshv,hvd->bsd", out_v, params["wo"].astype(dtype))
+        return shard(out, "batch", None, None), new_cache
+
+    # Training / prefill: expand latent to per-head k/v (standard form).
+    k_nope = jnp.einsum("blr,rhn->blhn", ckv_new, params["wk_b"].astype(dtype))
+    v = jnp.einsum("blr,rhv->blhv", ckv_new, params["wv_b"].astype(dtype))
+    k_rope_b = jnp.broadcast_to(k_rope_new[:, :, None, :], (b, s, h, rope))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    msize = _model_axis_size()
+    q5 = q[:, :, :, None, :]                                # KV = H, G = 1
+    if msize == 1 or h % msize == 0:
+        q5 = shard(q5, "batch", None, "heads", None, None)
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+        strategy = "kv_sharded"
+    else:
+        q5 = shard(q5, "batch", "attn_seq", None, None, None)
+        strategy = "seq_sharded"
+    impl = "chunked" if s > 4096 else "dense"
+    out = dot_attention(
+        q5, k, v, pos_q=positions, pos_k=positions, causal=causal, impl=impl
+    )
+    if strategy == "seq_sharded":
+        out = shard(out, "batch", "attn_seq", None, None, None)
+    out = out.reshape(b, s, h, vd)
+    out = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(dtype))
+    return shard(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder); encoder k/v precomputed once.
+# ---------------------------------------------------------------------------
+
+def apply_cross_attention(params, cfg: ModelConfig, x, enc_k, enc_v):
+    dtype = x.dtype
+    b, s = x.shape[0], x.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    q5 = q[:, :, :, None, :]                               # KV = H, G = 1
+    msize = _model_axis_size()
+    if msize > 1 and cfg.num_heads % msize != 0:
+        q5 = shard(q5, "batch", "attn_seq", None, None, None)
+    out = dot_attention(q5, enc_k, enc_v, causal=False, impl="dense")
+    out = out.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    out = jnp.einsum("bshd,hdo->bso", out, params["wo"].astype(dtype))
+    return shard(out, "batch", None, None)
+
+
+def cross_kv(params, cfg: ModelConfig, enc_out):
+    dtype = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dtype))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    if cfg.attn_type == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }

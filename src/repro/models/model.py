@@ -1,0 +1,92 @@
+"""Public model API: init / forward / loss / cache / decode for any arch."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.layers import abstract_tree, axes_tree, init_tree, shard
+
+__all__ = ["Model", "cross_entropy"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, weights: Optional[jax.Array]):
+    """Mean masked token cross-entropy over vocab-sharded logits.
+
+    The label logit is extracted with a masked sum (elementwise, GSPMD-
+    friendly) rather than a gather across the sharded vocab dim.
+    """
+    logits = logits.astype(jnp.float32)
+    log_z = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    xent = log_z - ll
+    if weights is None:
+        weights = jnp.ones_like(xent)
+    weights = weights.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(weights), 1e-6)
+    return jnp.sum(xent * weights) / total
+
+
+class Model:
+    """Thin functional wrapper binding a ModelConfig to the layer stacks."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+    def param_specs(self):
+        return T.model_param_specs(self.cfg)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_tree(self.param_specs(), dtype)
+
+    def logical_axes(self):
+        return axes_tree(self.param_specs())
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_tree(self.param_specs(), key, dtype)
+
+    def param_count(self) -> int:
+        import numpy as np
+
+        leaves = jax.tree.leaves(self.abstract_params())
+        return int(sum(np.prod(l.shape) for l in leaves))
+
+    # -- forward / loss ------------------------------------------------------
+    def forward(self, params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        return T.forward(params, self.cfg, batch)
+
+    def cast_params(self, params):
+        """Mixed precision: one upfront cast of the (sharded) tree to the
+        compute dtype, so FSDP all-gathers move bf16 — not f32 — and all
+        dots/TP-collectives run in bf16. Grads still accumulate into f32."""
+        dtype = jnp.dtype(self.cfg.dtype)
+        return jax.tree.map(
+            lambda p: p.astype(dtype) if p.dtype == jnp.float32 else p, params
+        )
+
+    def loss_fn(self, params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, aux = self.forward(self.cast_params(params), batch)
+        xent = cross_entropy(logits, batch["labels"], batch.get("loss_weights"))
+        loss = xent
+        metrics = {"xent": xent}
+        for k, v in aux.items():
+            loss = loss + v
+            metrics[k] = v
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return T.init_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, batch: Dict, cache: Dict):
+        return T.prefill(params, self.cfg, batch, cache)
+
+    def decode_step(self, params, cache: Dict, tokens: jax.Array, index: jax.Array):
+        return T.decode_step(params, self.cfg, cache, tokens, index)

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN: grouped top-k routing with capacity (GShard-style).
+
+Tokens are routed in groups (``moe_group_size``) so the cumsum/dispatch
+bookkeeping stays local to the (pod, data)-sharded token dim; experts are
+sharded over the ``model`` axis (expert parallelism).  Dispatch/combine use
+gather / scatter-add (not one-hot einsum), so dispatch FLOPs stay negligible
+versus expert FLOPs and the MODEL_FLOPS/HLO_FLOPS roofline ratio stays honest.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Spec, shard
+
+__all__ = ["moe_params", "apply_moe"]
+
+
+def moe_params(cfg: ModelConfig) -> Dict[str, Spec]:
+    e, d, ff = cfg.num_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": Spec((d, e), ("embed", None)),
+        "w_gate": Spec((e, d, ff), ("experts", "embed", "mlp")),
+        "w_up": Spec((e, d, ff), ("experts", "embed", "mlp")),
+        "w_down": Spec((e, ff, d), ("experts", "mlp", "embed")),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = math.ceil(
+        tokens_per_group * cfg.num_experts_per_tok * cfg.moe_capacity_factor / cfg.num_experts
+    )
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def apply_moe(params: Dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d) -> (out, aux_losses)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    dtype = x.dtype
+    t = b * s
+    gs = min(cfg.moe_group_size, t)
+    assert t % gs == 0, (t, gs)
+    g = t // gs
+    xg = x.reshape(g, gs, d)
+    xg = shard(xg, "groups", None, None)
+
+    # --- routing ---
+    logits = jnp.einsum("gsd,de->gse", xg, params["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (g, gs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity bookkeeping: sort-based (MegaBlocks-style) ---
+    # O(T*k) memory instead of the classic (T, k, E) one-hot cumsum, which
+    # materializes gigabytes at 32k-token prefill (see EXPERIMENTS.md §Perf).
+    cap = _capacity(gs, cfg)
+    flat_e = idx.reshape(g, gs * k)                          # (g, gs*k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)         # slots grouped by expert
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    g_row = jnp.arange(g)[:, None]
+    counts = jnp.zeros((g, e), jnp.int32).at[
+        jnp.broadcast_to(g_row, flat_e.shape), flat_e
+    ].add(1)                                                 # tokens per expert
+    starts = jnp.cumsum(counts, axis=1) - counts             # exclusive prefix
+    pos_sorted = (
+        jnp.arange(gs * k, dtype=jnp.int32)[None]
+        - jnp.take_along_axis(starts, sorted_e, axis=1)
+    )                                                        # position in expert queue
+    within = pos_sorted < cap                                # drop policy == token order
+    tok_sorted = (order // k).astype(jnp.int32)
+    gate_sorted = jnp.take_along_axis(gates.reshape(g, gs * k), order, axis=1)
+
+    c_ix = jnp.where(within, pos_sorted, cap)                # overflow -> trash slot
+    ids = jnp.zeros((g, e, cap + 1), jnp.int32)
+    ids = ids.at[g_row, sorted_e, c_ix].set(tok_sorted, mode="drop")
+    valid = jnp.zeros((g, e, cap + 1), dtype)
+    valid = valid.at[g_row, sorted_e, c_ix].set(1.0, mode="drop")
+    gate_ec = jnp.zeros((g, e, cap + 1), dtype)
+    gate_ec = gate_ec.at[g_row, sorted_e, c_ix].set(gate_sorted.astype(dtype), mode="drop")
+    ids, valid, gate_ec = ids[..., :cap], valid[..., :cap], gate_ec[..., :cap]
+
+    # --- expert compute (experts sharded over `model`) ---
+    # rank-3 batched gather: keeps the group batch dim sharded over data
+    # (a (g, 1, gs, d) broadcast form makes GSPMD replicate all tokens).
+    xe = jnp.take_along_axis(xg, ids.reshape(g, e * cap)[..., None], axis=1)
+    xe = xe.reshape(g, e, cap, d) * valid[..., None]
+    xe = shard(xe, "groups", "experts", None, None)
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(dtype))
+    gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(dtype))
+    h = jax.nn.silu(gate) * up
+    h = shard(h, "groups", "experts", None, "mlp")
+    y = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(dtype))
+    y = y * (gate_ec * valid)[..., None]
+    y = shard(y, "groups", "experts", None, None)
+
+    # --- combine: k batched GATHERS in token order (scatter-free) ---
+    # GSPMD partitions batched gathers cleanly; a (g, gs, d) scatter-add made
+    # it replicate the full token tensor per chip (see EXPERIMENTS.md §Perf;
+    # a fused single (g, gs*k, d) gather measured ~4% worse — the k-slot
+    # intermediate outweighs the saved re-reads).
+    inv_order = jnp.argsort(order, axis=1)
+    pos_orig = jnp.take_along_axis(pos_sorted, inv_order, axis=1).reshape(g, gs, k)
+    within_orig = pos_orig < cap
+    slot_flat = idx * cap + jnp.where(within_orig, pos_orig, 0)      # (g, gs, k)
+    y_flat = y.reshape(g, e * cap, d)
+    out = jnp.zeros((g, gs, d), dtype)
+    for kk in range(k):
+        got = jnp.take_along_axis(y_flat, slot_flat[..., kk][..., None], axis=1)
+        out = out + jnp.where(within_orig[..., kk][..., None], got, 0.0)
+    out = shard(out, "groups", None, None)
+
+    # --- aux losses (load balance + router z-loss) ---
+    density = counts.astype(jnp.float32) / (gs * k)                  # (g, e) token frac
+    p_mean = jnp.mean(probs, axis=1)                                 # (g, e)
+    aux = e * jnp.mean(jnp.sum(density * p_mean, axis=-1)) * k
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    losses = {
+        "moe_aux": cfg.router_aux_coef * aux,
+        "moe_z": cfg.router_z_coef * z,
+    }
+    return out.reshape(b, s, d), losses

@@ -1,0 +1,298 @@
+"""State-space models: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+Both use chunked formulations so activation memory is bounded by the chunk
+length rather than the sequence:
+  * Mamba-1: outer ``lax.scan`` over chunks carrying the (B, d_inner, N)
+    state; inside a chunk, a parallel associative scan.
+  * Mamba-2: the SSD block decomposition (intra-chunk quadratic term via
+    matmuls — MXU-friendly — plus inter-chunk state recurrence), following
+    the minimal algorithm of the Mamba-2 paper.
+
+Decode is O(1)/token: the cache carries the SSM state and the depthwise-conv
+tail.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Spec, shard
+
+__all__ = [
+    "mamba1_params",
+    "apply_mamba1",
+    "mamba1_decode",
+    "init_mamba1_cache",
+    "mamba2_params",
+    "apply_mamba2",
+    "mamba2_decode",
+    "init_mamba2_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x: (B, L, C), w: (C, K), b: (C,).
+
+    If ``tail`` (B, K-1, C) is given (decode), it is prepended instead of
+    zero-padding and the updated tail is returned.
+    """
+    k = w.shape[1]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = None
+    l = x.shape[1]
+    for t in range(k):
+        term = xp[:, t : t + l, :] * w[:, t]
+        out = term if out is None else out + term
+    out = out + b
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else None
+    return out, new_tail
+
+
+def _pick_chunk(l: int, target: int) -> int:
+    """Largest divisor of ``l`` that is <= target (falls back to 1)."""
+    q = min(target, l)
+    while l % q != 0:
+        q -= 1
+    return max(q, 1)
+
+
+def _assoc(pair_l, pair_r):
+    a_l, b_l = pair_l
+    a_r, b_r = pair_r
+    return a_l * a_r, b_l * a_r + b_r
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def mamba1_params(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, di, n, r, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank, cfg.ssm_conv
+    return {
+        "in_proj": Spec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": Spec((di, k), ("ssm_inner", None), "normal"),
+        "conv_b": Spec((di,), ("ssm_inner",), "zeros"),
+        "x_proj": Spec((di, r + 2 * n), ("ssm_inner", None)),
+        "dt_w": Spec((r, di), (None, "ssm_inner")),
+        "dt_b": Spec((di,), ("ssm_inner",), "dt_bias"),
+        "a_log": Spec((di, n), ("ssm_inner", None), "mamba1_alog"),
+        "d_skip": Spec((di,), ("ssm_inner",), "ones"),
+        "out_proj": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mamba1_inputs(params, cfg: ModelConfig, x, conv_tail=None):
+    dtype = x.dtype
+    di, n, r = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dtype))
+    xin, z = xz[..., :di], xz[..., di:]
+    xin_raw = xin
+    xc, new_tail = _causal_conv(xin, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype), conv_tail)
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("blc,ce->ble", xc, params["x_proj"].astype(dtype))
+    dt_raw, b_mat, c_mat = proj[..., :r], proj[..., r : r + n], proj[..., r + n :]
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rc->blc", dt_raw, params["dt_w"].astype(dtype))
+        + params["dt_b"].astype(dtype)
+    ).astype(jnp.float32)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # (di, n)
+    return xc, z, dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), new_tail, xin_raw
+
+
+def apply_mamba1(params: Dict, cfg: ModelConfig, x: jax.Array, return_cache: bool = False):
+    """Training/prefill forward. x: (B, L, d_model)."""
+    b, l, _ = x.shape
+    dtype = x.dtype
+    xc, z, dt, a, b_mat, c_mat, _, xin_raw = _mamba1_inputs(params, cfg, x)
+    q = _pick_chunk(l, cfg.ssm_chunk)
+    nc = l // q
+    di, n = cfg.d_inner, cfg.ssm_state
+
+    xf = xc.astype(jnp.float32)
+    # per-chunk arrays, scanned over chunk index
+    def chunked(t):  # (B, L, ...) -> (nc, B, q, ...)
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c, x_c, b_c, c_c = map(chunked, (dt, xf, b_mat, c_mat))
+
+    scan_dtype = jnp.dtype(cfg.ssm_scan_dtype)
+
+    def body(h, inp):
+        dt_i, x_i, b_i, c_i = inp                        # (B, q, ...)
+        da = jnp.exp(dt_i[..., None] * a)                # (B, q, di, n)
+        bx = (dt_i * x_i)[..., None] * b_i[:, :, None, :]  # (B, q, di, n)
+        # bf16 scan elements halve the dominant HBM traffic of the chunked
+        # selective scan (carry h stays f32; exp computed in f32 first).
+        a_acc, b_acc = jax.lax.associative_scan(
+            _assoc, (da.astype(scan_dtype), bx.astype(scan_dtype)), axis=1
+        )
+        h_t = a_acc.astype(jnp.float32) * h[:, None] + b_acc.astype(jnp.float32)
+        y = jnp.einsum("bqdn,bqn->bqd", h_t, c_i)
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, (dt_c, x_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(b, l, di)
+    y = y + params["d_skip"].astype(jnp.float32) * xf
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    y = shard(y, "batch", None, "ssm_inner")
+    out = jnp.einsum("blc,cd->bld", y, params["out_proj"].astype(dtype))
+    if return_cache:
+        k = cfg.ssm_conv
+        cache = {"h": h_last, "conv": xin_raw[:, -(k - 1) :, :]}
+        return out, cache
+    return out
+
+
+def init_mamba1_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba1_decode(params: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict):
+    """One token. x: (B, 1, d_model)."""
+    dtype = x.dtype
+    xc, z, dt, a, b_mat, c_mat, new_tail, _ = _mamba1_inputs(params, cfg, x, cache["conv"])
+    da = jnp.exp(dt[:, 0, :, None] * a)                      # (B, di, n)
+    bx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_mat[:, 0, None, :]
+    h = cache["h"] * da + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])
+    y = y + params["d_skip"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = y.astype(dtype)[:, None, :] * jax.nn.silu(z)
+    out = jnp.einsum("blc,cd->bld", y, params["out_proj"].astype(dtype))
+    return out, {"h": h, "conv": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_params(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh = cfg.ssm_heads
+    return {
+        "wz": Spec((d, di), ("embed", "ssm_inner")),
+        "wx": Spec((d, di), ("embed", "ssm_inner")),
+        "wb": Spec((d, n), ("embed", None)),
+        "wc": Spec((d, n), ("embed", None)),
+        "wdt": Spec((d, nh), ("embed", "ssm_heads")),
+        "conv_w": Spec((di + 2 * n, k), (None, None), "normal"),
+        "conv_b": Spec((di + 2 * n,), (None,), "zeros"),
+        "a_log": Spec((nh,), (None,), "mamba2_alog"),
+        "dt_b": Spec((nh,), (None,), "dt_bias"),
+        "d_skip": Spec((nh,), (None,), "ones"),
+        "norm": Spec((di,), ("ssm_inner",), "ones"),
+        "out_proj": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mamba2_inputs(params, cfg: ModelConfig, x, conv_tail=None):
+    dtype = x.dtype
+    di, n = cfg.d_inner, cfg.ssm_state
+    z = jnp.einsum("bld,de->ble", x, params["wz"].astype(dtype))
+    xin = jnp.einsum("bld,de->ble", x, params["wx"].astype(dtype))
+    b_in = jnp.einsum("bld,dn->bln", x, params["wb"].astype(dtype))
+    c_in = jnp.einsum("bld,dn->bln", x, params["wc"].astype(dtype))
+    dt_in = jnp.einsum("bld,dh->blh", x, params["wdt"].astype(dtype))
+    xbc_raw = jnp.concatenate([xin, b_in, c_in], axis=-1)
+    xbc, new_tail = _causal_conv(xbc_raw, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype), conv_tail)
+    xbc = jax.nn.silu(xbc)
+    xin, b_mat, c_mat = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_b"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # (nh,)
+    return xin, z, dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), new_tail, xbc_raw
+
+
+def apply_mamba2(params: Dict, cfg: ModelConfig, x: jax.Array, return_cache: bool = False):
+    """SSD forward. x: (B, L, d_model)."""
+    b, l, _ = x.shape
+    dtype = x.dtype
+    nh, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin, z, dt, a, b_mat, c_mat, _, xbc_raw = _mamba2_inputs(params, cfg, x)
+    q = _pick_chunk(l, cfg.ssm_chunk)
+    nc = l // q
+
+    xh = xin.astype(jnp.float32).reshape(b, nc, q, nh, p)
+    xh = shard(xh, "batch", None, None, "ssm_heads", None)
+    dt_c = dt.reshape(b, nc, q, nh)
+    b_c = b_mat.reshape(b, nc, q, n)
+    c_c = c_mat.reshape(b, nc, q, n)
+
+    da = dt_c * a                                            # (b, c, q, h)
+    cum = jnp.cumsum(da, axis=2)
+    # intra-chunk: L[i, j] = exp(cum_i - cum_j) for i >= j. Mask BEFORE the
+    # exp: the i < j region has positive exponents that overflow, and
+    # where(tri, inf, 0) poisons the backward pass (inf * 0 -> NaN grads).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (b, c, qi, qj, h)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    l_mat = jnp.exp(seg)
+    xdt = xh * dt_c[..., None]                               # (b, c, q, h, p)
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, l_mat, xdt)
+
+    # chunk states + inter-chunk recurrence (associative over chunks)
+    decay_state = jnp.exp(cum[:, :, -1:, :] - cum)           # (b, c, q, h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", b_c, decay_state, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b, c, h)
+    a_el = jnp.broadcast_to(chunk_decay[..., None, None], states.shape)
+    s_acc, b_acc = jax.lax.associative_scan(_assoc, (a_el, states), axis=1)
+    # state entering chunk c = accumulated through chunk c-1
+    prev = jnp.concatenate([jnp.zeros_like(b_acc[:, :1]), b_acc[:, :-1]], axis=1)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", c_c, prev, jnp.exp(cum))
+
+    y = (y_diag + y_off).reshape(b, l, nh, p)
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * xin.astype(jnp.float32).reshape(b, l, nh, p)
+    y = y.reshape(b, l, nh * p).astype(dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (yf * params["norm"].astype(jnp.float32)).astype(dtype)
+    y = shard(y, "batch", None, "ssm_inner")
+    out = jnp.einsum("blc,cd->bld", y, params["out_proj"].astype(dtype))
+    if return_cache:
+        k = cfg.ssm_conv
+        cache = {"h": b_acc[:, -1], "conv": xbc_raw[:, -(k - 1) :, :]}
+        return out, cache
+    return out
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(params: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict):
+    """One token. x: (B, 1, d_model)."""
+    dtype = x.dtype
+    nh, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin, z, dt, a, b_mat, c_mat, new_tail, _ = _mamba2_inputs(params, cfg, x, cache["conv"])
+    xh = xin[:, 0].astype(jnp.float32).reshape(-1, nh, p)
+    da = jnp.exp(dt[:, 0] * a)                               # (B, nh)
+    bx = (dt[:, 0, :, None] * xh)[..., None] * b_mat[:, 0, None, None, :]
+    h = cache["h"] * da[..., None, None] + bx                # (B, nh, p, n)
+    y = jnp.einsum("bhpn,bn->bhp", h, c_mat[:, 0])
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(x.shape[0], 1, nh * p).astype(dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (yf * params["norm"].astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("blc,cd->bld", y, params["out_proj"].astype(dtype))
+    return out, {"h": h, "conv": new_tail}

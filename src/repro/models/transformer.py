@@ -1,0 +1,460 @@
+"""Transformer assembly: scan-over-layers decoder stacks for every family.
+
+Families:
+  dense / moe / vlm : pre-norm [attn, mlp|moe] blocks, RoPE, causal.
+  ssm (mamba1)      : pre-norm [mamba] blocks.
+  hybrid (zamba2)   : mamba2 backbone + ONE shared attention block applied
+                      every ``attn_every`` layers (nested scan: outer over
+                      groups, inner over the group's mamba layers).
+  encdec (whisper)  : bidirectional encoder over precomputed frame embeddings
+                      (stub frontend per assignment) + causal decoder with
+                      cross-attention; sinusoidal positions (no RoPE).
+
+All stacks are ``lax.scan`` over stacked params (compile time O(1) in depth)
+with optional remat.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+from repro.models.attention import (
+    apply_attention,
+    apply_cross_attention,
+    attention_params,
+    cross_attention_params,
+    cross_kv,
+    init_attn_cache,
+)
+from repro.models.layers import (
+    Spec,
+    apply_mlp,
+    apply_norm,
+    mlp_params,
+    norm_params,
+    shard,
+    stack_specs,
+)
+from repro.models.moe import apply_moe, moe_params
+
+__all__ = [
+    "model_param_specs",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "embed_tokens",
+    "unembed",
+]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array, dtype) -> jax.Array:
+    table = params["embed"]["embedding"].astype(dtype)
+    x = jnp.take(table, tokens, axis=0)
+    return shard(x, "batch", None, None)
+
+
+def unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    head = params["embed"]["lm_head"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", None, "vocab")
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """(B, S) -> (B, S, d) sinusoidal embedding (whisper-style)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer specs
+# ---------------------------------------------------------------------------
+
+def _attn_layer_specs(cfg: ModelConfig, moe: bool, cross: bool = False) -> Dict[str, Any]:
+    lp: Dict[str, Any] = {
+        "ln1": norm_params(cfg),
+        "attn": attention_params(cfg),
+        "ln2": norm_params(cfg),
+        "ffn": moe_params(cfg) if moe else mlp_params(cfg),
+    }
+    if cross:
+        lp["ln_x"] = norm_params(cfg)
+        lp["cross"] = cross_attention_params(cfg)
+    return lp
+
+
+def _layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family in ("dense", "vlm"):
+        return _attn_layer_specs(cfg, moe=False)
+    if cfg.family == "moe":
+        return _attn_layer_specs(cfg, moe=True)
+    if cfg.family == "ssm":
+        return {"ln": norm_params(cfg), "mamba": ssm.mamba1_params(cfg)}
+    if cfg.family == "hybrid":
+        return {"ln": norm_params(cfg), "mamba": ssm.mamba2_params(cfg)}
+    if cfg.family == "encdec":
+        return _attn_layer_specs(cfg, moe=False, cross=True)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def model_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": {
+            "embedding": Spec((cfg.vocab_size, cfg.d_model), ("table_vocab", "embed_td"), "normal"),
+            "lm_head": Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+        },
+        "layers": stack_specs(_layer_specs(cfg), cfg.num_layers),
+        "final_norm": norm_params(cfg),
+    }
+    if cfg.family == "hybrid":
+        specs["shared"] = _attn_layer_specs(cfg, moe=False)
+    if cfg.family == "encdec":
+        specs["encoder"] = {
+            "layers": stack_specs(_attn_layer_specs(cfg, moe=False), cfg.encoder_layers),
+            "final_norm": norm_params(cfg),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Block applications
+# ---------------------------------------------------------------------------
+
+def _zero_aux(cfg: ModelConfig) -> Dict[str, jax.Array]:
+    if cfg.family == "moe":
+        return {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0)}
+    return {}
+
+
+def _apply_attn_block(
+    lp, cfg: ModelConfig, x, positions, *, causal=True, cache=None, index=None, enc_kv=None
+):
+    h, new_cache = apply_attention(
+        lp["attn"], cfg, apply_norm(lp["ln1"], cfg, x), positions,
+        causal=causal, cache=cache, cache_index=index,
+    )
+    x = x + h
+    if enc_kv is not None:
+        h = apply_cross_attention(lp["cross"], cfg, apply_norm(lp["ln_x"], cfg, x), *enc_kv)
+        x = x + h
+    y = apply_norm(lp["ln2"], cfg, x)
+    if cfg.family == "moe":
+        h, aux = apply_moe(lp["ffn"], cfg, y)
+    else:
+        h, aux = apply_mlp(lp["ffn"], cfg, y), {}
+    x = x + h
+    x = shard(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+def _apply_mamba_block(lp, cfg: ModelConfig, x, *, cache=None, return_cache=False):
+    y = apply_norm(lp["ln"], cfg, x)
+    fn = ssm.apply_mamba1 if cfg.family == "ssm" else ssm.apply_mamba2
+    dec = ssm.mamba1_decode if cfg.family == "ssm" else ssm.mamba2_decode
+    if cache is not None:
+        h, new_cache = dec(lp["mamba"], cfg, y, cache)
+        return x + h, new_cache
+    if return_cache:
+        h, new_cache = fn(lp["mamba"], cfg, y, return_cache=True)
+        return x + h, new_cache
+    return x + fn(lp["mamba"], cfg, y), None
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat_policy == "dots"
+        else jax.checkpoint_policies.nothing_saveable
+    )
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / no-cache) per family
+# ---------------------------------------------------------------------------
+
+def _scan_decoder(params, cfg: ModelConfig, x, positions, enc_out=None):
+    """Scan the main layer stack; returns (x, aux_sums)."""
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+
+        def body(h, lp):
+            enc_kv = None
+            if cfg.family == "encdec":
+                enc_kv = cross_kv(lp["cross"], cfg, enc_out)
+            h, _, aux = _apply_attn_block(lp, cfg, h, positions, causal=True, enc_kv=enc_kv)
+            return h, aux
+
+        x, auxs = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        aux = jax.tree.map(jnp.sum, auxs)
+        return x, aux
+
+    if cfg.family == "ssm":
+
+        def body(h, lp):
+            h, _ = _apply_mamba_block(lp, cfg, h)
+            return h, {}
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        return x, {}
+
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        lp_groups = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]), params["layers"]
+        )
+        shared = params["shared"]
+
+        def inner(h, lp):
+            h, _ = _apply_mamba_block(lp, cfg, h)
+            return h, None
+
+        def outer(h, lp_g):
+            h, _ = jax.lax.scan(inner, h, lp_g)
+            h, _, _ = _apply_attn_block(shared, cfg, h, positions, causal=True)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(outer, cfg), x, lp_groups)
+        return x, {}
+
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _prepare_inputs(params, cfg: ModelConfig, batch: Dict, dtype):
+    """tokens/frontend-embeds -> (x, positions)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    if cfg.family == "vlm" and cfg.frontend == "vision_stub":
+        patches = batch["patch_embeds"].astype(dtype)      # (B, P, d)
+        tok_emb = embed_tokens(params, cfg, tokens, dtype)  # (B, S_text, d)
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+    else:
+        x = embed_tokens(params, cfg, tokens, dtype)
+    s = x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.family == "encdec":
+        x = x + _sinusoid(positions, cfg.d_model).astype(dtype)
+    return x, positions
+
+
+def _encode(params, cfg: ModelConfig, enc_embeds, dtype):
+    b, t, _ = enc_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    x = enc_embeds.astype(dtype) + _sinusoid(pos, cfg.d_model).astype(dtype)
+    x = shard(x, "batch", None, None)
+
+    def body(h, lp):
+        h, _, _ = _apply_attn_block(lp, cfg, h, pos, causal=False)
+        return h, None
+
+    enc = params["encoder"]
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, enc["layers"])
+    return apply_norm(enc["final_norm"], cfg, x)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """Full (train/prefill-style) forward. Returns (logits, aux_losses)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["enc_embeds"], dtype)
+    x, positions = _prepare_inputs(params, cfg, batch, dtype)
+    x, aux = _scan_decoder(params, cfg, x, positions, enc_out)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return unembed(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _stacked_zeros(n: int, template: Dict) -> Dict:
+    return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), template)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"layers": _stacked_zeros(cfg.num_layers, init_attn_cache(cfg, batch, max_len, dtype))}
+    if cfg.family == "ssm":
+        return {"layers": _stacked_zeros(cfg.num_layers, ssm.init_mamba1_cache(cfg, batch, dtype))}
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        return {
+            "layers": _stacked_zeros(cfg.num_layers, ssm.init_mamba2_cache(cfg, batch, dtype)),
+            "shared": _stacked_zeros(groups, init_attn_cache(cfg, batch, max_len, dtype)),
+        }
+    if cfg.family == "encdec":
+        t = cfg.encoder_len
+        hd = cfg.head_dim
+        return {
+            "layers": _stacked_zeros(cfg.num_layers, init_attn_cache(cfg, batch, max_len, dtype)),
+            "cross_k": jnp.zeros((cfg.num_layers, batch, t, cfg.num_heads, hd), dtype),
+            "cross_v": jnp.zeros((cfg.num_layers, batch, t, cfg.num_heads, hd), dtype),
+        }
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Process a prompt, filling the cache from position 0. Returns
+    (last-position logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["enc_embeds"], dtype)
+    x, positions = _prepare_inputs(params, cfg, batch, dtype)
+    # Engine path: per-token cache destinations (pad tokens -> trash slot).
+    index = batch.get("cache_positions", jnp.int32(0))
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+
+        def body(h, inp):
+            lp, layer_cache = inp[0], inp[1]
+            enc_kv = None
+            if cfg.family == "encdec":
+                ck, cv = cross_kv(lp["cross"], cfg, enc_out)
+                enc_kv = (ck, cv)
+            h, new_cache, _ = _apply_attn_block(
+                lp, cfg, h, positions, causal=True, cache=layer_cache, index=index, enc_kv=enc_kv
+            )
+            ys = (new_cache, enc_kv) if cfg.family == "encdec" else new_cache
+            return h, ys
+
+        x, ys = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        if cfg.family == "encdec":
+            new_layers, enc_kvs = ys
+            new_cache = dict(cache, layers=new_layers, cross_k=enc_kvs[0], cross_v=enc_kvs[1])
+        else:
+            new_cache = dict(cache, layers=ys)
+
+    elif cfg.family == "ssm":
+
+        def body(h, lp):
+            h, c = _apply_mamba_block(lp, cfg, h, return_cache=True)
+            return h, c
+
+        x, new_layers = jax.lax.scan(body, x, params["layers"])
+        new_cache = dict(cache, layers=new_layers)
+
+    elif cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        lp_groups = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]), params["layers"]
+        )
+        shared = params["shared"]
+
+        def inner(h, lp):
+            h, c = _apply_mamba_block(lp, cfg, h, return_cache=True)
+            return h, c
+
+        def outer(h, inp):
+            lp_g, sc = inp
+            h, mamba_caches = jax.lax.scan(inner, h, lp_g)
+            h, new_sc, _ = _apply_attn_block(shared, cfg, h, positions, causal=True, cache=sc, index=index)
+            return h, (mamba_caches, new_sc)
+
+        x, (mamba_caches, shared_caches) = jax.lax.scan(outer, x, (lp_groups, cache["shared"]))
+        new_layers = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), mamba_caches
+        )
+        new_cache = dict(cache, layers=new_layers, shared=shared_caches)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], cfg, x)
+    logits = unembed(params, cfg, x[:, -1:, :])
+    return logits, new_cache
+
+
+def decode_step(
+    params, cfg: ModelConfig, cache: Dict, tokens: jax.Array, index: jax.Array
+) -> Tuple[jax.Array, Dict]:
+    """One token for every sequence. tokens: (B, 1); index: scalar position."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens, dtype)
+    index = jnp.asarray(index)
+    if index.ndim == 0:
+        positions = jnp.full((b, 1), index, jnp.int32)
+    else:                      # per-slot positions (continuous batching)
+        positions = index.astype(jnp.int32)[:, None]
+    if cfg.family == "encdec":
+        x = x + _sinusoid(positions, cfg.d_model).astype(dtype)
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+
+        def body(h, inp):
+            if cfg.family == "encdec":
+                lp, layer_cache, ck, cv = inp
+                enc_kv = (ck, cv)
+            else:
+                lp, layer_cache = inp
+                enc_kv = None
+            h, new_cache, _ = _apply_attn_block(
+                lp, cfg, h, positions, causal=True, cache=layer_cache, index=index, enc_kv=enc_kv
+            )
+            return h, new_cache
+
+        xs = (
+            (params["layers"], cache["layers"], cache["cross_k"], cache["cross_v"])
+            if cfg.family == "encdec"
+            else (params["layers"], cache["layers"])
+        )
+        x, new_layers = jax.lax.scan(body, x, xs)
+        new_cache = dict(cache, layers=new_layers)
+
+    elif cfg.family == "ssm":
+
+        def body(h, inp):
+            lp, layer_cache = inp
+            h, c = _apply_mamba_block(lp, cfg, h, cache=layer_cache)
+            return h, c
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = dict(cache, layers=new_layers)
+
+    elif cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        lp_groups = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]), params["layers"]
+        )
+        cache_groups = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]), cache["layers"]
+        )
+        shared = params["shared"]
+
+        def inner(h, inp):
+            lp, layer_cache = inp
+            h, c = _apply_mamba_block(lp, cfg, h, cache=layer_cache)
+            return h, c
+
+        def outer(h, inp):
+            lp_g, cg, sc = inp
+            h, new_cg = jax.lax.scan(inner, h, (lp_g, cg))
+            h, new_sc, _ = _apply_attn_block(shared, cfg, h, positions, causal=True, cache=sc, index=index)
+            return h, (new_cg, new_sc)
+
+        x, (new_groups, new_shared) = jax.lax.scan(outer, x, (lp_groups, cache_groups, cache["shared"]))
+        new_layers = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), new_groups
+        )
+        new_cache = dict(cache, layers=new_layers, shared=new_shared)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], cfg, x)
+    return unembed(params, cfg, x), new_cache

@@ -1,0 +1,4 @@
+from repro.optim import adamw  # noqa: F401
+from repro.optim.adamw import AdamWState, global_norm, opt_state_axes  # noqa: F401
+from repro.optim.compress import compress_tree_psum, compressed_psum, init_error_state  # noqa: F401
+from repro.optim.schedule import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,116 @@
+"""AdamW with global-norm clipping and ZeRO-1 optimizer-state sharding.
+
+Functional API (optax-style but self-contained):
+    state = init(params)
+    new_params, new_state, stats = update(grads, state, params, lr, ...)
+
+ZeRO-1: ``opt_state_axes`` augments each parameter's logical axes so the m/v
+moments shard their largest unsharded dim over ``data``. Inside a single jit
+train step GSPMD then materializes the classic ZeRO-1 schedule: grads are
+reduce-scattered to data shards, moment updates run sharded, and updated
+params are all-gathered.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "init", "update", "opt_state_axes", "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def _upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [_upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(count, new_m, new_v), {"grad_norm": gnorm}
+
+
+def opt_state_axes(param_axes: Any, param_shapes: Any, mesh) -> AdamWState:
+    """Logical axes for AdamWState: params' axes + ZeRO-1 `data` sharding on
+    the largest dim that is still unsharded and divisible by |data|."""
+    import numpy as np
+
+    data_size = 1
+    for name in ("data",):
+        if name in mesh.axis_names:
+            data_size *= mesh.shape[name]
+
+    from repro.sharding.rules import get_rules
+
+    train_rules = get_rules("train")
+
+    def _unmapped(name) -> bool:
+        if name is None:
+            return True
+        opts = train_rules.get(name, ())
+        return not any(opts)
+
+    def zero1(axes, shape):
+        axes = list(axes)
+        if data_size > 1:
+            order = sorted(range(len(shape.shape)), key=lambda i: -shape.shape[i])
+            for i in order:
+                if _unmapped(axes[i]) and shape.shape[i] % data_size == 0:
+                    axes[i] = "zero1"
+                    break
+        return tuple(axes)
+
+    is_axes = lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+    moment_axes = jax.tree.map(zero1, param_axes, param_shapes, is_leaf=is_axes)
+    return AdamWState(count=(), mu=moment_axes, nu=moment_axes)

@@ -1,0 +1,62 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantized psum with
+error feedback (the classic 1-bit-Adam/QSGD-style distributed-optimization
+trick, adapted to jax collectives).
+
+Used inside ``shard_map`` over the data-parallel axes; the main GSPMD path
+remains uncompressed (XLA reduces in the gradient dtype).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum", "compress_tree_psum", "init_error_state"]
+
+
+def compressed_psum(x: jax.Array, axis_name, *, bits: int = 8) -> jax.Array:
+    """All-reduce ``x`` over ``axis_name`` in ``bits``-bit fixed point.
+
+    Scale = global max|x| (one cheap f32 all-reduce), then the payload moves
+    as int8/int16 (int32 accumulate — overflow-free for <= 2^(31-bits) ranks).
+    """
+    levels = float(2 ** (bits - 1) - 1)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)).astype(jnp.float32), axis_name)
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.round(x.astype(jnp.float32) / scale * levels)
+    itype = jnp.int8 if bits <= 8 else jnp.int16
+    q = jnp.clip(q, -levels, levels).astype(itype)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * (scale / levels)
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_tree_psum(
+    grads: Any, error: Any, axis_name, *, bits: int = 8
+) -> Tuple[Any, Any]:
+    """Error-feedback compressed all-reduce over a gradient tree.
+
+    Returns (reduced_grads, new_error): the quantization residual is carried
+    and re-injected next step, so the compression bias telescopes away.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        reduced = compressed_psum(corrected, axis_name, bits=bits)
+        n = jax.lax.psum(1, axis_name)
+        # local residual: what this rank failed to communicate
+        levels = float(2 ** (bits - 1) - 1)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(corrected)).astype(jnp.float32), axis_name)
+        scale = jnp.maximum(scale, 1e-30)
+        sent = jnp.round(corrected / scale * levels)
+        sent = jnp.clip(sent, -levels, levels) * (scale / levels)
+        new_e = corrected - sent
+        return reduced / n, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return treedef.unflatten([o[0] for o in out]), treedef.unflatten([o[1] for o in out])

@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+    t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = final_frac * peak_lr + (1.0 - final_frac) * peak_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)

@@ -1,0 +1,2 @@
+from repro.roofline.constants import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: F401
+from repro.roofline.hlo import collective_bytes, module_cost  # noqa: F401

@@ -1,0 +1,201 @@
+"""Roofline analysis over the dry-run artifacts (assignment §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw              [s]
+    collective term = collective_bytes_per_device / link_bw      [s]
+(HLO flops/bytes are trip-count-aware, parsed from the compiled module —
+see ``roofline.hlo``; collective bytes use the bf16-wire-corrected total.)
+
+Also reported:
+    MODEL_FLOPS  = 6*N*D (train) / 2*N*D (serve), N_active for MoE;
+    useful ratio = MODEL_FLOPS / total HLO FLOPs  (remat/dispatch waste);
+    mfu_proxy    = time to deliver MODEL_FLOPS at peak / dominant term
+                   (the "roofline fraction" hillclimbed in §Perf).
+
+Usage: PYTHONPATH=src python -m repro.roofline.analysis \
+           [--dryrun experiments/dryrun] [--mesh single_pod] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.roofline.constants import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+__all__ = ["model_flops", "analyze_record", "build_table", "main"]
+
+
+def _param_counts(arch: str):
+    from repro.configs import get_config
+    from repro.models import Model
+
+    cfg = get_config(arch)
+    if cfg.family == "image":
+        return cfg, 0, 0
+    model = Model(cfg)
+    total = model.param_count()
+    active = total
+    if cfg.family == "moe":
+        import numpy as np
+
+        e, k = cfg.num_experts, cfg.num_experts_per_tok
+        expert_params = cfg.num_layers * 3 * cfg.d_model * cfg.d_ff * e
+        active = total - int(expert_params * (1 - k / e))
+    return cfg, total, active
+
+
+def model_flops(arch: str, shape_name: str, kind: str) -> Dict[str, float]:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode, per step)."""
+    from repro.configs.base import SHAPES
+    from repro.launch.specs import SOBEL_SHAPES
+
+    cfg, total, active = _param_counts(arch)
+    if cfg.family == "image":
+        s = SOBEL_SHAPES[shape_name]
+        px = s["batch"] * s["h"] * s["w"]
+        # RG-v2 ladder: ~82 MAC/px = 164 flops/px (4-dir 5x5, DESIGN.md §1)
+        return {"model_flops": 164.0 * px, "n_params": 0, "n_active": 0}
+    sh = SHAPES[shape_name]
+    if kind == "train":
+        d = sh.global_batch * sh.seq_len
+        f = 6.0 * active * d
+    elif kind == "prefill":
+        d = sh.global_batch * sh.seq_len
+        f = 2.0 * active * d
+    else:  # decode: one token per sequence
+        f = 2.0 * active * sh.global_batch
+    return {"model_flops": f, "n_params": total, "n_active": active}
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "multi_pod" else 256
+    pc = rec.get("parsed_cost", {})
+    coll = rec.get("collective_bytes", {})
+    flops_dev = float(pc.get("flops", 0.0))
+    bytes_dev = float(pc.get("bytes_fused", pc.get("bytes", 0.0)))
+    bytes_upper = float(pc.get("bytes", 0.0))
+    coll_dev = float(coll.get("total_bf16_wire", coll.get("total", 0.0)))
+
+    mf = model_flops(rec["arch"], rec["shape"], rec["kind"])
+    # image cells are elementwise (no HLO dots): analytic flops floor
+    flops_dev = max(flops_dev, mf["model_flops"] / chips)
+    compute_t = flops_dev / PEAK_FLOPS_BF16
+    memory_t = bytes_dev / HBM_BW
+    coll_t = coll_dev / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+
+    useful_ratio = mf["model_flops"] / (flops_dev * chips) if flops_dev else 0.0
+    ideal_t = mf["model_flops"] / (chips * PEAK_FLOPS_BF16)
+    bound = max(terms.values())
+    mfu_proxy = ideal_t / bound if bound > 0 else 0.0
+
+    mem = rec.get("memory_analysis", {})
+    hbm_gb = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0)
+    ) / 2**30  # outputs alias donated args
+    # XLA:CPU legalizes bf16 buffers to f32; the dominant temp buffers of
+    # bf16-dtype programs are exactly such doubles (verified per-buffer for
+    # whisper decode, EXPERIMENTS.md §Dry-run). TPU estimate halves temps.
+    hbm_gb_tpu = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0) / 2
+    ) / 2**30
+
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "chips": chips,
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops": mf["model_flops"],
+        "hlo_flops_total": flops_dev * chips,
+        "useful_ratio": useful_ratio,
+        "mfu_proxy": mfu_proxy,
+        "memory_upper_s": bytes_upper / HBM_BW,
+        "hbm_gb_per_chip": hbm_gb,
+        "hbm_gb_tpu_est": hbm_gb_tpu,
+        "fits_hbm": hbm_gb_tpu <= 16.0,
+    }
+
+
+_MOVE_HINTS = {
+    "compute": "cut redundant HLO FLOPs (remat policy / fused attention / "
+               "drop dispatch overhead) or shift work onto idle axes",
+    "memory": "reduce materialized intermediates (fused scan kernel, bf16 "
+              "scan states, chunked loss) — one-touch HBM per tensor",
+    "collective": "reshard to cut TP traffic (less `model` for small layers, "
+                  "batch-parallel layout) or overlap collectives with compute",
+}
+
+
+def build_table(dryrun_dir: str, mesh: str = "single_pod") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        rec = json.load(open(f))
+        row = analyze_record(rec)
+        if row is None:
+            rows.append(
+                {
+                    "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                    "status": rec["status"], "skip_reason": rec.get("skip_reason", ""),
+                }
+            )
+            continue
+        row["status"] = "ok"
+        row["hint"] = _MOVE_HINTS[row["dominant"]]
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful | mfu_proxy | HBM GB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — | — | — |"
+            )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_proxy']:.3f} "
+            f"| {r['hbm_gb_tpu_est']:.1f} ({r['hbm_gb_per_chip']:.1f}) "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--json", default="experiments/roofline.json")
+    ap.add_argument("--md", default="experiments/roofline.md")
+    args = ap.parse_args()
+    rows = build_table(args.dryrun, args.mesh)
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+    md = to_markdown(rows)
+    with open(args.md, "w") as f:
+        f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Target-hardware constants (TPU v5e-like, per assignment)."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+CHIPS_PER_POD = 256
+HBM_PER_CHIP = 16 * 1024**3     # 16 GiB

@@ -1,0 +1,4 @@
+from repro.runtime.elastic import make_mesh, plan_mesh, reshard  # noqa: F401
+from repro.runtime.fault import FaultPolicy, FaultTolerantRunner, StepFailure  # noqa: F401
+from repro.runtime.monitor import StepMonitor  # noqa: F401
+from repro.runtime.stragglers import StragglerPolicy  # noqa: F401

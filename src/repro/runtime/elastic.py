@@ -1,0 +1,48 @@
+"""Elastic scaling: rebuild the mesh when the device population changes and
+re-shard live training state onto it.
+
+``plan_mesh`` picks the largest (data, model) grid for the surviving devices
+(keeping the model axis if possible — TP degree is a property of the
+checkpointed layout, DP shrinks first). ``reshard`` moves a state pytree onto
+the new mesh via its logical axes, so a job that loses a host continues with
+a smaller data axis instead of dying.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding.partition import shardings_for_tree
+
+__all__ = ["plan_mesh", "make_mesh", "reshard"]
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 1, pods: int = 1) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest mesh shape for ``n_devices``: (pod, data, model) or (data, model)."""
+    model = model_parallel
+    while model > 1 and (n_devices % model != 0 or n_devices < model):
+        model //= 2
+    per_pod = n_devices // pods if pods > 1 and n_devices % pods == 0 else n_devices
+    if pods > 1 and n_devices % pods == 0 and per_pod % model == 0:
+        return (pods, per_pod // model, model), ("pod", "data", "model")
+    data = n_devices // model
+    return (data, model), ("data", "model")
+
+
+def make_mesh(
+    devices: Optional[Sequence] = None, *, model_parallel: int = 1, pods: int = 1
+) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    shape, axes = plan_mesh(len(devices), model_parallel=model_parallel, pods=pods)
+    n = int(np.prod(shape))
+    grid = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(grid, axes)
+
+
+def reshard(state: Any, axes_tree: Any, new_mesh: Mesh, shape_tree: Any = None) -> Any:
+    """Move ``state`` onto ``new_mesh`` according to its logical axes."""
+    shardings = shardings_for_tree(axes_tree, new_mesh, shape_tree)
+    return jax.tree.map(jax.device_put, state, shardings)

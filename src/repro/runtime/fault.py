@@ -1,0 +1,73 @@
+"""Fault tolerance: retrying step runner with checkpoint-restart semantics.
+
+At 1000+ nodes, per-step failures (preemption, ICI flap, host OOM) are the
+common case, not the exception. The runner wraps the train loop:
+
+  * transient step failure -> bounded retries;
+  * persistent failure      -> restore the last checkpoint (params, optimizer,
+    data-iterator state) and continue from there;
+  * failure budget exhausted -> raise (orchestrator reschedules the job).
+
+The same policy object is exercised by the tests via injected failures.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+__all__ = ["FaultPolicy", "FaultTolerantRunner", "StepFailure"]
+
+log = logging.getLogger("repro.fault")
+
+
+class StepFailure(RuntimeError):
+    """A (possibly injected) step-level failure."""
+
+
+@dataclass
+class FaultPolicy:
+    max_retries_per_step: int = 2
+    max_total_failures: int = 16
+    backoff_s: float = 0.0
+
+
+class FaultTolerantRunner:
+    def __init__(
+        self,
+        policy: FaultPolicy,
+        *,
+        restore_fn: Optional[Callable[[], Tuple[Any, int]]] = None,
+    ):
+        self.policy = policy
+        self.restore_fn = restore_fn
+        self.total_failures = 0
+        self.restarts = 0
+
+    def run_step(self, step_fn: Callable[[Any, int], Any], state: Any, step: int):
+        """Returns (new_state, step_after, result). On persistent failure,
+        restores from checkpoint (state AND step may move backwards)."""
+        retries = 0
+        while True:
+            try:
+                result = step_fn(state, step)
+                return state, step + 1, result
+            except StepFailure as err:  # noqa: PERF203
+                self.total_failures += 1
+                retries += 1
+                if self.total_failures > self.policy.max_total_failures:
+                    raise RuntimeError(
+                        f"failure budget exhausted ({self.total_failures})"
+                    ) from err
+                if retries <= self.policy.max_retries_per_step:
+                    log.warning("step %d failed (%s); retry %d", step, err, retries)
+                    if self.policy.backoff_s:
+                        time.sleep(self.policy.backoff_s)
+                    continue
+                if self.restore_fn is None:
+                    raise
+                log.warning("step %d failing persistently; restoring checkpoint", step)
+                state, step = self.restore_fn()
+                self.restarts += 1
+                retries = 0

@@ -1,0 +1,159 @@
+"""Batched serving engine: continuous batching over a slotted KV cache.
+
+Design (vLLM-lite, TPU-friendly static shapes):
+  * ``max_batch`` slots share one batched cache of ``max_len + 1`` positions —
+    the extra position is a *trash slot*: padded prompt tokens write their
+    k/v there, so bucket-padded prefill never pollutes attention (the causal
+    position mask can then never reach them).
+  * prompts are right-padded to a bucket length and prefilled in one shot
+    with per-token cache destinations (``cache_positions``);
+  * decode runs one fused step per iteration for all active slots with
+    per-slot positions; finished slots are refilled from the queue without
+    stalling the others (continuous batching).
+
+SSM/hybrid families keep running state rather than positional caches, so
+padded prefill is unsound there; the engine asserts prompts arrive at bucket
+length for those families.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+__all__ = ["Request", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds largest bucket {buckets[-1]}")
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        max_len: int = 256,
+        prompt_buckets=(16, 32, 64, 128),
+        cache_dtype=jnp.float32,
+    ):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.buckets = tuple(b for b in prompt_buckets if b <= max_len)
+        self.trash = max_len                      # trash slot index
+        self.cache = self.model.init_cache(max_batch, max_len + 1, dtype=cache_dtype)
+        self.positions = np.zeros(max_batch, np.int64)   # next write position
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._needs_prefill_pad = cfg.family in ("dense", "moe", "vlm", "encdec")
+
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill)
+
+    # -- public API --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_iters: int = 10_000) -> List[Request]:
+        """Drive until queue + slots drain; returns finished requests."""
+        for _ in range(max_iters):
+            self._admit()
+            if not any(self.slots):
+                if not self.queue:
+                    break
+                continue
+            self._decode_once()
+        return self.finished
+
+    # -- internals -----------------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self._prefill_into(slot, req)
+            self.slots[slot] = req
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        prompt = list(req.prompt)
+        assert len(prompt) >= 1
+        ctx, last = prompt[:-1], prompt[-1]
+        if ctx:
+            n = len(ctx)
+            if self._needs_prefill_pad:
+                b = _bucket(n, self.buckets)
+                toks = np.zeros((1, b), np.int32)
+                toks[0, :n] = ctx
+                pos = np.arange(b, dtype=np.int32)
+                cache_pos = np.where(pos < n, pos, self.trash)[None]
+                batch = {
+                    "tokens": jnp.asarray(toks),
+                    "positions": jnp.asarray(pos[None]),
+                    "cache_positions": jnp.asarray(cache_pos),
+                }
+            else:
+                if len(ctx) not in self.buckets:
+                    raise ValueError(
+                        f"{self.cfg.family} engine needs bucket-length prompts; "
+                        f"got {len(ctx)}, buckets={self.buckets}"
+                    )
+                batch = {"tokens": jnp.asarray(np.asarray(ctx, np.int32)[None])}
+            small = jax.tree.map(
+                lambda big: jnp.zeros((big.shape[0], 1) + big.shape[2:], big.dtype),
+                self.cache,
+            )
+            _, small = self._prefill(self.params, batch, small)
+            self.cache = jax.tree.map(
+                lambda big, s: big.at[:, slot].set(s[:, 0]), self.cache, small
+            )
+        self.positions[slot] = len(ctx)
+        self._pending_token = getattr(self, "_pending_token", {})
+        self._pending_token[slot] = last
+
+    def _decode_once(self) -> None:
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            pend = self._pending_token.pop(i, None)
+            if pend is not None:
+                tokens[i, 0] = pend
+            else:
+                tokens[i, 0] = self.slots[i].output[-1]
+        idx = jnp.asarray(self.positions.astype(np.int32))
+        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tokens), idx)
+        next_tok = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in active:
+            req = self.slots[i]
+            tok = int(next_tok[i])
+            req.output.append(tok)
+            self.positions[i] += 1
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.output) >= req.max_new_tokens or hit_eos or self.positions[i] >= self.max_len - 1:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None

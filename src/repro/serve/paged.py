@@ -1,0 +1,132 @@
+"""Paged KV-cache memory manager (vLLM-style block allocator, TPU-friendly).
+
+At production batch sizes the slotted cache of ``serve.engine`` wastes
+``max_len`` slots per sequence. This manager stores k/v in fixed-size blocks
+with a free list, so HBM holds only what live sequences actually use:
+
+    storage:  k/v  (layers, num_blocks, block_size, kv_heads, head_dim)
+    mapping:  per-sequence block table (python list; int32 array on demand)
+
+``append`` writes one token per step through a (layer, block, offset) scatter;
+``gather`` materializes a sequence's contiguous (layers, len, kv, hd) view for
+attention (a block-table-aware attention kernel would skip this copy — noted
+as future work; the manager's accounting is the substance here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PagedKVCache"]
+
+
+@dataclasses.dataclass
+class _Seq:
+    blocks: List[int]
+    length: int = 0
+
+
+class PagedKVCache:
+    def __init__(
+        self,
+        *,
+        layers: int,
+        kv_heads: int,
+        head_dim: int,
+        num_blocks: int = 64,
+        block_size: int = 16,
+        dtype=jnp.float32,
+    ):
+        self.layers, self.kv_heads, self.head_dim = layers, kv_heads, head_dim
+        self.num_blocks, self.block_size = num_blocks, block_size
+        shape = (layers, num_blocks, block_size, kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self._free: List[int] = list(range(num_blocks))
+        self._seqs: Dict[int, _Seq] = {}
+
+    # -- accounting -----------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def utilization(self, seq_id: int) -> float:
+        s = self._seqs[seq_id]
+        cap = len(s.blocks) * self.block_size
+        return s.length / cap if cap else 1.0
+
+    # -- lifecycle --------------------------------------------------------------
+    def allocate(self, seq_id: int) -> None:
+        if seq_id in self._seqs:
+            raise KeyError(f"seq {seq_id} already allocated")
+        self._seqs[seq_id] = _Seq(blocks=[])
+
+    def free(self, seq_id: int) -> None:
+        s = self._seqs.pop(seq_id)
+        self._free.extend(s.blocks)
+
+    def _grow_if_needed(self, s: _Seq, new_len: int) -> None:
+        while len(s.blocks) * self.block_size < new_len:
+            if not self._free:
+                raise MemoryError(
+                    f"paged cache OOM: {self.num_blocks} blocks all in use"
+                )
+            s.blocks.append(self._free.pop())
+
+    # -- writes -----------------------------------------------------------------
+    def append(self, seq_id: int, k_tok: jax.Array, v_tok: jax.Array) -> None:
+        """Append one token. k_tok/v_tok: (layers, kv_heads, head_dim)."""
+        s = self._seqs[seq_id]
+        pos = s.length
+        self._grow_if_needed(s, pos + 1)
+        block = s.blocks[pos // self.block_size]
+        off = pos % self.block_size
+        self.k = self.k.at[:, block, off].set(k_tok.astype(self.k.dtype))
+        self.v = self.v.at[:, block, off].set(v_tok.astype(self.v.dtype))
+        s.length = pos + 1
+
+    def append_prompt(self, seq_id: int, k_seq: jax.Array, v_seq: jax.Array) -> None:
+        """Bulk prefill. k_seq/v_seq: (layers, T, kv_heads, head_dim)."""
+        t = k_seq.shape[1]
+        s = self._seqs[seq_id]
+        start = s.length
+        self._grow_if_needed(s, start + t)
+        done = 0                                # vectorized per-block writes
+        while done < t:
+            pos = start + done
+            block = s.blocks[pos // self.block_size]
+            off = pos % self.block_size
+            n = min(self.block_size - off, t - done)
+            self.k = self.k.at[:, block, off : off + n].set(
+                k_seq[:, done : done + n].astype(self.k.dtype)
+            )
+            self.v = self.v.at[:, block, off : off + n].set(
+                v_seq[:, done : done + n].astype(self.v.dtype)
+            )
+            done += n
+        s.length = start + t
+
+    # -- reads ------------------------------------------------------------------
+    def block_table(self, seq_id: int) -> jnp.ndarray:
+        return jnp.asarray(self._seqs[seq_id].blocks, jnp.int32)
+
+    def length(self, seq_id: int) -> int:
+        return self._seqs[seq_id].length
+
+    def gather(self, seq_id: int) -> Tuple[jax.Array, jax.Array]:
+        """Contiguous (layers, len, kv_heads, head_dim) view of a sequence."""
+        s = self._seqs[seq_id]
+        if not s.blocks:
+            empty = jnp.zeros((self.layers, 0, self.kv_heads, self.head_dim), self.k.dtype)
+            return empty, empty
+        idx = jnp.asarray(s.blocks, jnp.int32)
+        k = jnp.take(self.k, idx, axis=1)       # (L, nb, bs, kv, hd)
+        v = jnp.take(self.v, idx, axis=1)
+        flat = lambda x: x.reshape(self.layers, -1, self.kv_heads, self.head_dim)[:, : s.length]
+        return flat(k), flat(v)

@@ -1,0 +1,9 @@
+from repro.sharding.partition import replicated, shardings_for_tree, specs_for_tree  # noqa: F401
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    activation_shard,
+    current_mesh,
+    logical_to_spec,
+    mesh_context,
+    sharding_for,
+)

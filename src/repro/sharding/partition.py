@@ -1,0 +1,39 @@
+"""Apply logical-axis trees to parameter pytrees -> NamedSharding trees."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import logical_to_spec
+
+__all__ = ["specs_for_tree", "shardings_for_tree", "replicated"]
+
+
+def specs_for_tree(axes_tree: Any, mesh: Mesh, shape_tree: Any = None, rules=None) -> Any:
+    """Map a pytree of logical-axes tuples (leaves = tuples of str|None) to
+    a pytree of PartitionSpec. ``shape_tree`` (of ShapeDtypeStruct/arrays)
+    enables divisibility-aware degradation."""
+    is_axes = lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: logical_to_spec(axes, mesh, rules=rules), axes_tree, is_leaf=is_axes
+        )
+    return jax.tree.map(
+        lambda axes, s: logical_to_spec(axes, mesh, s.shape, rules=rules),
+        axes_tree,
+        shape_tree,
+        is_leaf=is_axes,
+    )
+
+
+def shardings_for_tree(axes_tree: Any, mesh: Mesh, shape_tree: Any = None, rules=None) -> Any:
+    specs = specs_for_tree(axes_tree, mesh, shape_tree, rules=rules)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style GSPMD setup).
+
+Model code annotates every parameter and key activation with *logical* axis
+names; this module maps them onto the physical mesh ``(pod, data, model)``.
+Rules degrade gracefully: a mesh axis is dropped for a given array dim if it
+does not divide the dim (e.g. glm4's 2 KV heads on a 16-way model axis), so
+one rule table serves every architecture and mesh.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "sharding_for",
+    "activation_shard",
+    "mesh_context",
+    "current_mesh",
+]
+
+# Logical axis -> mesh axes (tried in order; first that divides wins).
+# "fsdp" style weight sharding is intentionally NOT default — params are
+# TP-sharded over `model` and replicated over `data`; optimizer state is
+# ZeRO-1 sharded over `data` (see optim/).
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("batch", (("pod", "data"), ("data",))),  # composite first, fallback
+    ("seq", ()),
+    ("embed", ()),
+    ("embed_td", (("model",),)),  # d-sharded embedding table (local gather)
+    ("heads", (("model",),)),
+    ("kv_heads", (("model",),)),
+    ("head_dim", ()),
+    ("qk_rank", (("model",),)),
+    ("kv_rank", (("model",),)),
+    ("mlp", (("model",),)),
+    ("experts", (("model",),)),
+    ("expert_cap", (("pod", "data"), ("data",))),
+    ("groups", (("pod", "data"), ("data",))),
+    ("vocab", (("model",),)),
+    ("kv_len", (("model",),)),
+    ("attn_seq", (("model",),)),  # sequence-parallel attention fallback
+    ("ssm_inner", (("model",),)),
+    ("ssm_heads", (("model",),)),
+    ("ssm_state", ()),
+    ("conv_dim", ()),
+    ("zero1", (("data",),)),  # ZeRO-1 optimizer-state sharding
+    ("layers", ()),
+    ("stack", ()),
+    ("image_rows", (("model",),)),
+)
+
+_RULES = {name: opts for name, opts in DEFAULT_RULES}
+
+# Train mode: FSDP — weight d_model/vocab-table dims shard over `data`
+# (GSPMD then all-gathers params per scanned layer and reduce-scatters
+# grads, i.e. ZeRO-3), composing with TP over `model`. Pods replicate
+# (hybrid DP): the cross-pod axis carries one gradient all-reduce per step,
+# not per-layer param gathers.
+TRAIN_OVERRIDES = {
+    "embed": (("data",),),
+    "table_vocab": (("data",),),
+}
+TRAIN_RULES = dict(_RULES, **TRAIN_OVERRIDES)
+_RULES.setdefault("table_vocab", ())
+
+
+def get_rules(mode: str = "serve"):
+    return TRAIN_RULES if mode == "train" else _RULES
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    shape: Optional[Sequence[int]] = None,
+    rules=None,
+) -> P:
+    """Map a tuple of logical axis names (or None) to a PartitionSpec.
+
+    If ``shape`` is given, mesh axes that do not divide the corresponding dim
+    are dropped (graceful degradation) and a mesh axis is never used twice.
+    ``rules`` may be a dict or a mode string ("train" | "serve").
+    """
+    if isinstance(rules, str):
+        rules = get_rules(rules)
+    rules = rules or _RULES
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        options = rules.get(name)
+        if options is None:
+            raise KeyError(f"no sharding rule for logical axis {name!r}")
+        chosen = None
+        for opt in options:
+            axes = tuple(a for a in (opt if isinstance(opt, tuple) else (opt,)) if a in mesh.axis_names)
+            if not axes or any(a in used for a in axes):
+                continue
+            if shape is not None and shape[i] % _axis_size(mesh, axes) != 0:
+                continue
+            chosen = axes
+            break
+        if chosen:
+            used.update(chosen)
+            out.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    shape: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, mesh, shape))
+
+
+# ---------------------------------------------------------------------------
+# Mesh context for activation sharding constraints inside model code
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextmanager
+def mesh_context(mesh: Optional[Mesh], rules=None):
+    prev = (getattr(_ctx, "mesh", None), getattr(_ctx, "rules", None))
+    _ctx.mesh = mesh
+    _ctx.rules = rules
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def current_rules():
+    return getattr(_ctx, "rules", None)
+
+
+def activation_shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """`with_sharding_constraint` by logical axes; no-op without a mesh.
+    Honors a rules override installed by ``mesh_context`` (hillclimbing)."""
+    mesh = current_mesh()
+    if mesh is None or math.prod(mesh.shape.values()) == 1:
+        return x
+    spec = logical_to_spec(logical_axes, mesh, x.shape, rules=current_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,233 @@
+"""Training loop: pjit train step, grad accumulation, remat, ZeRO-1,
+checkpoint/restart, straggler monitoring.
+
+``Trainer`` owns the jitted step; ``fit`` drives it with the fault-tolerant
+runner so injected/real step failures trigger retry -> checkpoint-restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.loader import DataLoader, batch_shardings
+from repro.models import Model
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.fault import FaultPolicy, FaultTolerantRunner, StepFailure
+from repro.runtime.monitor import StepMonitor
+from repro.sharding.partition import shardings_for_tree, specs_for_tree
+from repro.sharding.rules import activation_shard, mesh_context
+
+log = logging.getLogger("repro.train")
+
+__all__ = ["TrainConfig", "TrainState", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    batch: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    microbatches: int = 1
+    peak_lr: float = 3e-4
+    warmup_steps: int = 20
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: adamw.AdamWState
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig, mesh: Optional[Mesh] = None):
+        self.cfg = model_cfg
+        self.tc = train_cfg
+        self.mesh = mesh
+        self.model = Model(model_cfg)
+        self.monitor = StepMonitor()
+        self._build()
+
+    # -- sharding -----------------------------------------------------------
+    def state_axes(self) -> TrainState:
+        p_axes = self.model.logical_axes()
+        p_abs = self.model.abstract_params()
+        if self.mesh is not None:
+            o_axes = adamw.opt_state_axes(p_axes, p_abs, self.mesh)
+        else:
+            o_axes = adamw.AdamWState(count=(), mu=p_axes, nu=p_axes)
+        return TrainState(step=(), params=p_axes, opt=o_axes)
+
+    def state_shardings(self):
+        if self.mesh is None:
+            return None
+        p_abs = self.model.abstract_params()
+        shapes = TrainState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            params=p_abs,
+            opt=adamw.AdamWState(
+                count=jax.ShapeDtypeStruct((), jnp.int32), mu=p_abs, nu=p_abs
+            ),
+        )
+        return shardings_for_tree(self.state_axes(), self.mesh, shapes, rules="train")
+
+    # -- jitted step ----------------------------------------------------------
+    def _build(self):
+        tc, model = self.tc, self.model
+
+        def lr_fn(step):
+            return warmup_cosine(
+                step, peak_lr=tc.peak_lr, warmup_steps=tc.warmup_steps, total_steps=tc.steps
+            )
+
+        def grads_of(params, batch):
+            return jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+
+        def step_fn(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+            if tc.microbatches > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((tc.microbatches, -1) + x.shape[1:]), batch
+                )
+
+                def body(acc, one):
+                    one = jax.tree.map(
+                        lambda x: activation_shard(x, *( ("batch",) + (None,) * (x.ndim - 1))),
+                        one,
+                    )
+                    (loss, metrics), grads = grads_of(state.params, one)
+                    acc = jax.tree.map(jnp.add, acc, grads)
+                    return acc, metrics
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+                )
+                grads, metrics = jax.lax.scan(body, zero, mb)
+                grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+                metrics = jax.tree.map(jnp.mean, metrics)
+            else:
+                (loss, metrics), grads = grads_of(state.params, batch)
+
+            lr = lr_fn(state.step)
+            new_params, new_opt, stats = adamw.update(
+                grads,
+                state.opt,
+                state.params,
+                lr,
+                weight_decay=tc.weight_decay,
+                clip_norm=tc.clip_norm,
+            )
+            metrics = dict(metrics, **stats, lr=lr)
+            return TrainState(state.step + 1, new_params, new_opt), metrics
+
+        self.step_fn = step_fn                      # unjitted (dry-run lowers it)
+        shardings = self.state_shardings()
+        with mesh_context(self.mesh):
+            self._step = jax.jit(
+                step_fn,
+                donate_argnums=(0,),
+                in_shardings=(shardings, None) if shardings is not None else None,
+                out_shardings=(shardings, None) if shardings is not None else None,
+            )
+
+    # -- state init / restore -----------------------------------------------
+    def init_state(self) -> TrainState:
+        params = self.model.init(jax.random.key(self.tc.seed))
+        state = TrainState(jnp.int32(0), params, adamw.init(params))
+        if self.mesh is not None:
+            state = jax.tree.map(jax.device_put, state, self.state_shardings())
+        return state
+
+    def restore_or_init(self, manager: Optional[CheckpointManager]) -> Tuple[TrainState, Dict]:
+        if manager is not None and manager.latest_step() is not None:
+            template = jax.eval_shape(lambda: self.init_state())
+            state, meta = manager.restore(template, shardings=self.state_shardings())
+            log.info("restored checkpoint at step %s", meta["step"])
+            return state, meta.get("meta", {})
+        return self.init_state(), {}
+
+    # -- driver ---------------------------------------------------------------
+    def fit(
+        self,
+        loader: DataLoader,
+        *,
+        steps: Optional[int] = None,
+        manager: Optional[CheckpointManager] = None,
+        fail_injector=None,
+        policy: Optional[FaultPolicy] = None,
+    ) -> Dict[str, list]:
+        steps = steps or self.tc.steps
+        policy = policy or FaultPolicy()
+        state, meta = self.restore_or_init(manager)
+        if meta.get("loader_state"):
+            loader.restore(meta["loader_state"])
+        history: Dict[str, list] = {"loss": [], "step": [], "restarts": 0}
+        step = int(jax.device_get(state.step))
+        it = iter(loader)
+        total_failures = 0
+
+        while step < steps:
+            batch = next(it)
+            retries = 0
+            restored = False
+            while True:
+                try:
+                    self.monitor.start()
+                    if fail_injector is not None:
+                        fail_injector(step)        # may raise StepFailure
+                    new_state, metrics = self._step(state, batch)
+                    jax.block_until_ready(metrics["loss"])   # honest step timing
+                    self.monitor.stop()
+                    break
+                except StepFailure as err:
+                    total_failures += 1
+                    retries += 1
+                    if total_failures > policy.max_total_failures:
+                        raise RuntimeError(
+                            f"failure budget exhausted ({total_failures})"
+                        ) from err
+                    if retries <= policy.max_retries_per_step:
+                        log.warning("step %d failed (%s); retry %d", step, err, retries)
+                        continue
+                    # persistent failure: checkpoint-restart
+                    if manager is None:
+                        raise
+                    log.warning("step %d persistently failing; restoring", step)
+                    state, m = self.restore_or_init(manager)
+                    if m.get("loader_state"):
+                        loader.restore(m["loader_state"])
+                    step = int(jax.device_get(state.step))
+                    history["restarts"] += 1
+                    restored = True
+                    break
+            if restored:
+                continue                            # refetch batch at restored step
+
+            state = new_state
+            step += 1
+            if step % self.tc.log_every == 0 or step == steps:
+                loss = float(jax.device_get(metrics["loss"]))
+                history["loss"].append(loss)
+                history["step"].append(step)
+                log.info("step %d loss %.4f", step, loss)
+            if manager is not None and (
+                step % self.tc.checkpoint_every == 0 or step == steps
+            ):
+                manager.save(step, state, meta={"loader_state": loader.state()})
+        loader.close()
+        return history

@@ -1,0 +1,14 @@
+import os
+
+# Tests exercise the real single CPU device (the dry-run process is the only
+# one that fakes 512 devices). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

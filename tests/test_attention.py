@@ -1,0 +1,107 @@
+"""Attention invariants: chunked==dense, RoPE relative property, MLA
+absorbed decode == expanded math, repeat-KV layout equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import apply_attention, attention_params, dot_attention, init_attn_cache
+from repro.models.layers import apply_rope, init_tree
+
+
+def _pos(b, s):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.sampled_from([4, 8, 16]),
+    kv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    seed=st.integers(0, 1000),
+)
+def test_chunked_equals_dense(b, s, kv, g, seed):
+    d = 8
+    key = jax.random.key(seed)
+    q = jax.random.normal(key, (b, s, kv, g, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, d), jnp.float32)
+    pos = _pos(b, s)
+    dense = dot_attention(q, k, v, pos_q=pos, pos_k=pos, causal=True, impl="dense")
+    chunk = dot_attention(q, k, v, pos_q=pos, pos_k=pos, causal=True, impl="chunked", chunk=max(2, s // 4))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk), rtol=2e-5, atol=2e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q, i), rope(k, j)> depends only on i - j."""
+    d = 16
+    q = jax.random.normal(jax.random.key(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.key(1), (1, 1, 1, d))
+    def score(i, j):
+        qi = apply_rope(q, jnp.full((1, 1), i), 10000.0)
+        kj = apply_rope(k, jnp.full((1, 1), j), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(score(5, 3) - score(9, 7)) < 1e-4
+    assert abs(score(0, 0) - score(100, 100)) < 1e-3
+    assert abs(score(5, 3) - score(5, 4)) > 1e-6  # actually varies with offset
+
+
+def test_rope_norm_preservation():
+    x = jax.random.normal(jax.random.key(0), (2, 4, 3, 16))
+    y = apply_rope(x, _pos(2, 4), 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1), np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_mla_absorbed_decode_equals_expanded():
+    """The absorbed decode path must equal explicit k/v expansion."""
+    cfg = ModelConfig(
+        name="mla", family="dense", num_layers=1, d_model=32, num_heads=4,
+        num_kv_heads=4, head_dim=12, d_ff=64, vocab_size=7, attn_type="mla",
+        q_lora_rank=16, kv_lora_rank=8, qk_rope_head_dim=4, qk_nope_head_dim=8,
+        v_head_dim=8, dtype="float32",
+    )
+    params = init_tree(attention_params(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 6, 32), jnp.float32)
+    pos = _pos(2, 6)
+    full, _ = apply_attention(params, cfg, x, pos, causal=True)
+    cache = init_attn_cache(cfg, 2, 8, dtype=jnp.float32)
+    _, cache = apply_attention(params, cfg, x[:, :5], pos[:, :5], cache=cache, cache_index=jnp.int32(0))
+    out, _ = apply_attention(params, cfg, x[:, 5:6], pos[:, 5:6], cache=cache, cache_index=jnp.int32(5))
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, 5]), rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_grouping_matches_mha_when_repeated():
+    """GQA with KV heads repeated == MHA with duplicated kv weights."""
+    cfg_gqa = ModelConfig(name="g", family="dense", num_layers=1, d_model=16,
+                          num_heads=4, num_kv_heads=2, head_dim=8, d_ff=1,
+                          vocab_size=7, use_rope=False, dtype="float32")
+    cfg_mha = cfg_gqa.replace(num_kv_heads=4)
+    pg = init_tree(attention_params(cfg_gqa), jax.random.key(0))
+    pm = dict(pg)
+    pm["wk"] = jnp.repeat(pg["wk"], 2, axis=1)
+    pm["wv"] = jnp.repeat(pg["wv"], 2, axis=1)
+    x = jax.random.normal(jax.random.key(1), (2, 5, 16), jnp.float32)
+    pos = _pos(2, 5)
+    og, _ = apply_attention(pg, cfg_gqa, x, pos)
+    om, _ = apply_attention(pm, cfg_mha, x, pos)
+    np.testing.assert_allclose(np.asarray(og), np.asarray(om), rtol=2e-5, atol=2e-5)
+
+
+def test_causality():
+    """Changing future tokens must not change past outputs."""
+    cfg = ModelConfig(name="c", family="dense", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, head_dim=8, d_ff=1,
+                      vocab_size=7, dtype="float32")
+    params = init_tree(attention_params(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 8, 16), jnp.float32)
+    pos = _pos(1, 8)
+    o1, _ = apply_attention(params, cfg, x, pos)
+    x2 = x.at[:, 6:].set(99.0)
+    o2, _ = apply_attention(params, cfg, x2, pos)
+    np.testing.assert_allclose(np.asarray(o1[:, :6]), np.asarray(o2[:, :6]), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,60 @@
+"""Synthetic data pipeline: determinism, learnability structure, shapes."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.synthetic import image_batch, lm_batch
+
+
+def test_determinism():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    a = lm_batch(cfg, 4, 16, seed=1, step=5)
+    b = lm_batch(cfg, 4, 16, seed=1, step=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_batch(cfg, 4, 16, seed=1, step=6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_next_tokens():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    b = lm_batch(cfg, 2, 16, seed=0)
+    # the stream is tokens[0..n]; labels = tokens shifted by one
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    # bigram structure: the majority of transitions follow a fixed permutation
+    toks = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    agree = 0
+    for row in toks:
+        _, counts = np.unique(row, return_counts=True)
+    # learnability: conditional entropy < uniform -> check repeated pattern
+    b2 = lm_batch(cfg, 2, 16, seed=0, noise=0.0)
+    nxt = {}
+    ok = True
+    for row_t, row_l in zip(b2["tokens"], b2["labels"]):
+        for t, l in zip(row_t, row_l):
+            if t in nxt and nxt[t] != l:
+                ok = False
+            nxt[int(t)] = int(l)
+    assert ok, "noise=0 stream must be a deterministic bigram process"
+
+
+def test_vlm_batch_structure():
+    cfg = get_config("pixtral-12b", smoke=True)
+    b = lm_batch(cfg, 2, 24)
+    p = cfg.num_patches
+    assert b["tokens"].shape == (2, 24 - p)
+    assert b["patch_embeds"].shape == (2, p, cfg.d_model)
+    assert b["labels"].shape == (2, 24)
+    assert b["loss_weights"][:, :p].sum() == 0
+
+
+def test_encdec_batch_structure():
+    cfg = get_config("whisper-large-v3", smoke=True)
+    b = lm_batch(cfg, 2, 24)
+    assert b["enc_embeds"].shape == (2, min(cfg.encoder_len, 24), cfg.d_model)
+
+
+def test_image_batch_has_edges():
+    cfg = get_config("sobel-hd", smoke=True)
+    b = image_batch(cfg, 2)
+    assert b["images"].shape == (2, cfg.image_h, cfg.image_w)
+    assert b["images"].std() > 10.0   # real structure, not flat

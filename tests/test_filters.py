@@ -1,0 +1,114 @@
+"""Filter algebra (paper Eqs. 3, 5, 10, 14, 16, 18) — exact identities."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filters as F
+from repro.core.filters import SobelParams
+
+params_st = st.builds(
+    SobelParams,
+    a=st.integers(1, 4).map(float),
+    b=st.integers(1, 8).map(float),
+    m=st.integers(1, 12).map(float),
+    n=st.integers(1, 8).map(float),
+)
+
+
+def test_default_matches_paper_eq3():
+    """a=1,b=2,m=6,n=4 reproduces the OpenCV-generated weights of Eq. 3."""
+    gx = np.array(
+        [
+            [-1, -2, 0, 2, 1],
+            [-4, -8, 0, 8, 4],
+            [-6, -12, 0, 12, 6],
+            [-4, -8, 0, 8, 4],
+            [-1, -2, 0, 2, 1],
+        ],
+        np.float32,
+    )
+    np.testing.assert_array_equal(F.kx(), gx)
+    np.testing.assert_array_equal(F.ky(), gx.T)
+    gd = np.array(
+        [
+            [-6, -4, -1, -2, 0],
+            [-4, -12, -8, 0, 2],
+            [-1, -8, 0, 8, 1],
+            [-2, 0, 8, 12, 4],
+            [0, 2, 1, 4, 6],
+        ],
+        np.float32,
+    )
+    np.testing.assert_array_equal(F.kd(), gd)
+    gdt = np.array(
+        [
+            [0, -2, -1, -4, -6],
+            [2, 0, -8, -12, -4],
+            [1, 8, 0, -8, -1],
+            [4, 12, 8, 0, -2],
+            [6, 4, 1, 2, 0],
+        ],
+        np.float32,
+    )
+    np.testing.assert_array_equal(F.kdt(), gdt)
+
+
+@settings(max_examples=25, deadline=None)
+@given(params_st)
+def test_separability(p):
+    a, col, row = F.kx_factors(p)
+    np.testing.assert_allclose(F.kx(p), a * np.outer(col, row))
+    a, col, row = F.ky_factors(p)
+    np.testing.assert_allclose(F.ky(p), a * np.outer(col, row))
+
+
+@settings(max_examples=25, deadline=None)
+@given(params_st)
+def test_diag_transform(p):
+    """K_d+- = K_d +- K_dt (Eq. 10) and recovery (Eq. 11)."""
+    kdp, kdm = F.kd_plus(p), F.kd_minus(p)
+    np.testing.assert_allclose(kdp, F.kd(p) + F.kdt(p))
+    np.testing.assert_allclose(kdm, F.kd(p) - F.kdt(p))
+    np.testing.assert_allclose((kdp + kdm) / 2, F.kd(p))
+    np.testing.assert_allclose((kdp - kdm) / 2, F.kdt(p))
+
+
+@settings(max_examples=25, deadline=None)
+@given(params_st)
+def test_kd_plus_row_symmetry(p):
+    """Rows of K_d+ are [k0, k1, 0, -k1, -k0] (Eq. 14)."""
+    kdp = F.kd_plus(p)
+    k0, k1 = F.kd_plus_rows(p)
+    np.testing.assert_allclose(kdp[0], k0)
+    np.testing.assert_allclose(kdp[1], k1)
+    np.testing.assert_allclose(kdp[2], 0.0)
+    np.testing.assert_allclose(kdp[3], -k1)
+    np.testing.assert_allclose(kdp[4], -k0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(params_st)
+def test_kd_minus_even_symmetry(p):
+    """Rows of K_d- are [r0, r1, r2, r1, r0] (Eq. 16)."""
+    kdm = F.kd_minus(p)
+    np.testing.assert_allclose(kdm[3], kdm[1])
+    np.testing.assert_allclose(kdm[4], kdm[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(params_st)
+def test_eq18_two_outer_product_split(p):
+    """K_d- = colF x rowF - colD x rowD with rowF == K_x's row (Eq. 18)."""
+    (col_f, row_f), (col_d, row_d) = F.kd_minus_factors(p)
+    recon = np.outer(col_f, row_f) - np.outer(col_d, row_d)
+    np.testing.assert_allclose(recon, F.kd_minus(p), atol=1e-4)
+    _, _, row_x = F.kx_factors(p)
+    np.testing.assert_allclose(row_f, row_x)   # the F pass is reused verbatim
+    np.testing.assert_array_equal(row_d, np.float32([0, -1, 0, 1, 0]))
+
+
+def test_3x3_banks():
+    assert F.filter_bank_3x3(2).shape == (2, 3, 3)
+    assert F.filter_bank_3x3(4).shape == (4, 3, 3)
+    with pytest.raises(ValueError):
+        F.filter_bank_3x3(3)

@@ -1,0 +1,106 @@
+"""Paged KV-cache manager: allocator invariants + read/write correctness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.paged import PagedKVCache
+
+
+def _mk(num_blocks=8, block_size=4):
+    return PagedKVCache(layers=2, kv_heads=2, head_dim=4,
+                        num_blocks=num_blocks, block_size=block_size)
+
+
+def _tok(rng):
+    return jnp.asarray(rng.normal(0, 1, (2, 2, 4)).astype(np.float32))
+
+
+def test_append_gather_roundtrip(rng):
+    c = _mk()
+    c.allocate(0)
+    toks = [(_tok(rng), _tok(rng)) for _ in range(10)]
+    for k, v in toks:
+        c.append(0, k, v)
+    k_seq, v_seq = c.gather(0)
+    assert k_seq.shape == (2, 10, 2, 4)
+    for t, (k, v) in enumerate(toks):
+        np.testing.assert_array_equal(np.asarray(k_seq[:, t]), np.asarray(k))
+        np.testing.assert_array_equal(np.asarray(v_seq[:, t]), np.asarray(v))
+
+
+def test_prompt_bulk_equals_tokenwise(rng):
+    a, b = _mk(), _mk()
+    a.allocate(0); b.allocate(0)
+    ks = jnp.asarray(rng.normal(0, 1, (2, 9, 2, 4)).astype(np.float32))
+    vs = jnp.asarray(rng.normal(0, 1, (2, 9, 2, 4)).astype(np.float32))
+    a.append_prompt(0, ks, vs)
+    for t in range(9):
+        b.append(0, ks[:, t], vs[:, t])
+    np.testing.assert_array_equal(np.asarray(a.gather(0)[0]), np.asarray(b.gather(0)[0]))
+    assert a.length(0) == b.length(0) == 9
+
+
+def test_block_accounting_and_reuse(rng):
+    c = _mk(num_blocks=4, block_size=4)
+    c.allocate(0)
+    for _ in range(8):                       # 2 blocks
+        c.append(0, _tok(rng), _tok(rng))
+    assert c.used_blocks() == 2 and c.free_blocks == 2
+    c.allocate(1)
+    for _ in range(5):                       # 2 more blocks
+        c.append(1, _tok(rng), _tok(rng))
+    assert c.free_blocks == 0
+    c.free(0)
+    assert c.free_blocks == 2                # blocks recycled
+    c.allocate(2)
+    for _ in range(8):
+        c.append(2, _tok(rng), _tok(rng))    # reuses freed blocks
+    assert c.free_blocks == 0
+
+
+def test_oom_raises(rng):
+    c = _mk(num_blocks=1, block_size=2)
+    c.allocate(0)
+    c.append(0, _tok(rng), _tok(rng))
+    c.append(0, _tok(rng), _tok(rng))
+    with pytest.raises(MemoryError):
+        c.append(0, _tok(rng), _tok(rng))
+
+
+def test_double_allocate_rejected():
+    c = _mk()
+    c.allocate(0)
+    with pytest.raises(KeyError):
+        c.allocate(0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "append", "free"]),
+                          st.integers(0, 3)), min_size=1, max_size=40))
+def test_allocator_invariants(ops):
+    """Random alloc/append/free traces: no block leaked or double-owned."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    c = _mk(num_blocks=6, block_size=2)
+    live = {}
+    for op, sid in ops:
+        if op == "alloc" and sid not in live:
+            c.allocate(sid); live[sid] = 0
+        elif op == "append" and sid in live:
+            try:
+                c.append(sid, _tok(rng), _tok(rng))
+                live[sid] += 1
+            except MemoryError:
+                pass
+        elif op == "free" and sid in live:
+            c.free(sid); live.pop(sid)
+        # invariant: every block owned exactly once (free list + seq tables)
+        owned = list(c._free)
+        for s in c._seqs.values():
+            owned.extend(s.blocks)
+        assert sorted(owned) == sorted(set(owned))
+        assert len(owned) == c.num_blocks
+        for sid2, n in live.items():
+            assert c.length(sid2) == n

@@ -1,0 +1,59 @@
+"""Pipeline + SSIM behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import edge_detect, rgb_to_gray
+from repro.core.ssim import ssim
+
+
+def test_rgb_to_gray_weights():
+    img = np.zeros((2, 4, 4, 3), np.float32)
+    img[..., 0] = 100.0
+    g = np.asarray(rgb_to_gray(jnp.asarray(img)))
+    np.testing.assert_allclose(g, 29.9, rtol=1e-4)
+
+
+def test_edge_detect_rgb_and_gray(rng):
+    rgbs = rng.integers(0, 256, (2, 32, 32, 3)).astype(np.uint8)
+    out = edge_detect(jnp.asarray(rgbs))
+    assert out.shape == (2, 32, 32)
+    gray = rng.integers(0, 256, (2, 32, 32)).astype(np.float32)
+    out2 = edge_detect(jnp.asarray(gray))
+    assert out2.shape == (2, 32, 32)
+
+
+def test_normalize_bounds(rng):
+    img = jnp.asarray(rng.integers(0, 256, (1, 48, 48)).astype(np.float32))
+    out = np.asarray(edge_detect(img, normalize=True))
+    assert out.max() <= 255.0 + 1e-3
+    assert out.min() >= 0.0
+
+
+def test_ssim_identity(rng):
+    x = jnp.asarray(rng.integers(0, 256, (2, 32, 32)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(ssim(x, x)), 1.0, atol=1e-6)
+
+
+def test_ssim_degrades_with_noise(rng):
+    x = jnp.asarray(rng.integers(0, 256, (32, 32)).astype(np.float32))
+    small = x + jnp.asarray(rng.normal(0, 5, (32, 32)).astype(np.float32))
+    big = x + jnp.asarray(rng.normal(0, 50, (32, 32)).astype(np.float32))
+    s_small = float(ssim(x, small, data_range=255.0))
+    s_big = float(ssim(x, big, data_range=255.0))
+    assert 1.0 > s_small > s_big
+
+
+def test_ssim_symmetry(rng):
+    a = jnp.asarray(rng.integers(0, 256, (32, 32)).astype(np.float32))
+    b = jnp.asarray(rng.integers(0, 256, (32, 32)).astype(np.float32))
+    assert abs(float(ssim(a, b, data_range=255.0)) - float(ssim(b, a, data_range=255.0))) < 1e-6
+
+
+def test_paper_fig7_check(rng):
+    """Optimized variants vs primitive implementation: SSIM == 1 (paper: 0.99)."""
+    img = jnp.asarray(rng.integers(0, 256, (2, 64, 64)).astype(np.float32))
+    ref = edge_detect(img, variant="direct", normalize=False)
+    for v in ("separable", "v1", "v2"):
+        out = edge_detect(img, variant=v, normalize=False)
+        assert float(jnp.mean(ssim(out, ref))) > 0.999999

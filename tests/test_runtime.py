@@ -1,0 +1,68 @@
+"""Straggler detection/mitigation + elastic mesh planning."""
+import numpy as np
+import pytest
+
+from repro.runtime import StepMonitor, StragglerPolicy, plan_mesh
+from repro.runtime.elastic import make_mesh
+
+
+def test_straggler_detection():
+    mon = StepMonitor(window=8, threshold=1.5)
+    for _ in range(8):
+        for h in ("h0", "h1", "h2", "h3"):
+            mon.record(h, 1.0)
+        mon.record("h_slow", 2.5)
+    assert mon.stragglers() == ["h_slow"]
+    assert mon.fleet_median() == 1.0
+
+
+def test_straggler_policy_strikes_then_excludes():
+    mon = StepMonitor(window=4, threshold=1.5)
+    pol = StragglerPolicy(strikes_to_exclude=3, shrink_factor=0.5)
+    excluded = None
+    for i in range(4):
+        for h in ("h0", "h1", "h2"):
+            mon.record(h, 1.0)
+        mon.record("bad", 4.0)
+        act = pol.step(mon)
+        if i < 2:
+            assert act["exclude"] == []
+            assert act["batch_fractions"]["bad"] == 0.5   # work-stealing first
+        excluded = act["exclude"]
+    assert excluded == ["bad"]
+
+
+def test_straggler_recovery_resets_strikes():
+    mon = StepMonitor(window=2, threshold=1.5)
+    pol = StragglerPolicy(strikes_to_exclude=2)
+    for h in ("a", "b"):
+        mon.record(h, 1.0)
+    mon.record("c", 5.0)
+    pol.step(mon)
+    for _ in range(4):       # c recovers
+        mon.record("c", 1.0)
+        for h in ("a", "b"):
+            mon.record(h, 1.0)
+    act = pol.step(mon)
+    assert act["exclude"] == []
+
+
+@pytest.mark.parametrize(
+    "n,model,pods,expect",
+    [
+        (512, 16, 2, (2, 16, 16)),
+        (256, 16, 1, (16, 16)),
+        (128, 16, 1, (8, 16)),          # lost half the fleet: DP shrinks
+        (96, 16, 1, (6, 16)),
+        (7, 16, 1, (7, 1)),             # degenerate: TP degrades
+    ],
+)
+def test_plan_mesh_elastic(n, model, pods, expect):
+    shape, axes = plan_mesh(n, model_parallel=model, pods=pods)
+    assert shape == expect
+    assert int(np.prod(shape)) <= n
+
+
+def test_make_mesh_single_device():
+    mesh = make_mesh(model_parallel=1)
+    assert int(np.prod(list(mesh.shape.values()))) == 1

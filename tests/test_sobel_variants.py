@@ -1,0 +1,97 @@
+"""The paper's variant ladder (GM/RG/RG-v1/RG-v2) must be mathematically
+identical — bit-exact in f32 for integer weights, allclose for arbitrary."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SobelParams, sobel, sobel_components
+from repro.core.sobel import VARIANTS, magnitude
+
+
+def _img(rng, shape):
+    return rng.integers(0, 256, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("variant", ["separable", "v1", "v2"])
+def test_ladder_bit_exact_default_params(variant, rng):
+    img = _img(rng, (2, 41, 57))
+    ref = np.asarray(sobel(jnp.asarray(img), variant="direct"))
+    out = np.asarray(sobel(jnp.asarray(img), variant=variant))
+    np.testing.assert_array_equal(out, ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(8, 40),
+    w=st.integers(8, 40),
+    a=st.integers(1, 3),
+    b=st.integers(1, 5),
+    m=st.integers(1, 9),
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_ladder_property(h, w, a, b, m, n, seed):
+    p = SobelParams(float(a), float(b), float(m), float(n))
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(_img(rng, (h, w)))
+    ref = np.asarray(sobel(img, variant="direct", params=p))
+    for variant in ("separable", "v1", "v2"):
+        out = np.asarray(sobel(img, variant=variant, params=p))
+        np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-2)
+
+
+def test_components_shapes_and_magnitude(rng):
+    img = jnp.asarray(_img(rng, (33, 29)))
+    comps = sobel_components(img, directions=4, variant="v2")
+    assert len(comps) == 4
+    np.testing.assert_allclose(
+        np.asarray(magnitude(comps)),
+        np.sqrt(sum(np.asarray(c) ** 2 for c in comps)),
+        rtol=1e-6,
+    )
+    comps2 = sobel_components(img, directions=2, variant="v2")
+    assert len(comps2) == 2
+
+
+@pytest.mark.parametrize("padding", ["reflect", "edge", "zero"])
+def test_same_size_output(padding, rng):
+    img = jnp.asarray(_img(rng, (24, 31)))
+    assert sobel(img, padding=padding).shape == (24, 31)
+
+
+def test_valid_padding_shape(rng):
+    img = jnp.asarray(_img(rng, (24, 31)))
+    assert sobel(img, padding="valid").shape == (20, 27)
+    assert sobel(img, size=3, padding="valid").shape == (22, 29)
+
+
+def test_3x3_separable_matches_direct(rng):
+    img = jnp.asarray(_img(rng, (2, 30, 30)))
+    for d in (2, 4):
+        ref = np.asarray(sobel(img, size=3, directions=d, variant="direct"))
+        out = np.asarray(sobel(img, size=3, directions=d, variant="separable"))
+        np.testing.assert_array_equal(out, ref)
+
+
+def test_gradient_direction_sensitivity(rng):
+    """A vertical step edge must excite G_x and not G_y (and vice versa)."""
+    img = np.zeros((32, 32), np.float32)
+    img[:, 16:] = 255.0
+    gx, gy, gd, gdt = sobel_components(jnp.asarray(img), variant="v2", padding="valid")
+    assert float(jnp.max(jnp.abs(gx))) > 1000.0
+    assert float(jnp.max(jnp.abs(gy))) == 0.0
+    # diagonal components respond equally (|Gd| == |Gdt| mirror for this edge)
+    np.testing.assert_allclose(np.abs(np.asarray(gd)), np.abs(np.asarray(gdt)))
+    img_t = img.T
+    gx2, gy2, *_ = sobel_components(jnp.asarray(img_t), variant="v2", padding="valid")
+    assert float(jnp.max(jnp.abs(gy2))) > 1000.0
+    assert float(jnp.max(jnp.abs(gx2))) == 0.0
+
+
+def test_diagonal_direction_sensitivity():
+    """A 45-degree edge maximally excites exactly one diagonal component."""
+    yy, xx = np.mgrid[0:32, 0:32]
+    img = ((xx + yy) >= 32).astype(np.float32) * 255.0     # 135-deg oriented step
+    gx, gy, gd, gdt = sobel_components(jnp.asarray(img), variant="v2", padding="valid")
+    assert float(jnp.max(jnp.abs(gd))) > float(jnp.max(jnp.abs(gdt))) * 3

@@ -1,0 +1,100 @@
+"""Mamba-1 chunked scan and Mamba-2 SSD vs naive sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+from repro.models.layers import init_tree
+
+
+def _cfg1(chunk=4):
+    return ModelConfig(
+        name="m1", family="ssm", num_layers=1, d_model=16, vocab_size=7,
+        ssm_type="mamba1", ssm_state=4, ssm_chunk=chunk, ssm_dt_rank=4,
+        attn_type="none", dtype="float32",
+    )
+
+
+def _cfg2(chunk=4):
+    return ModelConfig(
+        name="m2", family="hybrid", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=7, ssm_type="mamba2", ssm_state=4,
+        ssm_head_dim=8, ssm_chunk=chunk, attn_every=1, dtype="float32",
+    )
+
+
+def _naive_mamba1(params, cfg, x):
+    """Sequential reference recurrence."""
+    xc, z, dt, a, b_mat, c_mat, _, _ = ssm._mamba1_inputs(params, cfg, x)
+    b, l, di = xc.shape
+    n = cfg.ssm_state
+    h = np.zeros((b, di, n), np.float64)
+    xf = np.asarray(xc, np.float64)
+    dtn, bn, cn = map(lambda t: np.asarray(t, np.float64), (dt, b_mat, c_mat))
+    ys = []
+    for t in range(l):
+        da = np.exp(dtn[:, t, :, None] * np.asarray(a, np.float64))
+        h = h * da + (dtn[:, t] * xf[:, t])[..., None] * bn[:, t, None, :]
+        ys.append(np.einsum("bdn,bn->bd", h, cn[:, t]))
+    y = np.stack(ys, 1) + np.asarray(params["d_skip"], np.float64) * xf
+    y = y.astype(np.float32) * np.asarray(jax.nn.silu(z))
+    return y @ np.asarray(params["out_proj"], np.float32)
+
+
+def test_mamba1_chunked_equals_naive():
+    cfg = _cfg1(chunk=4)
+    params = init_tree(ssm.mamba1_params(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 12, cfg.d_model), jnp.float32)
+    out = np.asarray(ssm.apply_mamba1(params, cfg, x))
+    ref = _naive_mamba1(params, cfg, x)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunks", [(1, 12), (2, 6), (4, 3)])
+def test_mamba1_chunk_invariance(chunks):
+    q, _ = chunks
+    x = jax.random.normal(jax.random.key(1), (2, 12, 16), jnp.float32)
+    cfg_a, cfg_b = _cfg1(chunk=q), _cfg1(chunk=12)
+    params = init_tree(ssm.mamba1_params(cfg_a), jax.random.key(0))
+    np.testing.assert_allclose(
+        np.asarray(ssm.apply_mamba1(params, cfg_a, x)),
+        np.asarray(ssm.apply_mamba1(params, cfg_b, x)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_mamba1_decode_matches_scan():
+    cfg = _cfg1(chunk=4)
+    params = init_tree(ssm.mamba1_params(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    full = np.asarray(ssm.apply_mamba1(params, cfg, x))
+    out_pre, cache = ssm.apply_mamba1(params, cfg, x[:, :4], return_cache=True)
+    np.testing.assert_allclose(np.asarray(out_pre), full[:, :4], rtol=1e-4, atol=1e-4)
+    for t in range(4, 8):
+        y, cache = ssm.mamba1_decode(params, cfg, x[:, t : t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y[:, 0]), full[:, t], rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_ssd_chunk_invariance():
+    x = jax.random.normal(jax.random.key(1), (2, 12, 16), jnp.float32)
+    cfg_a, cfg_b = _cfg2(chunk=3), _cfg2(chunk=12)
+    params = init_tree(ssm.mamba2_params(cfg_a), jax.random.key(0))
+    np.testing.assert_allclose(
+        np.asarray(ssm.apply_mamba2(params, cfg_a, x)),
+        np.asarray(ssm.apply_mamba2(params, cfg_b, x)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_mamba2_decode_matches_ssd():
+    cfg = _cfg2(chunk=4)
+    params = init_tree(ssm.mamba2_params(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    full = np.asarray(ssm.apply_mamba2(params, cfg, x))
+    out_pre, cache = ssm.apply_mamba2(params, cfg, x[:, :4], return_cache=True)
+    np.testing.assert_allclose(np.asarray(out_pre), full[:, :4], rtol=1e-4, atol=1e-4)
+    for t in range(4, 8):
+        y, cache = ssm.mamba2_decode(params, cfg, x[:, t : t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y[:, 0]), full[:, t], rtol=3e-4, atol=3e-4)
