@@ -1,44 +1,45 @@
 """Paper Fig. 6 analogue: resource-configuration sweep.
 
-The CUDA block/grid sweep becomes the Pallas BlockSpec ``block_h`` sweep on a
-1024x1024 image: per-config VMEM working set (the TPU analogue of occupancy),
-halo re-read amplification, and interpret-mode wall time (correctness-level
-proxy; structural numbers are the deliverable on CPU)."""
+The CUDA block/grid sweep becomes the Pallas ``(block_h, block_w)`` sweep,
+run through the ``repro.kernels.tuning`` API on a square image: per-config
+VMEM working set (the TPU analogue of occupancy), 2-D halo re-read
+amplification, grid size, and interpret-mode wall time (correctness-level
+proxy; structural numbers are the deliverable on CPU). The sweep's winner is
+what the tuning cache would persist for this workload."""
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-import numpy as np
-import jax.numpy as jnp
+from repro.kernels import tuning
 
-from repro.kernels.ops import sobel as ksobel
-
-BLOCK_HS = [8, 16, 32, 64, 128, 256]
 N = 1024
+SMOKE_N = 64
 
 
-def run() -> List[Dict]:
+def run(smoke: bool = False) -> List[Dict]:
+    n = SMOKE_N if smoke else N
+    shapes = tuning.legal_block_shapes(n, n, size=5, backend="pallas-interpret")
+    if smoke:
+        shapes = shapes[:4]
     rows = []
-    rng = np.random.default_rng(0)
-    img = jnp.asarray(rng.integers(0, 256, (1, N, N)).astype(np.float32))
-    for bh in BLOCK_HS:
-        t0 = time.perf_counter()
-        out = ksobel(img, variant="v2", block_h=bh, interpret=True)
-        out.block_until_ready()
-        wall = time.perf_counter() - t0
-        # per-grid-step VMEM: input strip + halo + 5 hpass intermediates + out
-        wp = N + 4
-        vmem = (bh * wp + 4 * wp + 5 * (bh + 4) * N + bh * N) * 4
+    for r in tuning.sweep(n, n, size=5, variant="v2", shapes=shapes, iters=1):
         rows.append(
             {
-                "name": f"fig6/block_h={bh}",
-                "us_per_call": wall * 1e6,
+                "name": f"fig6/block_h={r['block_h']}/block_w={r['block_w']}",
+                "us_per_call": r["us"],
                 "derived": (
-                    f"vmem_kb={vmem / 1024:.0f};"
-                    f"halo_overhead={4 / bh:.3f};"
-                    f"grid_steps={N // bh}"
+                    f"vmem_kb={r['vmem_bytes'] / 1024:.0f};"
+                    f"halo_overhead={r['halo_overhead']:.3f};"
+                    f"grid_steps={r['grid_steps']}"
                 ),
             }
         )
+    best = min(rows, key=lambda r: r["us_per_call"])
+    rows.append(
+        {
+            "name": f"fig6/best@{n}x{n}",
+            "us_per_call": best["us_per_call"],
+            "derived": best["name"].replace("fig6/", "").replace("/", ";"),
+        }
+    )
     return rows

@@ -1,14 +1,39 @@
 """Benchmark harness: one module per paper table/figure + roofline summaries.
 
-Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+Emits ``name,us_per_call,derived`` CSV (one line per measurement) to stdout
+and, with ``--out``, to a file — the CI bench-smoke job uploads that CSV as
+a per-PR artifact.
+
+``--smoke`` runs suites that support it on tiny shapes (CI-sized smoke
+signal rather than a real measurement).
 """
 from __future__ import annotations
 
+import argparse
+import inspect
+import os
 import sys
+
+# Runnable as plain ``python benchmarks/run.py`` from the repo root (the
+# sibling suite modules import as ``benchmarks.<suite>``).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _run_suite(mod, smoke: bool):
+    if smoke and "smoke" in inspect.signature(mod.run).parameters:
+        return mod.run(smoke=True)
+    return mod.run()
 
 
 def main() -> None:
-    from benchmarks import fig6_blocksweep, fig7_ssim, roofline_lm, roofline_sobel, table1_variants, table2_throughput
+    from benchmarks import (
+        fig6_blocksweep,
+        fig7_ssim,
+        roofline_lm,
+        roofline_sobel,
+        table1_variants,
+        table2_throughput,
+    )
 
     suites = [
         ("table1", table1_variants),
@@ -18,13 +43,28 @@ def main() -> None:
         ("roofline_sobel", roofline_sobel),
         ("roofline_lm", roofline_lm),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("suite", nargs="?", default=None,
+                    help=f"one of {[s for s, _ in suites]} (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI smoke runs")
+    ap.add_argument("--out", default=None, help="also write the CSV here")
+    args = ap.parse_args()
+    names = [s for s, _ in suites]
+    if args.suite and args.suite not in names:
+        ap.error(f"unknown suite {args.suite!r}; choose from {names}")
+
+    lines = ["name,us_per_call,derived"]
     for name, mod in suites:
-        if only and only != name:
+        if args.suite and args.suite != name:
             continue
-        for row in mod.run():
-            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        for row in _run_suite(mod, args.smoke):
+            lines.append(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+    csv = "\n".join(lines) + "\n"
+    print(csv, end="")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(csv)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,6 @@ is a proxy — TPU roofline terms for the fused kernel live in
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
@@ -16,37 +15,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sobel import sobel
+from repro.kernels.tuning import measure_us
 
 SIZES = [512, 1024, 2048]
+SMOKE_SIZES = [64, 128]
 VARIANTS = ["direct", "separable", "v1", "v2"]
 # MAC/px for the 4-dir 5x5 ladder (DESIGN.md §1 arithmetic table)
 MACS = {"direct": 200, "separable": 138, "v1": 96, "v2": 82}
 
 
-def _time(fn, *args, iters=5) -> float:
-    fn(*args).block_until_ready()           # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters
-
-
-def run() -> List[Dict]:
+def run(smoke: bool = False) -> List[Dict]:
     rows = []
     rng = np.random.default_rng(0)
-    for n in SIZES:
+    for n in SMOKE_SIZES if smoke else SIZES:
         img = jnp.asarray(rng.integers(0, 256, (n, n)).astype(np.float32))
         times = {}
         for variant in VARIANTS:
             f = jax.jit(lambda x, v=variant: sobel(x, variant=v))
-            times[variant] = _time(f, img)
+            times[variant] = measure_us(f, img, iters=5)
         base = times["direct"]
         for variant in VARIANTS:
             rows.append(
                 {
                     "name": f"table1/{variant}/{n}x{n}",
-                    "us_per_call": times[variant] * 1e6,
+                    "us_per_call": times[variant],
                     "derived": (
                         f"macs_per_px={MACS[variant]};"
                         f"speedup_vs_direct={base / times[variant]:.2f}"

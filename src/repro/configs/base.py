@@ -79,6 +79,9 @@ class ModelConfig:
     sobel_size: int = 5
     sobel_directions: int = 4
     sobel_variant: str = "v2"
+    sobel_backend: str = "auto"      # dispatch backend: auto | pallas-tpu | pallas-interpret | xla
+    sobel_block_h: int = 0           # Pallas tile rows; 0 = tuning cache / default
+    sobel_block_w: int = 0           # Pallas tile cols; 0 = tuning cache / default
 
     # --- training/runtime ---
     tie_embeddings: bool = False

@@ -1,14 +1,24 @@
 """sobel-hd [image] — the paper's own workload as an 11th architecture:
 batched four-directional 5x5 Sobel edge detection (RG-v2), sharded
 batch -> (pod, data), image rows -> model.
+
+Backend routing goes through ``repro.kernels.dispatch`` (``auto`` = fused
+2-D-tiled Pallas kernel on TPU, pure XLA elsewhere). The full-size config
+pins the paper-style block geometry; the smoke config leaves the block
+shape to the ``repro.kernels.tuning`` cache / defaults so CPU tests stay
+independent of any tuned state.
 """
 from repro.configs.base import ModelConfig, register
 
 FULL = ModelConfig(
     name="sobel-hd", family="image",
     image_h=2048, image_w=2048, sobel_size=5, sobel_directions=4, sobel_variant="v2",
+    sobel_backend="auto", sobel_block_h=64, sobel_block_w=256,
 )
 
-SMOKE = FULL.replace(name="sobel-hd-smoke", image_h=64, image_w=64)
+SMOKE = FULL.replace(
+    name="sobel-hd-smoke", image_h=64, image_w=64,
+    sobel_block_h=0, sobel_block_w=0,
+)
 
 register("sobel-hd", FULL, SMOKE)

@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.filters import SobelParams
-from repro.core.sobel import sobel
 
 __all__ = ["rgb_to_gray", "edge_detect", "make_sharded_edge_fn"]
 
@@ -40,6 +39,9 @@ def edge_detect(
     params: SobelParams = SobelParams(),
     padding: str = "reflect",
     normalize: bool = True,
+    backend: Optional[str] = None,
+    block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
 ) -> jnp.ndarray:
     """Full pipeline on a batch of images.
 
@@ -47,20 +49,30 @@ def edge_detect(
       images: ``(..., H, W)`` grayscale or ``(..., H, W, 3)`` RGB.
       normalize: scale magnitudes into [0, 255] (per image) and saturate —
         the display form used for the paper's Fig. 1/7 outputs.
+      backend: ``repro.kernels.dispatch`` backend (``auto`` / ``pallas-tpu``
+        / ``pallas-interpret`` / ``xla``); None = auto.
+      block_h, block_w: Pallas tile override; None = tuning cache / default.
     Returns:
       ``(..., H, W)`` float32 edge image.
     """
+    # Imported here: repro.core must stay importable without repro.kernels
+    # (kernels itself builds on repro.core.sobel).
+    from repro.kernels.dispatch import sobel as dispatch_sobel
+
     if images.ndim >= 3 and images.shape[-1] == 3:
         gray = rgb_to_gray(images)
     else:
         gray = images.astype(jnp.float32)
-    g = sobel(
+    g = dispatch_sobel(
         gray,
         size=size,
         directions=directions,
         variant=variant,
         params=params,
         padding=padding,
+        backend=backend,
+        block_h=block_h,
+        block_w=block_w,
     )
     if normalize:
         peak = jnp.max(g, axis=(-2, -1), keepdims=True)
@@ -77,6 +89,7 @@ def make_sharded_edge_fn(
     directions: int = 4,
     variant: str = "v2",
     params: SobelParams = SobelParams(),
+    backend: Optional[str] = None,
 ):
     """jit-compiled edge detector with batch sharded over ``batch_axes`` and
     image rows over ``row_axis`` (GSPMD inserts the 2r-row halo exchange).
@@ -96,6 +109,7 @@ def make_sharded_edge_fn(
             variant=variant,
             params=params,
             normalize=False,
+            backend=backend,
         )
 
     return jax.jit(

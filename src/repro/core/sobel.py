@@ -220,10 +220,20 @@ def sobel_components(
 
 
 def magnitude(components: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
-    """Root-sum-of-squares aggregation (Eq. 2 / Eq. 4)."""
+    """Root-sum-of-squares aggregation (Eq. 2 / Eq. 4).
+
+    Each square is clamped through ``maximum(g*g, 0)`` — an exact identity
+    for squares — so codegen cannot contract the multiply into an FMA with
+    the accumulating add (``lax.optimization_barrier`` does not survive to
+    XLA:CPU codegen). Every execution mode (eager, jit, Pallas interpret,
+    Pallas TPU) then rounds ``g*g`` identically, which — together with the
+    exactness of the integer-weight taps in f32 — makes kernel-vs-core
+    outputs bit-exact, not just allclose.
+    """
     acc = None
     for g in components:
-        acc = g * g if acc is None else acc + g * g
+        g2 = jnp.maximum(g * g, jnp.float32(0.0))
+        acc = g2 if acc is None else acc + g2
     return jnp.sqrt(acc)
 
 

@@ -1,0 +1,109 @@
+"""Unified backend dispatch for the multi-directional Sobel operator.
+
+One entry point, three execution backends:
+
+  * ``pallas-tpu``       — the fused 2-D tiled Pallas kernel, compiled by
+                           Mosaic (the production TPU path).
+  * ``pallas-interpret`` — the same kernel through the Pallas interpreter
+                           (CPU correctness path; bit-exact vs the kernel).
+  * ``xla``              — ``repro.core.sobel`` (pure XLA; fastest on CPU,
+                           and the portable fallback everywhere else).
+
+``backend=None``/``"auto"`` resolves to ``pallas-tpu`` on TPU hosts and
+``xla`` elsewhere. For the Pallas backends, block shapes come from (in
+order): explicit ``block_h``/``block_w`` arguments, the tuning cache
+(``repro.kernels.tuning``), then a conservative default.
+
+All backends are mathematically identical; for integer-weight params the
+outputs are bit-exact across backends (see ``repro.core.sobel.magnitude``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import SobelParams
+from repro.core.sobel import sobel as xla_sobel
+from repro.kernels import ops
+from repro.kernels import tuning
+
+__all__ = ["BACKENDS", "resolve_backend", "choose_block_shape", "sobel"]
+
+BACKENDS = ("auto", "pallas-tpu", "pallas-interpret", "xla")
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Map user intent to a concrete backend name."""
+    b = backend or "auto"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {b!r}; expected one of {BACKENDS}")
+    if b == "auto":
+        return "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+    return b
+
+
+def choose_block_shape(
+    h: int,
+    w: int,
+    *,
+    size: int = 5,
+    variant: str = "v2",
+    dtype: str = "float32",
+    backend: str = "pallas-interpret",
+    block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
+    cache: Optional[tuning.TuningCache] = None,
+) -> Tuple[int, int, str]:
+    """Resolve (block_h, block_w, source) for a Pallas backend.
+
+    ``source`` is ``"explicit"``, ``"tuned"`` or ``"default"`` — tests and
+    benchmarks use it to verify the tuning cache actually steers dispatch.
+    """
+    if block_h and block_w:
+        return block_h, block_w, "explicit"
+    cache = cache if cache is not None else tuning.get_default_cache()
+    hit = cache.lookup(tuning.TuneKey(backend, dtype, size, variant, h, w))
+    if hit is not None:
+        bh, bw = hit
+        return block_h or bh, block_w or bw, "tuned"
+    dbh, dbw = ops.default_block_shape(h, w, size)
+    return block_h or dbh, block_w or dbw, "default"
+
+
+def sobel(
+    image: jnp.ndarray,
+    *,
+    size: int = 5,
+    directions: int = 4,
+    variant: str = "v2",
+    params: SobelParams = SobelParams(),
+    padding: str = "reflect",
+    backend: Optional[str] = None,
+    block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
+    tuning_cache: Optional[tuning.TuningCache] = None,
+) -> jnp.ndarray:
+    """Multi-directional Sobel magnitude, routed to the best backend.
+
+    Args mirror :func:`repro.core.sobel.sobel` plus the routing knobs;
+    output is identical for every backend: ``(..., H, W)`` float32.
+    """
+    b = resolve_backend(backend)
+    if b == "xla":
+        return xla_sobel(
+            image, size=size, directions=directions, variant=variant,
+            params=params, padding=padding,
+        )
+    h, w = image.shape[-2], image.shape[-1]
+    bh, bw, _src = choose_block_shape(
+        h, w, size=size, variant=variant,
+        dtype=jnp.asarray(image).dtype.name,
+        backend=b, block_h=block_h, block_w=block_w, cache=tuning_cache,
+    )
+    return ops.sobel(
+        image, size=size, directions=directions, variant=variant,
+        params=params, padding=padding, block_h=bh, block_w=bw,
+        interpret=(b == "pallas-interpret"),
+    )

@@ -1,13 +1,16 @@
 """Public jit'd entry points for the Pallas Sobel kernels.
 
-Handles: arbitrary image sizes (pads H to a block multiple and slices back),
-batch-dim normalization, boundary padding modes, dtype casting, and
+Handles: arbitrary image sizes (pads H and W to block multiples and slices
+back), batch-dim normalization, boundary padding modes, dtype casting, and
 interpret-mode selection (Pallas kernels execute in interpret mode on CPU —
 the TPU is the target, CPU validates correctness).
+
+Block-shape selection lives one level up in ``repro.kernels.dispatch`` (which
+consults the ``repro.kernels.tuning`` cache); this module takes explicit
+``block_h``/``block_w`` and only fills in conservative defaults.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -17,7 +20,7 @@ from repro.core.filters import SobelParams
 from repro.kernels.sobel3x3 import sobel3x3_pallas
 from repro.kernels.sobel5x5 import sobel5x5_pallas
 
-__all__ = ["sobel", "default_interpret"]
+__all__ = ["sobel", "default_interpret", "default_block_shape"]
 
 
 def default_interpret() -> bool:
@@ -29,6 +32,20 @@ def _pad_mode(padding: str) -> str:
     return {"reflect": "reflect", "edge": "edge", "zero": "constant"}[padding]
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def default_block_shape(h: int, w: int, size: int = 5) -> tuple:
+    """Conservative (block_h, block_w) when no tuned shape is available.
+
+    Multiples of 8 satisfy the halo-divisibility rule for both 3x3 (2r = 2)
+    and 5x5 (2r = 4) and the f32 sublane tile; 256 lanes = 2 VPU lane tiles.
+    Small images shrink the block instead of padding up to it.
+    """
+    return min(64, _round_up(h, 8)), min(256, _round_up(w, 8))
+
+
 def sobel(
     image: jnp.ndarray,
     *,
@@ -37,7 +54,8 @@ def sobel(
     variant: str = "v2",
     params: SobelParams = SobelParams(),
     padding: str = "reflect",
-    block_h: int = 64,
+    block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Fused Pallas multi-directional Sobel magnitude.
@@ -59,12 +77,18 @@ def sobel(
     h, w = x.shape[-2], x.shape[-1]
     x = x.reshape((-1, h, w))
 
-    # Boundary padding (same-size output), then bottom fill to a block
-    # multiple (the fill rows only feed output rows that are sliced off).
+    dbh, dbw = default_block_shape(h, w, size)
+    bh = block_h if block_h else dbh
+    bw = block_w if block_w else dbw
+
+    # Boundary padding (same-size output), then bottom/right fill to block
+    # multiples (the fill rows/cols only feed output pixels that are sliced
+    # off).
     xp = jnp.pad(x, [(0, 0), (r, r), (r, r)], mode=_pad_mode(padding))
-    extra = (-h) % block_h
-    if extra:
-        xp = jnp.pad(xp, [(0, 0), (0, extra), (0, 0)], mode="constant")
+    extra_h = (-h) % bh
+    extra_w = (-w) % bw
+    if extra_h or extra_w:
+        xp = jnp.pad(xp, [(0, 0), (0, extra_h), (0, extra_w)], mode="constant")
 
     if size == 5:
         out = sobel5x5_pallas(
@@ -72,7 +96,8 @@ def sobel(
             variant=variant,
             params=params,
             directions=directions,
-            block_h=block_h,
+            block_h=bh,
+            block_w=bw,
             interpret=interpret,
         )
     elif size == 3:
@@ -80,11 +105,12 @@ def sobel(
             xp,
             variant=variant if variant in ("direct", "separable") else "separable",
             directions=directions,
-            block_h=block_h,
+            block_h=bh,
+            block_w=bw,
             interpret=interpret,
         )
     else:
         raise ValueError(f"size must be 3 or 5, got {size}")
 
-    out = out[:, :h, :]
+    out = out[:, :h, :w]
     return out.reshape(batch_shape + (h, w))

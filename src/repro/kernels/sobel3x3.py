@@ -1,6 +1,7 @@
 """Pallas TPU kernel: classical 3x3 Sobel (paper Table 1 "3x3" baseline rows).
 
-Same strip/halo pipeline as ``sobel5x5`` with r = 1 (2-row halo).
+Same 2-D tile/halo pipeline as ``sobel5x5`` with r = 1 (2-wide halo in both
+dimensions); see ``repro.kernels.tiling`` for the geometry.
 """
 from __future__ import annotations
 
@@ -12,14 +13,17 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import filters as F
-from repro.core.sobel import _correlate2d, _hpass, _vpass
+from repro.core.sobel import _correlate2d, _hpass, _vpass, magnitude
+from repro.kernels.tiling import assemble_tile, tile_in_specs, validate_block_shape
 
 __all__ = ["sobel3x3_pallas"]
 
 VARIANTS = ("direct", "separable")
 
+_R = 1  # 3x3 operator radius; halo width = 2r = 2
 
-def _strip_components(x, variant: str, bh: int, w: int, directions: int):
+
+def _tile_components(x, variant: str, bh: int, w: int, directions: int):
     if variant == "direct":
         bank = F.filter_bank_3x3(directions)
         return tuple(_correlate2d(x, k, bh, w) for k in bank)
@@ -32,18 +36,18 @@ def _strip_components(x, variant: str, bh: int, w: int, directions: int):
     return gx, gy, gd, gdt
 
 
-def _kernel(x_main_ref, x_halo_ref, o_ref, *, variant, directions, bh, w):
-    x = jnp.concatenate([x_main_ref[0], x_halo_ref[0]], axis=0).astype(jnp.float32)
-    comps = _strip_components(x, variant, bh, w, directions)
-    acc = None
-    for g in comps:
-        acc = g * g if acc is None else acc + g * g
-    o_ref[0] = jnp.sqrt(acc)
+def _kernel(
+    x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref, o_ref,
+    *, variant, directions, bh, bw,
+):
+    x = assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref)
+    comps = _tile_components(x, variant, bh, bw, directions)
+    o_ref[0] = magnitude(comps)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("variant", "directions", "block_h", "interpret"),
+    static_argnames=("variant", "directions", "block_h", "block_w", "interpret"),
 )
 def sobel3x3_pallas(
     padded: jnp.ndarray,
@@ -51,6 +55,7 @@ def sobel3x3_pallas(
     variant: str = "separable",
     directions: int = 2,
     block_h: int = 64,
+    block_w: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """(N, H + 2, W + 2) padded float32 -> (N, H, W) magnitude."""
@@ -58,19 +63,16 @@ def sobel3x3_pallas(
         raise ValueError(f"unknown variant {variant!r}")
     n, hp, wp = padded.shape
     h, w = hp - 2, wp - 2
-    if h % block_h != 0:
-        raise ValueError(f"H={h} not a multiple of block_h={block_h}")
-    if block_h % 2 != 0:
-        raise ValueError(f"block_h={block_h} must be even")
-    bh = block_h
-    grid = (n, h // bh)
-    in_specs = [
-        pl.BlockSpec((1, bh, wp), lambda i, k: (i, k, 0)),
-        pl.BlockSpec((1, 2, wp), lambda i, k: (i, (k + 1) * (bh // 2), 0)),
-    ]
-    out_specs = pl.BlockSpec((1, bh, w), lambda i, k: (i, k, 0))
+    # block_w=None keeps the seed's row-strip behavior: one full-width tile.
+    bh, bw = block_h, block_w if block_w else w
+    validate_block_shape(h, w, bh, bw, _R)
+    grid = (n, h // bh, w // bw)
+    in_specs = tile_in_specs(bh, bw, _R)
+    out_specs = pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))
     out_shape = jax.ShapeDtypeStruct((n, h, w), jnp.float32)
-    kernel = functools.partial(_kernel, variant=variant, directions=directions, bh=bh, w=w)
+    kernel = functools.partial(
+        _kernel, variant=variant, directions=directions, bh=bh, bw=bw
+    )
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -78,4 +80,4 @@ def sobel3x3_pallas(
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(padded, padded)
+    )(padded, padded, padded, padded)

@@ -2,18 +2,25 @@
 
 GPU -> TPU mapping (see DESIGN.md §2):
 
-  * paper's CUDA-block row ownership + 2r overlap (§4.3.1)  ->  row-strip grid:
-    grid step k owns ``block_h`` output rows and reads ``block_h + 4`` input
-    rows via a main BlockSpec plus a 4-row halo BlockSpec (the halo is the
-    paper's inter-block overlap, re-read amplification = 4/block_h).
+  * paper's CUDA-block tile ownership + 2r overlap (§4.3.1)  ->  2-D tiled
+    grid: step (k, j) owns the ``block_h x block_w`` output tile and reads a
+    ``(block_h + 4, block_w + 4)`` input tile via four BlockSpec views (main,
+    right halo, bottom halo, corner — see ``repro.kernels.tiling``). VMEM per
+    step is O(block_h * block_w), independent of image width, so 4K/8K frames
+    run with the same footprint as 1080p. Halo re-read amplification is
+    (1 + 4/bh)(1 + 4/bw) - 1, the paper's overlap cost in both dimensions.
   * warp-shuffle register taps (§4.3.3)                      ->  static strided
-    slices of the VMEM-resident row strip feeding the VPU.
+    slices of the VMEM-resident tile feeding the VPU.
   * explicit prefetch of the next row (§4.3.4)               ->  Pallas's
     automatic double-buffered pipeline: the HBM->VMEM DMA for grid step k+1
     is issued while step k computes.
   * per-row ring buffer f(x) = x mod 5/6 (Eq. 8/9)           ->  vectorized
-    across sublanes: all ``block_h + 4`` horizontal passes of a strip are one
+    across sublanes: all ``block_h + 4`` horizontal passes of a tile are one
     VPU op; the separable-reuse FLOP savings (Eq. 5-19) carry over unchanged.
+
+The block geometry (the paper's key tuning knob, Fig. 6) is a free
+``(block_h, block_w)`` parameter; ``repro.kernels.tuning`` sweeps legal
+shapes and caches the best per (backend, dtype, size, variant, H, W).
 
 Variant ladder (identical math to ``repro.core.sobel``):
   ``direct``    4 dense 5x5 correlations               (~200 MAC/px)  "GM"
@@ -28,30 +35,31 @@ variants then trade VPU work, mirroring the paper's Table 1 ladder.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import filters as F
 from repro.core.filters import SobelParams
-from repro.core.sobel import _correlate2d, _hpass, _vpass
+from repro.core.sobel import _correlate2d, _hpass, _vpass, magnitude
+from repro.kernels.tiling import assemble_tile, tile_in_specs, validate_block_shape
 
 __all__ = ["sobel5x5_pallas", "VARIANTS"]
 
 VARIANTS = ("direct", "separable", "v1", "v2")
 
+_R = 2  # 5x5 operator radius; halo width = 2r = 4
+
 
 # ---------------------------------------------------------------------------
-# Kernel body — pure math on the VMEM-resident strip (bh+4, W+4)
+# Kernel body — pure math on the VMEM-resident tile (bh+4, bw+4)
 # ---------------------------------------------------------------------------
 
-def _strip_components(x, p: SobelParams, variant: str, bh: int, w: int):
-    """Four direction components for one row strip.
+def _tile_components(x, p: SobelParams, variant: str, bh: int, w: int):
+    """Four direction components for one tile.
 
-    ``x``: (bh+4, w+4) padded strip; returns 4 arrays of shape (bh, w).
+    ``x``: (bh+4, w+4) padded tile; returns 4 arrays of shape (bh, w).
     """
     if variant == "direct":
         bank = F.filter_bank_5x5(p)
@@ -101,23 +109,26 @@ def _strip_components(x, p: SobelParams, variant: str, bh: int, w: int):
     return gx, gy, gd, gdt
 
 
-def _kernel_magnitude(x_main_ref, x_halo_ref, o_ref, *, p, variant, directions, bh, w):
-    x = jnp.concatenate(
-        [x_main_ref[0], x_halo_ref[0]], axis=0
-    ).astype(jnp.float32)                   # (bh+4, w+4)
-    comps = _strip_components(x, p, variant, bh, w)[:directions]
-    acc = None
-    for g in comps:
-        acc = g * g if acc is None else acc + g * g
-    o_ref[0] = jnp.sqrt(acc)
+# Back-compat alias (pre-2-D-tiling name).
+_strip_components = _tile_components
 
 
-def _kernel_components(x_main_ref, x_halo_ref, o_ref, *, p, variant, directions, bh, w):
-    x = jnp.concatenate(
-        [x_main_ref[0], x_halo_ref[0]], axis=0
-    ).astype(jnp.float32)
-    comps = _strip_components(x, p, variant, bh, w)[:directions]
-    o_ref[0] = jnp.stack(comps, axis=0)     # (directions, bh, w)
+def _kernel_magnitude(
+    x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref, o_ref,
+    *, p, variant, directions, bh, bw,
+):
+    x = assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref)
+    comps = _tile_components(x, p, variant, bh, bw)[:directions]
+    o_ref[0] = magnitude(comps)
+
+
+def _kernel_components(
+    x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref, o_ref,
+    *, p, variant, directions, bh, bw,
+):
+    x = assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref)
+    comps = _tile_components(x, p, variant, bh, bw)[:directions]
+    o_ref[0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +142,7 @@ def _kernel_components(x_main_ref, x_halo_ref, o_ref, *, p, variant, directions,
         "params",
         "directions",
         "block_h",
+        "block_w",
         "out_components",
         "interpret",
     ),
@@ -142,44 +154,38 @@ def sobel5x5_pallas(
     params: SobelParams = SobelParams(),
     directions: int = 4,
     block_h: int = 64,
+    block_w: int | None = None,
     out_components: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Run the fused kernel on ``padded``: (N, H + 4, W + 4) float32.
 
-    ``H`` must be a multiple of ``block_h`` (the public ``ops.sobel`` wrapper
-    takes care of padding/slicing arbitrary sizes).  Returns (N, H, W)
+    ``H`` must be a multiple of ``block_h`` and ``W`` of ``block_w`` (the
+    public ``ops.sobel`` wrapper takes care of padding/slicing arbitrary
+    sizes; ``block_w=None`` keeps the seed's row-strip behavior — one
+    full-width tile, which requires ``W % 4 == 0``). Returns (N, H, W)
     magnitude, or (N, directions, H, W) when ``out_components``.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}")
     n, hp, wp = padded.shape
     h, w = hp - 4, wp - 4
-    if h % block_h != 0:
-        raise ValueError(f"H={h} not a multiple of block_h={block_h}")
-    if block_h % 4 != 0:
-        raise ValueError(f"block_h={block_h} must be a multiple of 4")
-    bh = block_h
-    grid = (n, h // bh)
+    bh, bw = block_h, block_w if block_w else w
+    validate_block_shape(h, w, bh, bw, _R)
+    grid = (n, h // bh, w // bw)
 
-    # Main strip: rows [k*bh, k*bh + bh); halo: the next 4 rows (the paper's
-    # 2r inter-block overlap). Halo block index is in units of 4 rows:
-    # element offset 4 * ((k+1) * bh/4) = k*bh + bh.
-    in_specs = [
-        pl.BlockSpec((1, bh, wp), lambda i, k: (i, k, 0)),
-        pl.BlockSpec((1, 4, wp), lambda i, k: (i, (k + 1) * (bh // 4), 0)),
-    ]
+    in_specs = tile_in_specs(bh, bw, _R)
     if out_components:
-        out_specs = pl.BlockSpec((1, directions, bh, w), lambda i, k: (i, 0, k, 0))
+        out_specs = pl.BlockSpec((1, directions, bh, bw), lambda i, k, j: (i, 0, k, j))
         out_shape = jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)
         body = _kernel_components
     else:
-        out_specs = pl.BlockSpec((1, bh, w), lambda i, k: (i, k, 0))
+        out_specs = pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))
         out_shape = jax.ShapeDtypeStruct((n, h, w), jnp.float32)
         body = _kernel_magnitude
 
     kernel = functools.partial(
-        body, p=params, variant=variant, directions=directions, bh=bh, w=w
+        body, p=params, variant=variant, directions=directions, bh=bh, bw=bw
     )
     return pl.pallas_call(
         kernel,
@@ -188,4 +194,4 @@ def sobel5x5_pallas(
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(padded, padded)
+    )(padded, padded, padded, padded)

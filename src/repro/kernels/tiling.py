@@ -1,0 +1,91 @@
+"""2-D (row x column) tile geometry for the Pallas Sobel kernels.
+
+The seed kernels tiled rows only: each grid step held a full
+``(block_h + 2r, W + 2r)`` strip in VMEM, which caps usable width and wastes
+VMEM on 4K/8K frames. Here the grid is 2-D — step ``(k, j)`` owns the
+``block_h x block_w`` output tile at ``(k * block_h, j * block_w)`` — and the
+VMEM working set is ``O(block_h * block_w)``, independent of image width.
+
+Pallas BlockSpecs address non-overlapping blocks (element offset =
+block index x block shape), so the paper's 2r inter-block overlap (§4.3.1)
+becomes four input views of the same padded array, stitched back into one
+``(block_h + 2r, block_w + 2r)`` tile inside the kernel:
+
+    main (bh, bw) | right halo (bh, 2r)
+    --------------+---------------------
+    bottom (2r,bw)| corner     (2r, 2r)
+
+Halo offsets land on block-index multiples because ``block_h`` and
+``block_w`` are required to be multiples of the halo width ``2r`` (the seed's
+``block_h % 4 == 0`` rule, now applied to both dims). Re-read amplification
+is ``(1 + 2r/bh)(1 + 2r/bw) - 1`` — the 2-D generalization of the paper's
+``2r / block_h``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "validate_block_shape",
+    "tile_in_specs",
+    "assemble_tile",
+    "halo_amplification",
+    "tile_vmem_bytes",
+]
+
+
+def validate_block_shape(h: int, w: int, block_h: int, block_w: int, r: int) -> None:
+    """Check the (block_h, block_w) geometry against an (h, w) output grid."""
+    halo = 2 * r
+    if h % block_h != 0:
+        raise ValueError(f"H={h} not a multiple of block_h={block_h}")
+    if w % block_w != 0:
+        raise ValueError(f"W={w} not a multiple of block_w={block_w}")
+    if block_h % halo != 0:
+        raise ValueError(f"block_h={block_h} must be a multiple of {halo}")
+    if block_w % halo != 0:
+        raise ValueError(f"block_w={block_w} must be a multiple of {halo}")
+
+
+def tile_in_specs(block_h: int, block_w: int, r: int) -> List[pl.BlockSpec]:
+    """Input BlockSpecs [main, right, bottom, corner] over a padded
+    ``(N, H + 2r, W + 2r)`` array, for grid ``(N, H/block_h, W/block_w)``.
+
+    The halo specs index in units of the halo width ``2r``: e.g. the right
+    halo's column offset must be ``(j + 1) * block_w``, which in 2r-column
+    block units is ``(j + 1) * (block_w // 2r)``.
+    """
+    halo = 2 * r
+    bh_u, bw_u = block_h // halo, block_w // halo
+    return [
+        pl.BlockSpec((1, block_h, block_w), lambda i, k, j: (i, k, j)),
+        pl.BlockSpec((1, block_h, halo), lambda i, k, j: (i, k, (j + 1) * bw_u)),
+        pl.BlockSpec((1, halo, block_w), lambda i, k, j: (i, (k + 1) * bh_u, j)),
+        pl.BlockSpec((1, halo, halo), lambda i, k, j: (i, (k + 1) * bh_u, (j + 1) * bw_u)),
+    ]
+
+
+def assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref) -> jnp.ndarray:
+    """Stitch the four VMEM views into one (bh + 2r, bw + 2r) f32 tile."""
+    top = jnp.concatenate([x_main_ref[0], x_right_ref[0]], axis=1)
+    bottom = jnp.concatenate([x_bottom_ref[0], x_corner_ref[0]], axis=1)
+    return jnp.concatenate([top, bottom], axis=0).astype(jnp.float32)
+
+
+def halo_amplification(block_h: int, block_w: int, r: int) -> float:
+    """Fraction of extra HBM reads vs a halo-free ideal."""
+    halo = 2 * r
+    return (1.0 + halo / block_h) * (1.0 + halo / block_w) - 1.0
+
+
+def tile_vmem_bytes(block_h: int, block_w: int, r: int, n_hpass: int = 5) -> int:
+    """Rough per-grid-step VMEM working set (f32): the stitched input tile,
+    ``n_hpass`` horizontal-pass intermediates, and the output tile."""
+    halo = 2 * r
+    tile = (block_h + halo) * (block_w + halo)
+    inter = n_hpass * (block_h + halo) * block_w
+    out = block_h * block_w
+    return 4 * (tile + inter + out)

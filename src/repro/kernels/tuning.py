@@ -1,0 +1,289 @@
+"""Block-shape autotuner for the Pallas Sobel kernels (paper Fig. 6).
+
+The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
+``(block_h, block_w)`` tile. This module:
+
+  * enumerates *legal* block shapes for an image/operator/backend
+    (:func:`legal_block_shapes`),
+  * times each one with the same harness the benchmark suites use
+    (:func:`measure_us` — warm call to exclude compile, then a best-of-iters
+    loop), and
+  * persists the winner in a JSON cache keyed by
+    ``(backend, dtype, size, variant, H, W)`` (:class:`TuningCache`), which
+    ``repro.kernels.dispatch`` consults on every ``sobel()`` call.
+
+Cache location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro/sobel_blocks.json``. The file is plain JSON so it can be
+committed, diffed, and shipped with a deployment image.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.kernels.tiling import halo_amplification, tile_vmem_bytes
+
+__all__ = [
+    "TuneKey",
+    "TuningCache",
+    "default_cache_path",
+    "measure_us",
+    "legal_block_shapes",
+    "sweep",
+    "autotune",
+    "get_default_cache",
+]
+
+# Per-core VMEM budget used to reject obviously-oversized tiles (bytes).
+VMEM_BUDGET = 16 * 1024 * 1024
+
+# Candidate grids. TPU lane width is 128 and the f32 sublane tile is 8, so
+# the hardware backend restricts to multiples of (8, 128); interpret mode
+# (and the tests) may go smaller.
+_CAND_H = (8, 16, 32, 64, 128, 256)
+_CAND_W = (32, 64, 128, 256, 512, 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneKey:
+    """Cache key: one tuned workload shape."""
+
+    backend: str      # pallas-tpu | pallas-interpret
+    dtype: str        # canonical jnp dtype name of the *input* image
+    size: int         # 3 | 5
+    variant: str
+    h: int
+    w: int
+
+    def to_str(self) -> str:
+        return f"{self.backend}/{self.dtype}/{self.size}x{self.size}/{self.variant}/{self.h}x{self.w}"
+
+
+class TuningCache:
+    """JSON-backed best-known-config store.
+
+    Schema: ``{key: {"block_h": int, "block_w": int, "us": float}}`` with a
+    ``__meta__`` entry recording the schema version.
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._entries: Dict[str, Dict] = {}
+        self.load()
+
+    def load(self) -> "TuningCache":
+        self._entries = {}
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return self
+        if isinstance(raw, dict):
+            self._entries = {k: v for k, v in raw.items() if not k.startswith("__")}
+        return self
+
+    def save(self) -> None:
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        payload = {"__meta__": {"version": self.VERSION}}
+        payload.update(dict(sorted(self._entries.items())))
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, self.path)
+
+    def lookup(self, key: TuneKey) -> Optional[Tuple[int, int]]:
+        e = self._entries.get(key.to_str())
+        if not e:
+            return None
+        return int(e["block_h"]), int(e["block_w"])
+
+    def record(self, key: TuneKey, block_h: int, block_w: int, us: float) -> None:
+        self._entries[key.to_str()] = {
+            "block_h": int(block_h),
+            "block_w": int(block_w),
+            "us": float(us),
+        }
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "sobel_blocks.json")
+
+
+_DEFAULT_CACHE: Optional[TuningCache] = None
+
+
+def get_default_cache() -> TuningCache:
+    """Process-wide cache singleton (lazily loaded from disk)."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != default_cache_path():
+        _DEFAULT_CACHE = TuningCache()
+    return _DEFAULT_CACHE
+
+
+# ---------------------------------------------------------------------------
+# Timing harness (shared with benchmarks/)
+# ---------------------------------------------------------------------------
+
+def measure_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Mean wall-time per call in microseconds, after ``warmup`` calls
+    (compile + cache warm). This is the harness all benchmark suites use."""
+    out = None
+    for _ in range(max(1, warmup)):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Shape enumeration + sweep
+# ---------------------------------------------------------------------------
+
+def legal_block_shapes(
+    h: int,
+    w: int,
+    *,
+    size: int = 5,
+    backend: str = "pallas-interpret",
+    max_vmem_bytes: int = VMEM_BUDGET,
+) -> List[Tuple[int, int]]:
+    """All (block_h, block_w) candidates legal for an HxW image.
+
+    Legality: the block divides the halo width 2r in both dims, is no larger
+    than the (rounded-up) image, fits the VMEM budget, and — on the hardware
+    backend — respects the f32 (8, 128) tile so Mosaic gets aligned blocks.
+    """
+    r = size // 2
+    halo = 2 * r
+    shapes = []
+    for bh in _CAND_H:
+        for bw in _CAND_W:
+            if bh % halo or bw % halo:
+                continue
+            if backend == "pallas-tpu" and (bh % 8 or bw % 128):
+                continue
+            # Bigger than the image in either dim is just the smaller sweep
+            # point plus padding waste; keep the smallest such block only.
+            if (bh >= 2 * h and bh != _CAND_H[0]) or (bw >= 2 * w and bw != _CAND_W[0]):
+                continue
+            if tile_vmem_bytes(bh, bw, r) > max_vmem_bytes:
+                continue
+            shapes.append((bh, bw))
+    return shapes
+
+
+def _run_shape(img, size, variant, directions, backend, bh, bw):
+    from repro.kernels.ops import sobel as pallas_sobel
+
+    return pallas_sobel(
+        img,
+        size=size,
+        directions=directions,
+        variant=variant,
+        block_h=bh,
+        block_w=bw,
+        interpret=(backend != "pallas-tpu"),
+    )
+
+
+def sweep(
+    h: int,
+    w: int,
+    *,
+    size: int = 5,
+    variant: str = "v2",
+    directions: int = 4,
+    dtype: str = "float32",
+    backend: str = "pallas-interpret",
+    shapes: Optional[Sequence[Tuple[int, int]]] = None,
+    iters: int = 3,
+    seed: int = 0,
+) -> List[Dict]:
+    """Time every candidate block shape on a random HxW image.
+
+    Returns one row per shape: ``{"block_h", "block_w", "us", "vmem_bytes",
+    "halo_overhead", "grid_steps"}`` — the structural columns of the paper's
+    Fig. 6 sweep, generalized to both block dimensions.
+    """
+    import jax.numpy as jnp
+
+    r = size // 2
+    if shapes is None:
+        shapes = legal_block_shapes(h, w, size=size, backend=backend)
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.integers(0, 256, (1, h, w)).astype(dtype))
+    rows = []
+    for bh, bw in shapes:
+        us = measure_us(
+            _run_shape, img, size, variant, directions, backend, bh, bw, iters=iters
+        )
+        gh, gw = -(-h // bh), -(-w // bw)
+        rows.append(
+            {
+                "block_h": bh,
+                "block_w": bw,
+                "us": us,
+                "vmem_bytes": tile_vmem_bytes(bh, bw, r),
+                "halo_overhead": halo_amplification(bh, bw, r),
+                "grid_steps": gh * gw,
+            }
+        )
+    return rows
+
+
+def autotune(
+    h: int,
+    w: int,
+    *,
+    size: int = 5,
+    variant: str = "v2",
+    directions: int = 4,
+    dtype: str = "float32",
+    backend: str = "pallas-interpret",
+    shapes: Optional[Sequence[Tuple[int, int]]] = None,
+    iters: int = 3,
+    cache: Optional[TuningCache] = None,
+    refresh: bool = False,
+    save: bool = True,
+) -> Tuple[int, int]:
+    """Best (block_h, block_w) for the workload; cached across processes.
+
+    Consults ``cache`` (default: the process-wide JSON cache) unless
+    ``refresh``; on a miss, sweeps the legal shapes, records the winner, and
+    persists the cache to disk (``save=False`` to skip, e.g. in tests).
+    """
+    cache = cache if cache is not None else get_default_cache()
+    key = TuneKey(backend, dtype, size, variant, h, w)
+    if not refresh:
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+    rows = sweep(
+        h, w, size=size, variant=variant, directions=directions,
+        dtype=dtype, backend=backend, shapes=shapes, iters=iters,
+    )
+    if not rows:
+        raise ValueError(f"no legal block shapes for {key.to_str()}")
+    best = min(rows, key=lambda r: r["us"])
+    cache.record(key, best["block_h"], best["block_w"], best["us"])
+    if save:
+        cache.save()
+    return best["block_h"], best["block_w"]

@@ -61,6 +61,9 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, cfg=None, rules=None) -> 
             return edge_detect(
                 images, size=cfg.sobel_size, directions=cfg.sobel_directions,
                 variant=cfg.sobel_variant, normalize=False,
+                backend=cfg.sobel_backend,
+                block_h=cfg.sobel_block_h or None,
+                block_w=cfg.sobel_block_w or None,
             )
 
         with mesh_context(mesh):

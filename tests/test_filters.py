@@ -1,6 +1,7 @@
 """Filter algebra (paper Eqs. 3, 5, 10, 14, 16, 18) — exact identities."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional [test] extra; module skips without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import filters as F

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional [test] extra; module skips without it
 from hypothesis import given, settings, strategies as st
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
@@ -76,7 +77,10 @@ def test_zero1_axes_add_data_dim():
     from repro.models import Model
     from jax.sharding import AbstractMesh
 
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    try:
+        mesh = AbstractMesh((4, 2), ("data", "model"))
+    except TypeError:  # jax<=0.4.x signature: AbstractMesh(((name, size), ...))
+        mesh = AbstractMesh((("data", 4), ("model", 2)))
     cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=8,
                       num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=32)
     m = Model(cfg)

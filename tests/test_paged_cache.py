@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional [test] extra; module skips without it
 from hypothesis import given, settings, strategies as st
 
 from repro.serve.paged import PagedKVCache

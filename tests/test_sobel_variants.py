@@ -3,6 +3,7 @@ identical — bit-exact in f32 for integer weights, allclose for arbitrary."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional [test] extra; module skips without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SobelParams, sobel, sobel_components

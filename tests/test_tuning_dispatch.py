@@ -1,0 +1,147 @@
+"""Block autotuner (JSON cache round-trip) + unified backend dispatch.
+
+No optional deps (runs without hypothesis).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sobel import sobel as core_sobel
+from repro.kernels import dispatch, tuning
+
+
+def _img(rng, shape):
+    return jnp.asarray(rng.integers(0, 256, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Legal shape enumeration
+# ---------------------------------------------------------------------------
+
+def test_legal_shapes_divisibility():
+    for size, halo in ((5, 4), (3, 2)):
+        shapes = tuning.legal_block_shapes(256, 256, size=size)
+        assert shapes
+        for bh, bw in shapes:
+            assert bh % halo == 0 and bw % halo == 0
+
+
+def test_legal_shapes_tpu_alignment():
+    shapes = tuning.legal_block_shapes(1024, 1024, size=5, backend="pallas-tpu")
+    assert shapes
+    for bh, bw in shapes:
+        assert bh % 8 == 0 and bw % 128 == 0
+
+
+def test_legal_shapes_respect_vmem_budget():
+    shapes = tuning.legal_block_shapes(8192, 8192, size=5, max_vmem_bytes=64 * 1024)
+    for bh, bw in shapes:
+        assert tuning.tile_vmem_bytes(bh, bw, 2) <= 64 * 1024
+
+
+def test_measure_us_positive():
+    us = tuning.measure_us(lambda x: x + 1, jnp.ones((8, 8)), iters=2)
+    assert us > 0
+
+
+# ---------------------------------------------------------------------------
+# Autotune + cache round-trip
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_roundtrip(tmp_path, rng):
+    """write -> reload -> dispatch picks the cached shape (the acceptance
+    path for the tuning subsystem)."""
+    path = str(tmp_path / "blocks.json")
+    cache = tuning.TuningCache(path)
+    shapes = [(8, 16), (16, 16)]
+    bh, bw = tuning.autotune(32, 48, shapes=shapes, iters=1, cache=cache)
+    assert (bh, bw) in shapes
+
+    # The JSON on disk round-trips through a fresh cache object.
+    raw = json.load(open(path))
+    assert any(k.endswith("/32x48") for k in raw if not k.startswith("__"))
+    reloaded = tuning.TuningCache(path)
+    key = tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 32, 48)
+    assert reloaded.lookup(key) == (bh, bw)
+
+    # A second autotune is a pure cache hit (no sweep: empty shape list ok).
+    assert tuning.autotune(32, 48, shapes=[], iters=1, cache=reloaded) == (bh, bw)
+
+    # Dispatch consults the cache...
+    got = dispatch.choose_block_shape(32, 48, backend="pallas-interpret", cache=reloaded)
+    assert got == (bh, bw, "tuned")
+    # ...and produces the reference output with the tuned shape.
+    img = _img(rng, (1, 32, 48))
+    out = dispatch.sobel(img, backend="pallas-interpret", tuning_cache=reloaded)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(core_sobel(img)))
+
+
+def test_choose_block_shape_priority(tmp_path):
+    cache = tuning.TuningCache(str(tmp_path / "c.json"))
+    # no entry -> default
+    bh, bw, src = dispatch.choose_block_shape(64, 512, backend="pallas-interpret", cache=cache)
+    assert src == "default" and bh and bw
+    # cached entry -> tuned
+    cache.record(tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 64, 512), 16, 32, 1.0)
+    assert dispatch.choose_block_shape(
+        64, 512, backend="pallas-interpret", cache=cache
+    ) == (16, 32, "tuned")
+    # explicit args always win
+    assert dispatch.choose_block_shape(
+        64, 512, backend="pallas-interpret", cache=cache, block_h=8, block_w=8
+    ) == (8, 8, "explicit")
+
+
+def test_cache_ignores_corrupt_file(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text("{not json")
+    cache = tuning.TuningCache(str(path))
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend():
+    assert dispatch.resolve_backend("xla") == "xla"
+    assert dispatch.resolve_backend("pallas-interpret") == "pallas-interpret"
+    # auto on a CPU test host -> xla
+    assert dispatch.resolve_backend(None) in ("xla", "pallas-tpu")
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("cuda")
+
+
+def test_dispatch_xla_is_core(rng):
+    img = _img(rng, (2, 33, 29))
+    out = dispatch.sobel(img, backend="xla")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(core_sobel(img)))
+
+
+@pytest.mark.parametrize("variant", ["direct", "separable", "v1", "v2"])
+def test_dispatch_backends_agree(variant, rng):
+    img = _img(rng, (1, 45, 61))
+    x = np.asarray(dispatch.sobel(img, variant=variant, backend="xla"))
+    p = np.asarray(
+        dispatch.sobel(img, variant=variant, backend="pallas-interpret",
+                       block_h=8, block_w=16)
+    )
+    np.testing.assert_array_equal(p, x)
+
+
+def test_fig6_sweeps_both_dims():
+    """fig6 must sweep block_h AND block_w through the tuner API."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks import fig6_blocksweep
+
+    rows = fig6_blocksweep.run(smoke=True)
+    hs = {r["name"].split("block_h=")[1].split("/")[0]
+          for r in rows if "block_h=" in r["name"]}
+    ws = {r["name"].split("block_w=")[1]
+          for r in rows if "block_w=" in r["name"]}
+    assert len(hs) > 1 and len(ws) > 1
