@@ -1,9 +1,17 @@
 """Analytic TPU roofline for the fused Sobel kernel (the paper's workload).
 
-The fused RG-v2 kernel is one-touch: reads the padded image once, writes the
-magnitude once. At ~82 MAC/px vs 8 bytes/px it sits far below the v5e knee
-(240 flop/byte), i.e. HBM-bound — the same conclusion the paper reaches on
-GPU ("our kernel is memory limited")."""
+The fused RG-v2 megakernel is one-touch: it reads the raw u8 frame once,
+writes the magnitude once. At ~82 MAC/px vs ~7 bytes/px it sits far below
+the v5e knee (240 flop/byte), i.e. HBM-bound — the same conclusion the paper
+reaches on GPU ("our kernel is memory limited"). That is why the zero-copy
+fusion (this repo's PR 2) is the dominant lever: the variant ladder trades
+VPU work, fusion halves the bytes.
+
+``edge_traffic`` itemizes HBM bytes/pixel of the full edge-detection
+pipeline for the legacy multi-pass path vs the fused megakernel; the same
+accounting appears as the DESIGN.md §3 table, and the ``pipeline/*`` rows
+below put the resulting memory-bound times side by side.
+"""
 from __future__ import annotations
 
 from typing import Dict, List
@@ -11,6 +19,47 @@ from typing import Dict, List
 from repro.roofline.constants import HBM_BW, PEAK_FLOPS_BF16
 
 MACS = {"direct": 200, "separable": 138, "v1": 96, "v2": 82}
+
+
+def edge_traffic(
+    fused: bool,
+    *,
+    rgb: bool = True,
+    u8: bool = True,
+    normalize: bool = True,
+    halo: float = 0.10,
+) -> Dict[str, float]:
+    """Itemized HBM bytes per output pixel of the edge-detection pipeline.
+
+    ``halo`` is the window re-read amplification of the tiled kernel read
+    (``repro.kernels.tiling.window_amplification``; ~0.1 for a 64x256 block
+    at r=2). The legacy path bills every materialized intermediate once per
+    side (XLA fuses elementwise chains, so gray->pad and max->rescale are
+    counted at their fusion boundaries, not per-op).
+    """
+    in_bpp = (3 if rgb else 1) * (1 if u8 else 4)
+    t: Dict[str, float] = {}
+    if fused:
+        t["read_frame"] = (1 + halo) * in_bpp
+        t["write_mag"] = 4.0
+        if normalize:
+            # block maxima ride out with the kernel; the rescale is one
+            # elementwise read+write pass
+            t["read_mag_rescale"] = 4.0
+            t["write_out"] = 4.0
+    else:
+        t["read_frame"] = in_bpp
+        t["write_gray"] = 4.0
+        t["read_gray"] = 4.0
+        t["write_padded"] = 4.0
+        t["read_padded"] = (1 + halo) * 4.0
+        t["write_mag"] = 4.0
+        if normalize:
+            t["read_mag_max"] = 4.0
+            t["read_mag_rescale"] = 4.0
+            t["write_out"] = 4.0
+    t["total"] = sum(t.values())
+    return t
 
 
 def run() -> List[Dict]:
@@ -27,11 +76,30 @@ def run() -> List[Dict]:
                 {
                     "name": f"roofline_sobel/{variant}/{n}x{n}",
                     "us_per_call": bound * 1e6,
+                    "variant": variant,
                     "derived": (
                         f"compute_us={comp_t*1e6:.1f};memory_us={mem_t*1e6:.1f};"
                         f"bound={'memory' if mem_t >= comp_t else 'compute'};"
                         f"intensity={2*macs/8.0:.1f}flop/B"
                     ),
+                }
+            )
+        # Full-pipeline HBM accounting: legacy multi-pass vs fused megakernel
+        legacy = edge_traffic(fused=False)
+        fused = edge_traffic(fused=True)
+        for path, t in (("legacy", legacy), ("fused", fused)):
+            mem_us = t["total"] * px / HBM_BW * 1e6
+            rows.append(
+                {
+                    "name": f"roofline_sobel/pipeline/{path}/{n}x{n}",
+                    "us_per_call": mem_us,
+                    "variant": "v2",
+                    "derived": (
+                        f"bytes_per_px={t['total']:.1f};"
+                        f"traffic_ratio={legacy['total'] / fused['total']:.2f};"
+                        f"path={path}"
+                    ),
+                    "config": {k: round(v, 2) for k, v in t.items()},
                 }
             )
     return rows

@@ -1,8 +1,10 @@
 """Benchmark harness: one module per paper table/figure + roofline summaries.
 
 Emits ``name,us_per_call,derived`` CSV (one line per measurement) to stdout
-and, with ``--out``, to a file — the CI bench-smoke job uploads that CSV as
-a per-PR artifact.
+and, with ``--out``, to a file. With ``--smoke`` (or an explicit ``--json``)
+it also writes a machine-readable ``BENCH_<tag>.json`` — per-row µs,
+backend, variant, and the parsed config/derived fields — which the CI
+bench-smoke job uploads per PR so the perf trajectory is tracked across PRs.
 
 ``--smoke`` runs suites that support it on tiny shapes (CI-sized smoke
 signal rather than a real measurement).
@@ -11,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import os
 import sys
 
@@ -23,6 +26,39 @@ def _run_suite(mod, smoke: bool):
     if smoke and "smoke" in inspect.signature(mod.run).parameters:
         return mod.run(smoke=True)
     return mod.run()
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` -> dict, floats where they parse."""
+    out = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def _json_rows(suite: str, rows) -> list:
+    import jax
+
+    default_backend = jax.default_backend()
+    out = []
+    for row in rows:
+        out.append(
+            {
+                "name": row["name"],
+                "us_per_call": round(float(row["us_per_call"]), 3),
+                "backend": row.get("backend", default_backend),
+                "variant": row.get("variant"),
+                "config": {**_parse_derived(row.get("derived", "")),
+                           **row.get("config", {})},
+            }
+        )
+    return out
 
 
 def main() -> None:
@@ -49,22 +85,49 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI smoke runs")
     ap.add_argument("--out", default=None, help="also write the CSV here")
+    ap.add_argument("--tag", default=None,
+                    help="tag for the BENCH_<tag>.json artifact "
+                         "(default: the suite name, or 'all')")
+    ap.add_argument("--json", default=None,
+                    help="explicit path for the JSON artifact "
+                         "(default: BENCH_<tag>.json when --smoke)")
     args = ap.parse_args()
     names = [s for s, _ in suites]
     if args.suite and args.suite not in names:
         ap.error(f"unknown suite {args.suite!r}; choose from {names}")
 
     lines = ["name,us_per_call,derived"]
+    by_suite = {}
     for name, mod in suites:
         if args.suite and args.suite != name:
             continue
-        for row in _run_suite(mod, args.smoke):
+        rows = _run_suite(mod, args.smoke)
+        by_suite[name] = _json_rows(name, rows)
+        for row in rows:
             lines.append(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
     csv = "\n".join(lines) + "\n"
     print(csv, end="")
     if args.out:
         with open(args.out, "w") as f:
             f.write(csv)
+
+    json_path = args.json
+    if json_path is None and args.smoke:
+        tag = args.tag or args.suite or "all"
+        json_path = f"BENCH_{tag}.json"
+    if json_path:
+        import jax
+
+        payload = {
+            "tag": args.tag or args.suite or "all",
+            "smoke": bool(args.smoke),
+            "jax_backend": jax.default_backend(),
+            "suites": by_suite,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

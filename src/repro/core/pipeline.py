@@ -1,8 +1,14 @@
 """End-to-end edge-detection pipeline (the paper's full workload).
 
-gray conversion -> padding -> multi-directional Sobel -> RSS magnitude ->
-normalization, batched over images, optionally sharded over a device mesh
-(batch -> data axes, image rows -> model axis).
+gray conversion -> in-kernel boundary handling -> multi-directional Sobel ->
+RSS magnitude -> normalization, batched over images, optionally sharded over
+a device mesh (batch -> data axes, image rows -> model axis).
+
+On the Pallas backends the whole chain is ONE fused zero-copy kernel launch
+(``repro.kernels.dispatch.edge_detect``): the raw u8 frame is read from HBM
+exactly once, luma and padding happen per-tile in VMEM, and normalization
+rides on per-block maxima emitted by the kernel. The ``xla`` backend keeps
+the legacy multi-pass pipeline; outputs are bit-exact across backends.
 
 This is also registered as the ``sobel_hd`` architecture for the dry-run:
 ``serve_step`` = one batched edge-detection pass.
@@ -25,9 +31,25 @@ _LUMA = (0.299, 0.587, 0.114)
 
 
 def rgb_to_gray(images: jnp.ndarray) -> jnp.ndarray:
-    """(..., H, W, 3) uint8/float -> (..., H, W) float32 grayscale."""
+    """(..., H, W, 3) uint8/float -> (..., H, W) float32 grayscale.
+
+    Each product is passed through ``maximum(w * c, -FLT_MAX)`` — an exact
+    identity for every finite value (negative channels included) that the
+    XLA algebraic simplifier cannot fold — so XLA cannot contract the
+    multiplies into FMAs. Without it, jit-fused XLA and the Pallas
+    megakernel (which computes the same luma per-tile in VMEM, see
+    ``repro.kernels.tiling.luma``) round a small fraction of pixels 1 ulp
+    apart, breaking cross-backend bit-exactness — the same FMA-proofing trick
+    as ``repro.core.sobel._tap`` / ``magnitude``.
+    """
+    from repro.core.sobel import _F32_LOWEST
+
     x = images.astype(jnp.float32)
-    return _LUMA[0] * x[..., 0] + _LUMA[1] * x[..., 1] + _LUMA[2] * x[..., 2]
+    lo = jnp.float32(_F32_LOWEST)
+    return (
+        jnp.maximum(_LUMA[0] * x[..., 0], lo)
+        + jnp.maximum(_LUMA[1] * x[..., 1], lo)
+    ) + jnp.maximum(_LUMA[2] * x[..., 2], lo)
 
 
 def edge_detect(
@@ -50,34 +72,28 @@ def edge_detect(
       normalize: scale magnitudes into [0, 255] (per image) and saturate —
         the display form used for the paper's Fig. 1/7 outputs.
       backend: ``repro.kernels.dispatch`` backend (``auto`` / ``pallas-tpu``
-        / ``pallas-interpret`` / ``xla``); None = auto.
+        / ``pallas-interpret`` / ``xla``); None = auto. Pallas backends run
+        the whole pipeline as one fused zero-copy kernel launch.
       block_h, block_w: Pallas tile override; None = tuning cache / default.
     Returns:
       ``(..., H, W)`` float32 edge image.
     """
     # Imported here: repro.core must stay importable without repro.kernels
     # (kernels itself builds on repro.core.sobel).
-    from repro.kernels.dispatch import sobel as dispatch_sobel
+    from repro.kernels.dispatch import edge_detect as dispatch_edge
 
-    if images.ndim >= 3 and images.shape[-1] == 3:
-        gray = rgb_to_gray(images)
-    else:
-        gray = images.astype(jnp.float32)
-    g = dispatch_sobel(
-        gray,
+    return dispatch_edge(
+        images,
         size=size,
         directions=directions,
         variant=variant,
         params=params,
         padding=padding,
+        normalize=normalize,
         backend=backend,
         block_h=block_h,
         block_w=block_w,
     )
-    if normalize:
-        peak = jnp.max(g, axis=(-2, -1), keepdims=True)
-        g = g * (255.0 / jnp.maximum(peak, 1e-8))
-    return g
 
 
 def make_sharded_edge_fn(

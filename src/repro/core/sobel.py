@@ -38,6 +38,26 @@ VARIANTS = ("direct", "separable", "v1", "v2")
 # paper's register taps; XLA fuses these into single vectorized expressions)
 # ---------------------------------------------------------------------------
 
+# Most negative finite f32. ``maximum(t, _F32_LOWEST)`` is an exact identity
+# for every finite t that the XLA algebraic simplifier cannot fold (only the
+# true identity element -inf is folded), so a tap product wrapped in it can
+# never be contracted into an FMA with the accumulating add. Integer-valued
+# images don't need this (their tap products are exact either way), but the
+# fused RGB megakernel feeds non-integer luma values through these passes,
+# and eager, jit, and Pallas executions must round identically for the
+# repo's bit-exactness contract (same reasoning as ``magnitude`` below).
+_F32_LOWEST = float(np.finfo(np.float32).min)
+
+
+def _tap(term: jnp.ndarray, w: float) -> jnp.ndarray:
+    """``w * term`` with FMA contraction blocked (±1 taps skip the mul)."""
+    if w == 1.0:
+        return term
+    if w == -1.0:
+        return -term
+    return jnp.maximum(w * term, jnp.float32(_F32_LOWEST))
+
+
 def _hpass(x: jnp.ndarray, taps: np.ndarray, out_w: int) -> jnp.ndarray:
     """Horizontal correlation: out[..., y, j] = sum_t taps[t] * x[..., y, j+t].
 
@@ -47,8 +67,10 @@ def _hpass(x: jnp.ndarray, taps: np.ndarray, out_w: int) -> jnp.ndarray:
     for t, w in enumerate(np.asarray(taps).tolist()):
         if w == 0.0:
             continue
-        term = x[..., :, t : t + out_w]
-        term = term if w == 1.0 else (-term if w == -1.0 else w * term)
+        # lax.slice_in_dim, not x[..., :, t:t+out_w]: the mixed
+        # Ellipsis/colon form lowers to a gather, which Mosaic can't compile
+        # inside the Pallas kernels (a static slice is also faster on XLA).
+        term = _tap(jax.lax.slice_in_dim(x, t, t + out_w, axis=-1), w)
         acc = term if acc is None else acc + term
     if acc is None:
         return jnp.zeros(x.shape[:-1] + (out_w,), x.dtype)
@@ -61,8 +83,7 @@ def _vpass(x: jnp.ndarray, taps: np.ndarray, out_h: int) -> jnp.ndarray:
     for t, w in enumerate(np.asarray(taps).tolist()):
         if w == 0.0:
             continue
-        term = x[..., t : t + out_h, :]
-        term = term if w == 1.0 else (-term if w == -1.0 else w * term)
+        term = _tap(jax.lax.slice_in_dim(x, t, t + out_h, axis=-2), w)
         acc = term if acc is None else acc + term
     if acc is None:
         return jnp.zeros(x.shape[:-2] + (out_h,) + x.shape[-1:], x.dtype)
@@ -78,8 +99,11 @@ def _correlate2d(x: jnp.ndarray, kernel: np.ndarray, out_h: int, out_w: int) -> 
             w = float(kernel[i, j])
             if w == 0.0:
                 continue
-            term = x[..., i : i + out_h, j : j + out_w]
-            term = term if w == 1.0 else (-term if w == -1.0 else w * term)
+            term = jax.lax.slice_in_dim(
+                jax.lax.slice_in_dim(x, i, i + out_h, axis=-2),
+                j, j + out_w, axis=-1,
+            )
+            term = _tap(term, w)
             acc = term if acc is None else acc + term
     assert acc is not None
     return acc
@@ -110,13 +134,12 @@ def _gd_plus(xp, p: SobelParams, h, w):
     k0, k1 = F.kd_plus_rows(p)
     fk0 = _hpass(xp, k0, w)
     fk1 = _hpass(xp, k1, w)
+
+    def row(f, t):
+        return jax.lax.slice_in_dim(f, t, t + h, axis=-2)
+
     # G_d+[v] = Fk0[v-2] + Fk1[v-1] - Fk1[v+1] - Fk0[v+2]
-    return (
-        fk0[..., 0 : 0 + h, :]
-        + fk1[..., 1 : 1 + h, :]
-        - fk1[..., 3 : 3 + h, :]
-        - fk0[..., 4 : 4 + h, :]
-    )
+    return row(fk0, 0) + row(fk1, 1) - row(fk1, 3) - row(fk0, 4)
 
 
 def _gd_minus_v1(xp, p: SobelParams, h, w):
@@ -126,13 +149,11 @@ def _gd_minus_v1(xp, p: SobelParams, h, w):
     f0 = _hpass(xp, r0, w)
     f1 = _hpass(xp, r1, w)
     f2 = _hpass(xp, r2, w)
-    return (
-        f0[..., 0 : 0 + h, :]
-        + f1[..., 1 : 1 + h, :]
-        + f2[..., 2 : 2 + h, :]
-        + f1[..., 3 : 3 + h, :]
-        + f0[..., 4 : 4 + h, :]
-    )
+
+    def row(f, t):
+        return jax.lax.slice_in_dim(f, t, t + h, axis=-2)
+
+    return row(f0, 0) + row(f1, 1) + row(f2, 2) + row(f1, 3) + row(f0, 4)
 
 
 def _gd_minus_v2(f, xp, p: SobelParams, h, w):

@@ -1,11 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot-spot (the Sobel operator).
 
 Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
-(jit'd public wrappers), ``ref.py`` (pure-jnp oracle), ``tiling.py`` (2-D
-tile/halo geometry), ``tuning.py`` (block-shape autotuner + JSON cache),
-``dispatch.py`` (backend routing: pallas-tpu / pallas-interpret / xla).
+(jit'd public wrappers incl. the fused gray->Sobel->normalize
+``edge_pipeline`` megakernel), ``ref.py`` (pure-jnp oracle), ``tiling.py``
+(zero-copy clamped-window geometry + in-kernel boundary handling),
+``tuning.py`` (block-shape autotuner + JSON cache), ``dispatch.py``
+(backend routing: pallas-tpu / pallas-interpret / xla).
 """
 from repro.kernels import dispatch, tuning  # noqa: F401
 from repro.kernels.dispatch import sobel as sobel_dispatch  # noqa: F401
-from repro.kernels.ops import sobel  # noqa: F401
+from repro.kernels.ops import edge_pipeline, sobel  # noqa: F401
 from repro.kernels.ref import sobel_ref  # noqa: F401

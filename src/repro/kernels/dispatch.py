@@ -2,8 +2,8 @@
 
 One entry point, three execution backends:
 
-  * ``pallas-tpu``       — the fused 2-D tiled Pallas kernel, compiled by
-                           Mosaic (the production TPU path).
+  * ``pallas-tpu``       — the fused zero-copy Pallas megakernel, compiled
+                           by Mosaic (the production TPU path).
   * ``pallas-interpret`` — the same kernel through the Pallas interpreter
                            (CPU correctness path; bit-exact vs the kernel).
   * ``xla``              — ``repro.core.sobel`` (pure XLA; fastest on CPU,
@@ -12,10 +12,21 @@ One entry point, three execution backends:
 ``backend=None``/``"auto"`` resolves to ``pallas-tpu`` on TPU hosts and
 ``xla`` elsewhere. For the Pallas backends, block shapes come from (in
 order): explicit ``block_h``/``block_w`` arguments, the tuning cache
-(``repro.kernels.tuning``), then a conservative default.
+(``repro.kernels.tuning``, keyed by backend/dtype/size/variant/padding/
+layout/H/W), then a conservative default.
+
+Two entry points:
+
+  * :func:`sobel`       — magnitude on grayscale input (mirrors
+                          ``repro.core.sobel.sobel``).
+  * :func:`edge_detect` — the full pipeline (RGB->gray, Sobel, normalize).
+                          On the Pallas backends this is ONE fused launch
+                          with zero HBM-side data preparation; on ``xla`` it
+                          is the legacy multi-pass pipeline.
 
 All backends are mathematically identical; for integer-weight params the
-outputs are bit-exact across backends (see ``repro.core.sobel.magnitude``).
+outputs are bit-exact across backends (see ``repro.core.sobel.magnitude``
+and ``repro.kernels.tiling.luma``).
 """
 from __future__ import annotations
 
@@ -29,7 +40,13 @@ from repro.core.sobel import sobel as xla_sobel
 from repro.kernels import ops
 from repro.kernels import tuning
 
-__all__ = ["BACKENDS", "resolve_backend", "choose_block_shape", "sobel"]
+__all__ = [
+    "BACKENDS",
+    "resolve_backend",
+    "choose_block_shape",
+    "sobel",
+    "edge_detect",
+]
 
 BACKENDS = ("auto", "pallas-tpu", "pallas-interpret", "xla")
 
@@ -52,6 +69,8 @@ def choose_block_shape(
     variant: str = "v2",
     dtype: str = "float32",
     backend: str = "pallas-interpret",
+    padding: str = "reflect",
+    layout: str = "gray",
     block_h: Optional[int] = None,
     block_w: Optional[int] = None,
     cache: Optional[tuning.TuningCache] = None,
@@ -64,12 +83,19 @@ def choose_block_shape(
     if block_h and block_w:
         return block_h, block_w, "explicit"
     cache = cache if cache is not None else tuning.get_default_cache()
-    hit = cache.lookup(tuning.TuneKey(backend, dtype, size, variant, h, w))
+    hit = cache.lookup(
+        tuning.TuneKey(backend, dtype, size, variant, h, w, padding, layout)
+    )
     if hit is not None:
         bh, bw = hit
         return block_h or bh, block_w or bw, "tuned"
     dbh, dbw = ops.default_block_shape(h, w, size)
     return block_h or dbh, block_w or dbw, "default"
+
+
+def _kernel_dtype_name(x: jnp.ndarray) -> str:
+    """Dtype the kernel will actually see in HBM (ops.py dtype policy)."""
+    return "uint8" if x.dtype == jnp.uint8 else "float32"
 
 
 def sobel(
@@ -96,14 +122,70 @@ def sobel(
             image, size=size, directions=directions, variant=variant,
             params=params, padding=padding,
         )
+    image = jnp.asarray(image)
     h, w = image.shape[-2], image.shape[-1]
     bh, bw, _src = choose_block_shape(
         h, w, size=size, variant=variant,
-        dtype=jnp.asarray(image).dtype.name,
-        backend=b, block_h=block_h, block_w=block_w, cache=tuning_cache,
+        dtype=_kernel_dtype_name(image),
+        backend=b, padding=padding, layout="gray",
+        block_h=block_h, block_w=block_w, cache=tuning_cache,
     )
     return ops.sobel(
         image, size=size, directions=directions, variant=variant,
         params=params, padding=padding, block_h=bh, block_w=bw,
         interpret=(b == "pallas-interpret"),
+    )
+
+
+def edge_detect(
+    images: jnp.ndarray,
+    *,
+    size: int = 5,
+    directions: int = 4,
+    variant: str = "v2",
+    params: SobelParams = SobelParams(),
+    padding: str = "reflect",
+    normalize: bool = True,
+    backend: Optional[str] = None,
+    block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
+    tuning_cache: Optional[tuning.TuningCache] = None,
+) -> jnp.ndarray:
+    """Full edge-detection pipeline, routed to the best backend.
+
+    On the Pallas backends the whole pipeline — RGB->luma, boundary
+    handling, multi-directional Sobel, per-block maxima for normalization —
+    is one fused kernel launch over the raw frame (see
+    ``repro.kernels.ops.edge_pipeline``); the ``xla`` backend runs the
+    legacy multi-pass pipeline. Outputs are bit-exact across backends.
+    """
+    b = resolve_backend(backend)
+    images = jnp.asarray(images)
+    rgb = images.ndim >= 3 and images.shape[-1] == 3
+    if b == "xla":
+        from repro.core.pipeline import rgb_to_gray
+
+        gray = rgb_to_gray(images) if rgb else images.astype(jnp.float32)
+        g = xla_sobel(
+            gray, size=size, directions=directions, variant=variant,
+            params=params, padding=padding,
+        )
+        if normalize:
+            peak = jnp.max(g, axis=(-2, -1), keepdims=True)
+            g = g * (255.0 / jnp.maximum(peak, 1e-8))
+        return g
+    if rgb:
+        h, w = images.shape[-3], images.shape[-2]
+    else:
+        h, w = images.shape[-2], images.shape[-1]
+    bh, bw, _src = choose_block_shape(
+        h, w, size=size, variant=variant,
+        dtype=_kernel_dtype_name(images),
+        backend=b, padding=padding, layout="rgb" if rgb else "gray",
+        block_h=block_h, block_w=block_w, cache=tuning_cache,
+    )
+    return ops.edge_pipeline(
+        images, size=size, directions=directions, variant=variant,
+        params=params, padding=padding, normalize=normalize,
+        block_h=bh, block_w=bw, interpret=(b == "pallas-interpret"),
     )

@@ -1,9 +1,17 @@
-"""Public jit'd entry points for the Pallas Sobel kernels.
+"""Public jit'd entry points for the fused Pallas Sobel kernels.
 
-Handles: arbitrary image sizes (pads H and W to block multiples and slices
-back), batch-dim normalization, boundary padding modes, dtype casting, and
-interpret-mode selection (Pallas kernels execute in interpret mode on CPU —
-the TPU is the target, CPU validates correctness).
+Zero HBM-side data preparation: the kernels read the raw, unpadded frame
+(u8 stays u8 through the HBM->VMEM DMA) and handle boundary padding and
+ragged sizes in-kernel, so this module no longer pads, slices, or stages
+anything — it only normalizes batch dims and dtypes and picks defaults.
+
+Dtype policy (the kernel casts per-block in VMEM):
+  * ``uint8``            — kept as-is: 4x less input traffic than f32 (the
+                           paper's images are 8-bit).
+  * other integers/bools — cast to float32 here (a previous revision let
+                           int16/int32 flow raw into the kernel path).
+  * floats               — cast to float32 (f64 inputs are narrowed; the
+                           kernels compute in f32 everywhere).
 
 Block-shape selection lives one level up in ``repro.kernels.dispatch`` (which
 consults the ``repro.kernels.tuning`` cache); this module takes explicit
@@ -20,16 +28,12 @@ from repro.core.filters import SobelParams
 from repro.kernels.sobel3x3 import sobel3x3_pallas
 from repro.kernels.sobel5x5 import sobel5x5_pallas
 
-__all__ = ["sobel", "default_interpret", "default_block_shape"]
+__all__ = ["sobel", "edge_pipeline", "default_interpret", "default_block_shape"]
 
 
 def default_interpret() -> bool:
     """Interpret (CPU emulation) unless running on a real TPU."""
     return jax.default_backend() != "tpu"
-
-
-def _pad_mode(padding: str) -> str:
-    return {"reflect": "reflect", "edge": "edge", "zero": "constant"}[padding]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -39,11 +43,59 @@ def _round_up(x: int, m: int) -> int:
 def default_block_shape(h: int, w: int, size: int = 5) -> tuple:
     """Conservative (block_h, block_w) when no tuned shape is available.
 
-    Multiples of 8 satisfy the halo-divisibility rule for both 3x3 (2r = 2)
-    and 5x5 (2r = 4) and the f32 sublane tile; 256 lanes = 2 VPU lane tiles.
-    Small images shrink the block instead of padding up to it.
+    Multiples of 8 match the f32 sublane tile; 256 lanes = 2 VPU lane tiles.
+    Small images shrink the block instead of spilling into masked overhang.
     """
     return min(64, _round_up(h, 8)), min(256, _round_up(w, 8))
+
+
+def _kernel_dtype(x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the module-level dtype policy (see docstring)."""
+    if x.dtype == jnp.uint8:
+        return x
+    return x.astype(jnp.float32)
+
+
+def _kernel_call(
+    x: jnp.ndarray,
+    *,
+    size: int,
+    directions: int,
+    variant: str,
+    params: SobelParams,
+    padding: str,
+    block_h: int,
+    block_w: int,
+    rgb: bool,
+    with_max: bool,
+    interpret: bool,
+):
+    if size == 5:
+        return sobel5x5_pallas(
+            x,
+            variant=variant,
+            params=params,
+            directions=directions,
+            padding=padding,
+            block_h=block_h,
+            block_w=block_w,
+            rgb=rgb,
+            with_max=with_max,
+            interpret=interpret,
+        )
+    if size == 3:
+        return sobel3x3_pallas(
+            x,
+            variant=variant if variant in ("direct", "separable") else "separable",
+            directions=directions,
+            padding=padding,
+            block_h=block_h,
+            block_w=block_w,
+            rgb=rgb,
+            with_max=with_max,
+            interpret=interpret,
+        )
+    raise ValueError(f"size must be 3 or 5, got {size}")
 
 
 def sobel(
@@ -58,59 +110,91 @@ def sobel(
     block_w: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Fused Pallas multi-directional Sobel magnitude.
+    """Fused Pallas multi-directional Sobel magnitude on grayscale input.
 
     Args mirror :func:`repro.core.sobel.sobel`; output is identical (same-size
     ``(..., H, W)`` float32 magnitude).
     """
     if interpret is None:
         interpret = default_interpret()
-    r = size // 2
-    # Integer (u8) images stay integer through padding and the HBM->VMEM DMA —
-    # the kernel casts per-block in VMEM. 4x less input traffic (the paper's
-    # images are 8-bit; see EXPERIMENTS.md §Perf sobel iteration 4).
-    if jnp.issubdtype(image.dtype, jnp.integer):
-        x = image.astype(jnp.uint8) if image.dtype == jnp.uint8 else image
-    else:
-        x = image.astype(jnp.float32)
+    x = _kernel_dtype(image)
     batch_shape = x.shape[:-2]
     h, w = x.shape[-2], x.shape[-1]
     x = x.reshape((-1, h, w))
 
     dbh, dbw = default_block_shape(h, w, size)
-    bh = block_h if block_h else dbh
-    bw = block_w if block_w else dbw
-
-    # Boundary padding (same-size output), then bottom/right fill to block
-    # multiples (the fill rows/cols only feed output pixels that are sliced
-    # off).
-    xp = jnp.pad(x, [(0, 0), (r, r), (r, r)], mode=_pad_mode(padding))
-    extra_h = (-h) % bh
-    extra_w = (-w) % bw
-    if extra_h or extra_w:
-        xp = jnp.pad(xp, [(0, 0), (0, extra_h), (0, extra_w)], mode="constant")
-
-    if size == 5:
-        out = sobel5x5_pallas(
-            xp,
-            variant=variant,
-            params=params,
-            directions=directions,
-            block_h=bh,
-            block_w=bw,
-            interpret=interpret,
-        )
-    elif size == 3:
-        out = sobel3x3_pallas(
-            xp,
-            variant=variant if variant in ("direct", "separable") else "separable",
-            directions=directions,
-            block_h=bh,
-            block_w=bw,
-            interpret=interpret,
-        )
-    else:
-        raise ValueError(f"size must be 3 or 5, got {size}")
-
-    out = out[:, :h, :w]
+    out = _kernel_call(
+        x,
+        size=size,
+        directions=directions,
+        variant=variant,
+        params=params,
+        padding=padding,
+        block_h=block_h or dbh,
+        block_w=block_w or dbw,
+        rgb=False,
+        with_max=False,
+        interpret=interpret,
+    )
     return out.reshape(batch_shape + (h, w))
+
+
+def edge_pipeline(
+    images: jnp.ndarray,
+    *,
+    size: int = 5,
+    directions: int = 4,
+    variant: str = "v2",
+    params: SobelParams = SobelParams(),
+    padding: str = "reflect",
+    normalize: bool = True,
+    block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Full edge-detection pipeline as one fused Pallas launch.
+
+    ``images``: ``(..., H, W)`` grayscale or ``(..., H, W, 3)`` RGB, u8 or
+    float. The megakernel reads each frame from HBM exactly once (as u8 when
+    the input is u8), converts RGB to BT.601 luma per-tile in VMEM, applies
+    the boundary rule in-kernel, writes the magnitude exactly once, and —
+    when ``normalize`` — also emits per-block maxima so the [0, 255] rescale
+    is a single cheap elementwise pass instead of a full extra reduction
+    read. Output matches :func:`repro.core.pipeline.edge_detect` bit-exactly.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    rgb = images.ndim >= 3 and images.shape[-1] == 3
+    x = _kernel_dtype(images)
+    if rgb:
+        batch_shape = x.shape[:-3]
+        h, w = x.shape[-3], x.shape[-2]
+        x = x.reshape((-1, h, w, 3))
+    else:
+        batch_shape = x.shape[:-2]
+        h, w = x.shape[-2], x.shape[-1]
+        x = x.reshape((-1, h, w))
+
+    dbh, dbw = default_block_shape(h, w, size)
+    out = _kernel_call(
+        x,
+        size=size,
+        directions=directions,
+        variant=variant,
+        params=params,
+        padding=padding,
+        block_h=block_h or dbh,
+        block_w=block_w or dbw,
+        rgb=rgb,
+        with_max=normalize,
+        interpret=interpret,
+    )
+    if normalize:
+        g, bmax = out
+        # Max-of-block-maxes == max over the image (exact); the rescale
+        # expression matches the legacy pipeline op-for-op for bit-exactness.
+        peak = jnp.max(bmax, axis=(-2, -1), keepdims=True)
+        g = g * (255.0 / jnp.maximum(peak, 1e-8))
+    else:
+        g = out
+    return g.reshape(batch_shape + (h, w))

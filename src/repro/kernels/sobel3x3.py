@@ -1,7 +1,9 @@
 """Pallas TPU kernel: classical 3x3 Sobel (paper Table 1 "3x3" baseline rows).
 
-Same 2-D tile/halo pipeline as ``sobel5x5`` with r = 1 (2-wide halo in both
-dimensions); see ``repro.kernels.tiling`` for the geometry.
+Same fused zero-copy pipeline as ``sobel5x5`` with r = 1: one clamped
+``pl.Unblocked`` window per grid step over the raw unpadded frame, boundary
+padding and ragged edges handled in-kernel, optional per-tile BT.601 luma and
+per-block max; see ``repro.kernels.tiling`` for the geometry.
 """
 from __future__ import annotations
 
@@ -11,10 +13,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import filters as F
 from repro.core.sobel import _correlate2d, _hpass, _vpass, magnitude
-from repro.kernels.tiling import assemble_tile, tile_in_specs, validate_block_shape
+from repro.kernels.tiling import (
+    ALIGN_INTERPRET,
+    ALIGN_TPU_GRAY,
+    ALIGN_TPU_RGB,
+    extend_tile,
+    luma,
+    valid_mask,
+    window_spec,
+)
 
 __all__ = ["sobel3x3_pallas"]
 
@@ -37,47 +48,97 @@ def _tile_components(x, variant: str, bh: int, w: int, directions: int):
 
 
 def _kernel(
-    x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref, o_ref,
-    *, variant, directions, bh, bw,
+    x_ref, *o_refs,
+    variant, directions, bh, bw, h, w, padding, rgb, with_max,
 ):
-    x = assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref)
-    comps = _tile_components(x, variant, bh, bw, directions)
-    o_ref[0] = magnitude(comps)
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    x = luma(x_ref[0]) if rgb else x_ref[0].astype(jnp.float32)
+    y = extend_tile(
+        x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=_R, padding=padding
+    )
+    mag = magnitude(_tile_components(y, variant, bh, bw, directions))
+    o_refs[0][0] = mag
+    if with_max:
+        masked = jnp.where(
+            valid_mask(k, j, h, w, bh, bw), mag, jnp.float32(0.0)
+        )
+        o_refs[1][0, k, j] = jnp.max(masked)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("variant", "directions", "block_h", "block_w", "interpret"),
+    static_argnames=(
+        "variant",
+        "directions",
+        "padding",
+        "block_h",
+        "block_w",
+        "rgb",
+        "with_max",
+        "interpret",
+    ),
 )
 def sobel3x3_pallas(
-    padded: jnp.ndarray,
+    x: jnp.ndarray,
     *,
     variant: str = "separable",
     directions: int = 2,
+    padding: str = "reflect",
     block_h: int = 64,
     block_w: int | None = None,
+    rgb: bool = False,
+    with_max: bool = False,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """(N, H + 2, W + 2) padded float32 -> (N, H, W) magnitude."""
+):
+    """Raw ``(N, H, W)`` gray or ``(N, H, W, 3)`` RGB -> ``(N, H, W)``
+    magnitude (plus ``(N, gh, gw)`` block maxes when ``with_max``)."""
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}")
-    n, hp, wp = padded.shape
-    h, w = hp - 2, wp - 2
-    # block_w=None keeps the seed's row-strip behavior: one full-width tile.
-    bh, bw = block_h, block_w if block_w else w
-    validate_block_shape(h, w, bh, bw, _R)
-    grid = (n, h // bh, w // bw)
-    in_specs = tile_in_specs(bh, bw, _R)
-    out_specs = pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))
-    out_shape = jax.ShapeDtypeStruct((n, h, w), jnp.float32)
-    kernel = functools.partial(
-        _kernel, variant=variant, directions=directions, bh=bh, bw=bw
+    if rgb:
+        n, h, w, _c = x.shape
+    else:
+        n, h, w = x.shape
+    bh = block_h
+    bw = block_w if block_w else w
+    gh, gw = pl.cdiv(h, bh), pl.cdiv(w, bw)
+    grid = (n, gh, gw)
+
+    if interpret:
+        align = ALIGN_INTERPRET
+    else:
+        align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
+    in_spec = window_spec(
+        h, w, bh, bw, _R, align=align, channels=3 if rgb else None
     )
-    return pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))]
+    out_shape = [jax.ShapeDtypeStruct((n, h, w), jnp.float32)]
+    if with_max:
+        out_specs.append(
+            pl.BlockSpec(
+                (1, gh, gw), lambda i, k, j: (i, 0, 0), memory_space=pltpu.SMEM
+            )
+        )
+        out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
+
+    kernel = functools.partial(
+        _kernel,
+        variant=variant,
+        directions=directions,
+        bh=bh,
+        bw=bw,
+        h=h,
+        w=w,
+        padding=padding,
+        rgb=rgb,
+        with_max=with_max,
+    )
+    out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=in_specs,
+        in_specs=[in_spec],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(padded, padded, padded, padded)
+    )(x)
+    return tuple(out) if with_max else out[0]

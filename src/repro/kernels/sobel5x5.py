@@ -4,11 +4,12 @@ GPU -> TPU mapping (see DESIGN.md §2):
 
   * paper's CUDA-block tile ownership + 2r overlap (§4.3.1)  ->  2-D tiled
     grid: step (k, j) owns the ``block_h x block_w`` output tile and reads a
-    ``(block_h + 4, block_w + 4)`` input tile via four BlockSpec views (main,
-    right halo, bottom halo, corner — see ``repro.kernels.tiling``). VMEM per
-    step is O(block_h * block_w), independent of image width, so 4K/8K frames
-    run with the same footprint as 1080p. Halo re-read amplification is
-    (1 + 4/bh)(1 + 4/bw) - 1, the paper's overlap cost in both dimensions.
+    clamped, possibly overlapping window of the *raw unpadded* image via one
+    ``pl.Unblocked`` BlockSpec (see ``repro.kernels.tiling``). Boundary
+    padding (reflect/edge/zero) and ragged edges are handled inside the
+    kernel, so the array in HBM is the camera frame itself — zero staging
+    copies. VMEM per step is O(block_h * block_w), independent of image
+    width.
   * warp-shuffle register taps (§4.3.3)                      ->  static strided
     slices of the VMEM-resident tile feeding the VPU.
   * explicit prefetch of the next row (§4.3.4)               ->  Pallas's
@@ -18,19 +19,18 @@ GPU -> TPU mapping (see DESIGN.md §2):
     across sublanes: all ``block_h + 4`` horizontal passes of a tile are one
     VPU op; the separable-reuse FLOP savings (Eq. 5-19) carry over unchanged.
 
-The block geometry (the paper's key tuning knob, Fig. 6) is a free
-``(block_h, block_w)`` parameter; ``repro.kernels.tuning`` sweeps legal
-shapes and caches the best per (backend, dtype, size, variant, H, W).
+The kernel is a megakernel for the full edge-detection pipeline: it takes
+the raw u8 frame (grayscale, or RGB with ``rgb=True`` — BT.601 luma runs
+per-tile in VMEM), applies the boundary rule in-kernel, computes the
+multi-directional magnitude (Eq. 4), and optionally emits a per-block max
+(``with_max=True``) so per-image normalization needs no extra full-image
+reduction read. One HBM read of the frame, one HBM write of the magnitude.
 
 Variant ladder (identical math to ``repro.core.sobel``):
   ``direct``    4 dense 5x5 correlations               (~200 MAC/px)  "GM"
   ``separable`` Kx/Ky separable, Kd/Kdt dense          (~138 MAC/px)  "RG"
   ``v1``        + diagonal transform K_d+-             (~ 96 MAC/px)  "RG-v1"
   ``v2``        + Eq.18 split of K_d- (reuses F)       (~ 82 MAC/px)  "RG-v2"
-
-The kernel is fused end-to-end: one HBM read of the (padded) image, one HBM
-write of the RSS magnitude (Eq. 4) — i.e. it sits on the HBM roofline, and the
-variants then trade VPU work, mirroring the paper's Table 1 ladder.
 """
 from __future__ import annotations
 
@@ -39,11 +39,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import filters as F
 from repro.core.filters import SobelParams
 from repro.core.sobel import _correlate2d, _hpass, _vpass, magnitude
-from repro.kernels.tiling import assemble_tile, tile_in_specs, validate_block_shape
+from repro.kernels.tiling import (
+    ALIGN_INTERPRET,
+    ALIGN_TPU_GRAY,
+    ALIGN_TPU_RGB,
+    extend_tile,
+    luma,
+    valid_mask,
+    window_spec,
+)
 
 __all__ = ["sobel5x5_pallas", "VARIANTS"]
 
@@ -59,7 +68,7 @@ _R = 2  # 5x5 operator radius; halo width = 2r = 4
 def _tile_components(x, p: SobelParams, variant: str, bh: int, w: int):
     """Four direction components for one tile.
 
-    ``x``: (bh+4, w+4) padded tile; returns 4 arrays of shape (bh, w).
+    ``x``: (bh+4, w+4) halo'd tile; returns 4 arrays of shape (bh, w).
     """
     if variant == "direct":
         bank = F.filter_bank_5x5(p)
@@ -113,26 +122,31 @@ def _tile_components(x, p: SobelParams, variant: str, bh: int, w: int):
 _strip_components = _tile_components
 
 
-def _kernel_magnitude(
-    x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref, o_ref,
-    *, p, variant, directions, bh, bw,
+def _kernel(
+    x_ref, *o_refs,
+    p, variant, directions, bh, bw, h, w, padding, rgb, out_components, with_max,
 ):
-    x = assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref)
-    comps = _tile_components(x, p, variant, bh, bw)[:directions]
-    o_ref[0] = magnitude(comps)
-
-
-def _kernel_components(
-    x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref, o_ref,
-    *, p, variant, directions, bh, bw,
-):
-    x = assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref)
-    comps = _tile_components(x, p, variant, bh, bw)[:directions]
-    o_ref[0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    x = luma(x_ref[0]) if rgb else x_ref[0].astype(jnp.float32)
+    y = extend_tile(
+        x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=_R, padding=padding
+    )
+    comps = _tile_components(y, p, variant, bh, bw)[:directions]
+    if out_components:
+        o_refs[0][0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
+        return
+    mag = magnitude(comps)
+    o_refs[0][0] = mag
+    if with_max:
+        masked = jnp.where(
+            valid_mask(k, j, h, w, bh, bw), mag, jnp.float32(0.0)
+        )
+        o_refs[1][0, k, j] = jnp.max(masked)
 
 
 # ---------------------------------------------------------------------------
-# pallas_call wrapper (operates on a pre-padded batch)
+# pallas_call wrapper (operates on the raw, unpadded batch)
 # ---------------------------------------------------------------------------
 
 @functools.partial(
@@ -141,57 +155,99 @@ def _kernel_components(
         "variant",
         "params",
         "directions",
+        "padding",
         "block_h",
         "block_w",
+        "rgb",
         "out_components",
+        "with_max",
         "interpret",
     ),
 )
 def sobel5x5_pallas(
-    padded: jnp.ndarray,
+    x: jnp.ndarray,
     *,
     variant: str = "v2",
     params: SobelParams = SobelParams(),
     directions: int = 4,
+    padding: str = "reflect",
     block_h: int = 64,
     block_w: int | None = None,
+    rgb: bool = False,
     out_components: bool = False,
+    with_max: bool = False,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """Run the fused kernel on ``padded``: (N, H + 4, W + 4) float32.
+):
+    """Fused megakernel on the raw batch — no pre-padding, any (H, W).
 
-    ``H`` must be a multiple of ``block_h`` and ``W`` of ``block_w`` (the
-    public ``ops.sobel`` wrapper takes care of padding/slicing arbitrary
-    sizes; ``block_w=None`` keeps the seed's row-strip behavior — one
-    full-width tile, which requires ``W % 4 == 0``). Returns (N, H, W)
-    magnitude, or (N, directions, H, W) when ``out_components``.
+    ``x``: ``(N, H, W)`` grayscale (u8 or f32), or ``(N, H, W, 3)`` RGB when
+    ``rgb`` (BT.601 luma applied per-tile in VMEM). Returns ``(N, H, W)``
+    float32 magnitude; with ``with_max`` also a ``(N, gh, gw)`` per-block max
+    (gh/gw = grid dims) for one-pass normalization; with ``out_components``
+    instead returns ``(N, directions, H, W)`` gradients.
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}")
-    n, hp, wp = padded.shape
-    h, w = hp - 4, wp - 4
-    bh, bw = block_h, block_w if block_w else w
-    validate_block_shape(h, w, bh, bw, _R)
-    grid = (n, h // bh, w // bw)
-
-    in_specs = tile_in_specs(bh, bw, _R)
-    if out_components:
-        out_specs = pl.BlockSpec((1, directions, bh, bw), lambda i, k, j: (i, 0, k, j))
-        out_shape = jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)
-        body = _kernel_components
+    if rgb:
+        n, h, w, _c = x.shape
     else:
-        out_specs = pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))
-        out_shape = jax.ShapeDtypeStruct((n, h, w), jnp.float32)
-        body = _kernel_magnitude
+        n, h, w = x.shape
+    bh = block_h
+    bw = block_w if block_w else w
+    gh, gw = pl.cdiv(h, bh), pl.cdiv(w, bw)
+    grid = (n, gh, gw)
+
+    if interpret:
+        align = ALIGN_INTERPRET
+    else:
+        align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
+    in_spec = window_spec(
+        h, w, bh, bw, _R, align=align, channels=3 if rgb else None
+    )
+
+    if out_components:
+        out_specs = [
+            pl.BlockSpec((1, directions, bh, bw), lambda i, k, j: (i, 0, k, j))
+        ]
+        out_shape = [jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)]
+    else:
+        out_specs = [pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))]
+        out_shape = [jax.ShapeDtypeStruct((n, h, w), jnp.float32)]
+        if with_max:
+            # One whole-(gh, gw) SMEM block per image; each grid step stores
+            # its scalar block max — cheap, and legal under Mosaic's block
+            # alignment rules (dims equal to the array dims).
+            out_specs.append(
+                pl.BlockSpec(
+                    (1, gh, gw),
+                    lambda i, k, j: (i, 0, 0),
+                    memory_space=pltpu.SMEM,
+                )
+            )
+            out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
 
     kernel = functools.partial(
-        body, p=params, variant=variant, directions=directions, bh=bh, bw=bw
+        _kernel,
+        p=params,
+        variant=variant,
+        directions=directions,
+        bh=bh,
+        bw=bw,
+        h=h,
+        w=w,
+        padding=padding,
+        rgb=rgb,
+        out_components=out_components,
+        with_max=with_max,
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=in_specs,
+        in_specs=[in_spec],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(padded, padded, padded, padded)
+    )(x)
+    if out_components or not with_max:
+        return out[0]
+    return tuple(out)

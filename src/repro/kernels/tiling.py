@@ -1,91 +1,312 @@
-"""2-D (row x column) tile geometry for the Pallas Sobel kernels.
+"""Zero-copy tile geometry for the fused Pallas Sobel kernels.
 
-The seed kernels tiled rows only: each grid step held a full
-``(block_h + 2r, W + 2r)`` strip in VMEM, which caps usable width and wastes
-VMEM on 4K/8K frames. Here the grid is 2-D — step ``(k, j)`` owns the
-``block_h x block_w`` output tile at ``(k * block_h, j * block_w)`` — and the
-VMEM working set is ``O(block_h * block_w)``, independent of image width.
+PR 1 tiled a *pre-padded* copy of the image: ``ops.sobel`` materialized
+``jnp.pad(x, r)`` (boundary) plus a second pad up to block multiples, and the
+kernel stitched four non-overlapping BlockSpec views back into one halo'd
+tile. Those two pads and the final un-pad slice were three whole-image HBM
+round-trips the kernel never saw.
 
-Pallas BlockSpecs address non-overlapping blocks (element offset =
-block index x block shape), so the paper's 2r inter-block overlap (§4.3.1)
-becomes four input views of the same padded array, stitched back into one
-``(block_h + 2r, block_w + 2r)`` tile inside the kernel:
+This module removes them. Each grid step now reads one *clamped window* of
+the raw, unpadded ``(N, H, W[, 3])`` array via ``pl.Unblocked`` indexing —
+the index map returns element offsets, so the ``block_h + 2r`` x
+``block_w + 2r`` input windows may overlap and are shifted (clamped) at the
+image edges so every read stays in bounds:
 
-    main (bh, bw) | right halo (bh, 2r)
-    --------------+---------------------
-    bottom (2r,bw)| corner     (2r, 2r)
+    row0 = clip(k * block_h - r, 0, H - tile_h)
 
-Halo offsets land on block-index multiples because ``block_h`` and
-``block_w`` are required to be multiples of the halo width ``2r`` (the seed's
-``block_h % 4 == 0`` rule, now applied to both dims). Re-read amplification
-is ``(1 + 2r/bh)(1 + 2r/bw) - 1`` — the 2-D generalization of the paper's
-``2r / block_h``.
+Boundary handling moves *inside* the kernel: for each row/column of the
+halo'd tile the kernel computes the source coordinate under the padding rule
+(``reflect`` via the mirror-periodic map, ``edge``/``zero`` via clamping),
+translates it into the clamped window, and applies it as a one-hot
+permutation matmul (``P @ x @ Q^T``). A one-hot f32 matmul is an exact
+selection — every product is ``0 * v`` or ``1 * v`` — so the fused kernels
+stay bit-exact against ``repro.core.sobel``'s ``jnp.pad`` semantics, while
+the permutation runs on the MXU on hardware. ``zero`` padding additionally
+masks the out-of-range rows/columns to 0.
+
+Ragged images need no padding either: the grid is ``ceil(H / block_h)`` x
+``ceil(W / block_w)``, out-of-range output rows/cols of the last blocks are
+dropped by Pallas's masked stores, and ``valid_mask`` excludes them from
+in-kernel reductions (the per-block max used for fused normalization).
+
+On the TPU hardware backend the window is rounded up to the Mosaic block
+alignment (last two block dims divisible by (8, 128) or equal to the array
+dim); the index arithmetic is unchanged — the window is simply a little
+wider than the stencil needs.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = [
-    "validate_block_shape",
-    "tile_in_specs",
-    "assemble_tile",
+    "PAD_MODES",
+    "window_shape",
+    "window_spec",
+    "window_origin",
+    "reflect_index",
+    "boundary_index",
+    "extend_tile",
+    "valid_mask",
+    "luma",
     "halo_amplification",
+    "window_amplification",
     "tile_vmem_bytes",
 ]
 
+PAD_MODES = ("reflect", "edge", "zero")
 
-def validate_block_shape(h: int, w: int, block_h: int, block_w: int, r: int) -> None:
-    """Check the (block_h, block_w) geometry against an (h, w) output grid."""
-    halo = 2 * r
-    if h % block_h != 0:
-        raise ValueError(f"H={h} not a multiple of block_h={block_h}")
-    if w % block_w != 0:
-        raise ValueError(f"W={w} not a multiple of block_w={block_w}")
-    if block_h % halo != 0:
-        raise ValueError(f"block_h={block_h} must be a multiple of {halo}")
-    if block_w % halo != 0:
-        raise ValueError(f"block_w={block_w} must be a multiple of {halo}")
+# Mosaic requires the last two block dims divisible by (8, 128) or equal to
+# the array dims. For gray (N, H, W) arrays that constrains (tile_h, tile_w);
+# for RGB (N, H, W, 3) it constrains (tile_w, channels) — channels is always
+# "equal to the array dim", so only tile_w % 8 remains.
+ALIGN_INTERPRET = (1, 1)
+ALIGN_TPU_GRAY = (8, 128)
+ALIGN_TPU_RGB = (1, 8)
 
 
-def tile_in_specs(block_h: int, block_w: int, r: int) -> List[pl.BlockSpec]:
-    """Input BlockSpecs [main, right, bottom, corner] over a padded
-    ``(N, H + 2r, W + 2r)`` array, for grid ``(N, H/block_h, W/block_w)``.
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
-    The halo specs index in units of the halo width ``2r``: e.g. the right
-    halo's column offset must be ``(j + 1) * block_w``, which in 2r-column
-    block units is ``(j + 1) * (block_w // 2r)``.
+
+def window_shape(
+    h: int,
+    w: int,
+    block_h: int,
+    block_w: int,
+    r: int,
+    *,
+    align: Tuple[int, int] = ALIGN_INTERPRET,
+) -> Tuple[int, int]:
+    """(tile_h, tile_w) of the clamped input window for one output block.
+
+    The stencil needs ``block + 2r``; alignment rounds up, and an image
+    smaller than the window clamps it down to the full image (legal on TPU:
+    a block dim equal to the array dim is always accepted).
     """
-    halo = 2 * r
-    bh_u, bw_u = block_h // halo, block_w // halo
-    return [
-        pl.BlockSpec((1, block_h, block_w), lambda i, k, j: (i, k, j)),
-        pl.BlockSpec((1, block_h, halo), lambda i, k, j: (i, k, (j + 1) * bw_u)),
-        pl.BlockSpec((1, halo, block_w), lambda i, k, j: (i, (k + 1) * bh_u, j)),
-        pl.BlockSpec((1, halo, halo), lambda i, k, j: (i, (k + 1) * bh_u, (j + 1) * bw_u)),
-    ]
+    th = min(_round_up(block_h + 2 * r, align[0]), h)
+    tw = min(_round_up(block_w + 2 * r, align[1]), w)
+    return th, tw
 
 
-def assemble_tile(x_main_ref, x_right_ref, x_bottom_ref, x_corner_ref) -> jnp.ndarray:
-    """Stitch the four VMEM views into one (bh + 2r, bw + 2r) f32 tile."""
-    top = jnp.concatenate([x_main_ref[0], x_right_ref[0]], axis=1)
-    bottom = jnp.concatenate([x_bottom_ref[0], x_corner_ref[0]], axis=1)
-    return jnp.concatenate([top, bottom], axis=0).astype(jnp.float32)
+def window_origin(k, j, h: int, w: int, block_h: int, block_w: int, r: int,
+                  tile_h: int, tile_w: int):
+    """Clamped (row0, col0) of grid step (k, j)'s input window.
 
+    Used both by the BlockSpec index map and inside the kernel body (it is a
+    pure function of the static geometry and the grid indices).
+    """
+    row0 = jnp.clip(k * block_h - r, 0, h - tile_h)
+    col0 = jnp.clip(j * block_w - r, 0, w - tile_w)
+    return row0, col0
+
+
+def window_spec(
+    h: int,
+    w: int,
+    block_h: int,
+    block_w: int,
+    r: int,
+    *,
+    align: Tuple[int, int] = ALIGN_INTERPRET,
+    channels: Optional[int] = None,
+) -> pl.BlockSpec:
+    """Unblocked BlockSpec reading the clamped window from the raw array.
+
+    The index map returns *element* offsets (``pl.Unblocked``), which is what
+    lets consecutive grid steps read overlapping windows of the unpadded
+    image — no ``jnp.pad`` staging copy. ``channels`` appends a trailing
+    fully-read dim for ``(N, H, W, C)`` RGB input.
+    """
+    th, tw = window_shape(h, w, block_h, block_w, r, align=align)
+
+    def _origin(i, k, j):
+        row0, col0 = window_origin(k, j, h, w, block_h, block_w, r, th, tw)
+        return (i, row0, col0) if channels is None else (i, row0, col0, 0)
+
+    shape = (1, th, tw) if channels is None else (1, th, tw, channels)
+    return pl.BlockSpec(shape, _origin, indexing_mode=pl.Unblocked())
+
+
+# ---------------------------------------------------------------------------
+# In-kernel boundary handling
+# ---------------------------------------------------------------------------
+
+def reflect_index(g: jnp.ndarray, n: int) -> jnp.ndarray:
+    """numpy/jnp ``mode='reflect'`` source index for any overhang.
+
+    The padded sequence is mirror-periodic with period ``2(n - 1)``; a
+    single-pixel axis reflects to itself.
+    """
+    if n == 1:
+        return jnp.zeros_like(g)
+    period = 2 * (n - 1)
+    m = jnp.mod(g, period)          # non-negative for negative g too
+    return jnp.where(m < n, m, period - m)
+
+
+def boundary_index(g: jnp.ndarray, n: int, padding: str) -> jnp.ndarray:
+    """Source coordinate in [0, n) for requested coordinate ``g`` under the
+    padding rule. ``zero`` clamps like ``edge`` — the caller masks the
+    out-of-range rows/cols to 0 afterwards (see :func:`extend_tile`)."""
+    if padding == "reflect":
+        return jnp.clip(reflect_index(g, n), 0, n - 1)
+    if padding in ("edge", "zero"):
+        return jnp.clip(g, 0, n - 1)
+    raise ValueError(f"unknown padding {padding!r}; expected one of {PAD_MODES}")
+
+
+def _onehot_f32(src: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(len(src), n) one-hot selection matrix: row p picks column src[p]."""
+    return (src[:, None] == jax.lax.iota(jnp.int32, n)[None, :]).astype(jnp.float32)
+
+
+def extend_tile(
+    x: jnp.ndarray,
+    k,
+    j,
+    *,
+    h: int,
+    w: int,
+    block_h: int,
+    block_w: int,
+    r: int,
+    padding: str = "reflect",
+) -> jnp.ndarray:
+    """Halo'd ``(block_h + 2r, block_w + 2r)`` f32 tile for grid step (k, j),
+    built from the clamped in-bounds window ``x`` (shape ``(tile_h, tile_w)``,
+    already f32/grayscale).
+
+    Interior tiles — every requested coordinate inside the image, the
+    overwhelming majority on large frames — take a dynamic-slice fast path:
+    the extension is just the stencil-sized sub-window at the (possibly
+    alignment-shifted) offset. Boundary/ragged tiles run the general path:
+    two one-hot selection matmuls (exact; MXU-friendly) pick each requested
+    global coordinate after boundary-mapping it into the image and
+    translating it into the window. Requested coordinates that fall entirely
+    outside the window only occur for output rows/cols past the ragged image
+    edge — their one-hot rows are all-zero, producing 0s that Pallas's
+    masked output store then drops.
+    """
+    th, tw = x.shape
+    ext_h, ext_w = block_h + 2 * r, block_w + 2 * r
+    row0, col0 = window_origin(k, j, h, w, block_h, block_w, r, th, tw)
+    gr = k * block_h - r + jax.lax.iota(jnp.int32, ext_h)
+    gc = j * block_w - r + jax.lax.iota(jnp.int32, ext_w)
+
+    def general(x):
+        p = _onehot_f32(boundary_index(gr, h, padding) - row0, th)
+        q = _onehot_f32(boundary_index(gc, w, padding) - col0, tw)
+        y = jax.lax.dot(
+            p,
+            jax.lax.dot(x, q.T, preferred_element_type=jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        if padding == "zero":
+            rin = (gr >= 0) & (gr < h)
+            cin = (gc >= 0) & (gc < w)
+            y = jnp.where(rin[:, None] & cin[None, :], y, jnp.float32(0.0))
+        return y
+
+    if th < ext_h or tw < ext_w:
+        # image smaller than the stencil window: every tile is a boundary tile
+        return general(x)
+
+    def interior(x):
+        # unshifted window: the stencil tile is the window's leading corner
+        # (a static slice — Mosaic cannot lower dynamic_slice on values)
+        return jax.lax.slice(x, (0, 0), (ext_h, ext_w))
+
+    is_interior = (
+        (k * block_h - r >= 0)
+        & (k * block_h + block_h + r <= h)
+        & (j * block_w - r >= 0)
+        & (j * block_w + block_w + r <= w)
+        # alignment may shift the window origin near the image edge; those
+        # few tiles take the general path so the fast slice stays static
+        & (row0 == k * block_h - r)
+        & (col0 == j * block_w - r)
+    )
+    return jax.lax.cond(is_interior, interior, general, x)
+
+
+def valid_mask(k, j, h: int, w: int, block_h: int, block_w: int) -> jnp.ndarray:
+    """(block_h, block_w) bool mask of output pixels inside the image —
+    False only in the ragged overhang of the last row/column blocks."""
+    rv = (k * block_h + jax.lax.iota(jnp.int32, block_h)) < h
+    cv = (j * block_w + jax.lax.iota(jnp.int32, block_w)) < w
+    return rv[:, None] & cv[None, :]
+
+
+# BT.601 luma weights (OpenCV cvtColor convention) — keep in sync with
+# repro.core.pipeline.rgb_to_gray.
+LUMA_WEIGHTS = (0.299, 0.587, 0.114)
+
+
+def luma(rgb_tile: jnp.ndarray) -> jnp.ndarray:
+    """(..., 3) RGB -> (...) f32 grayscale, identical rounding to
+    ``repro.core.pipeline.rgb_to_gray``.
+
+    Each product is passed through ``maximum(w * c, -FLT_MAX)`` — an exact
+    identity for every finite value that the XLA algebraic simplifier
+    cannot fold — so XLA cannot contract the multiplies into FMAs. Without
+    it, the jit-fused XLA pipeline and the Pallas kernel round a ~0.1%
+    fraction of pixels differently (1 ulp), breaking the repo's
+    bit-exactness contract (same trick as ``repro.core.sobel._tap``).
+    """
+    from repro.core.sobel import _F32_LOWEST
+
+    x = rgb_tile.astype(jnp.float32)
+    lo = jnp.float32(_F32_LOWEST)
+    return (
+        jnp.maximum(LUMA_WEIGHTS[0] * x[..., 0], lo)
+        + jnp.maximum(LUMA_WEIGHTS[1] * x[..., 1], lo)
+    ) + jnp.maximum(LUMA_WEIGHTS[2] * x[..., 2], lo)
+
+
+# ---------------------------------------------------------------------------
+# Cost model (used by the tuner and the Fig. 6 sweep)
+# ---------------------------------------------------------------------------
 
 def halo_amplification(block_h: int, block_w: int, r: int) -> float:
-    """Fraction of extra HBM reads vs a halo-free ideal."""
+    """Fraction of extra HBM reads vs a halo-free ideal (unaligned window)."""
     halo = 2 * r
     return (1.0 + halo / block_h) * (1.0 + halo / block_w) - 1.0
 
 
-def tile_vmem_bytes(block_h: int, block_w: int, r: int, n_hpass: int = 5) -> int:
-    """Rough per-grid-step VMEM working set (f32): the stitched input tile,
-    ``n_hpass`` horizontal-pass intermediates, and the output tile."""
+def window_amplification(
+    h: int,
+    w: int,
+    block_h: int,
+    block_w: int,
+    r: int,
+    *,
+    align: Tuple[int, int] = ALIGN_INTERPRET,
+) -> float:
+    """Like :func:`halo_amplification` but for the actual (aligned, clamped)
+    window a given image would use."""
+    th, tw = window_shape(h, w, block_h, block_w, r, align=align)
+    return (th * tw) / float(min(block_h, h) * min(block_w, w)) - 1.0
+
+
+def tile_vmem_bytes(
+    block_h: int,
+    block_w: int,
+    r: int,
+    n_hpass: int = 5,
+    channels: Optional[int] = None,
+) -> int:
+    """Rough per-grid-step VMEM working set (f32): the input window, the
+    halo'd tile plus its two one-hot selection matrices, ``n_hpass``
+    horizontal-pass intermediates, and the output tile."""
     halo = 2 * r
-    tile = (block_h + halo) * (block_w + halo)
-    inter = n_hpass * (block_h + halo) * block_w
+    th, tw = block_h + halo, block_w + halo
+    window = th * tw * (channels or 1)
+    onehots = th * th + tw * tw
+    tile = th * tw
+    inter = n_hpass * th * block_w
     out = block_h * block_w
-    return 4 * (tile + inter + out)
+    return 4 * (window + onehots + tile + inter + out)

@@ -9,8 +9,13 @@ The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
     (:func:`measure_us` — warm call to exclude compile, then a best-of-iters
     loop), and
   * persists the winner in a JSON cache keyed by
-    ``(backend, dtype, size, variant, H, W)`` (:class:`TuningCache`), which
-    ``repro.kernels.dispatch`` consults on every ``sobel()`` call.
+    ``(backend, dtype, size, variant, padding, layout, H, W)``
+    (:class:`TuningCache`), which ``repro.kernels.dispatch`` consults on
+    every ``sobel()`` call. ``padding`` and ``layout`` (gray/rgb) entered the
+    key with the fused zero-copy pipeline: the boundary rule and the input
+    layout now change the kernel's window geometry and in-kernel work, so
+    their tunings must not collide (schema v2; v1 entries are migrated on
+    load as reflect/gray).
 
 Cache location: ``$REPRO_TUNE_CACHE`` if set, else
 ``~/.cache/repro/sobel_blocks.json``. The file is plain JSON so it can be
@@ -60,19 +65,37 @@ class TuneKey:
     variant: str
     h: int
     w: int
+    padding: str = "reflect"   # reflect | edge | zero
+    layout: str = "gray"       # gray | rgb
 
     def to_str(self) -> str:
-        return f"{self.backend}/{self.dtype}/{self.size}x{self.size}/{self.variant}/{self.h}x{self.w}"
+        return (
+            f"{self.backend}/{self.dtype}/{self.size}x{self.size}/{self.variant}"
+            f"/{self.padding}/{self.layout}/{self.h}x{self.w}"
+        )
+
+
+def _migrate_v1_key(key: str) -> Optional[str]:
+    """v1 keys were ``backend/dtype/SxS/variant/HxW``; the v1 kernels always
+    behaved as reflect padding on grayscale input, so that is the v2 slot
+    their tunings carry over to. Returns None for unrecognizable keys."""
+    parts = key.split("/")
+    if len(parts) != 5:
+        return None
+    backend, dtype, size, variant, hw = parts
+    return f"{backend}/{dtype}/{size}/{variant}/reflect/gray/{hw}"
 
 
 class TuningCache:
     """JSON-backed best-known-config store.
 
     Schema: ``{key: {"block_h": int, "block_w": int, "us": float}}`` with a
-    ``__meta__`` entry recording the schema version.
+    ``__meta__`` entry recording the schema version. v1 files (no
+    padding/layout key segments) are migrated in-memory on load and
+    rewritten as v2 on the next :meth:`save`.
     """
 
-    VERSION = 1
+    VERSION = 2
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -86,8 +109,18 @@ class TuningCache:
                 raw = json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
             return self
-        if isinstance(raw, dict):
-            self._entries = {k: v for k, v in raw.items() if not k.startswith("__")}
+        if not isinstance(raw, dict):
+            return self
+        version = raw.get("__meta__", {}).get("version", 1)
+        entries = {k: v for k, v in raw.items() if not k.startswith("__")}
+        if version < 2:
+            migrated = {}
+            for k, v in entries.items():
+                mk = _migrate_v1_key(k)
+                if mk is not None:
+                    migrated[mk] = v
+            entries = migrated
+        self._entries = entries
         return self
 
     def save(self) -> None:
@@ -163,45 +196,50 @@ def legal_block_shapes(
     *,
     size: int = 5,
     backend: str = "pallas-interpret",
+    layout: str = "gray",
     max_vmem_bytes: int = VMEM_BUDGET,
 ) -> List[Tuple[int, int]]:
     """All (block_h, block_w) candidates legal for an HxW image.
 
-    Legality: the block divides the halo width 2r in both dims, is no larger
-    than the (rounded-up) image, fits the VMEM budget, and — on the hardware
-    backend — respects the f32 (8, 128) tile so Mosaic gets aligned blocks.
+    The fused zero-copy kernels put no divisibility constraints on the block
+    (clamped windows + in-kernel masking handle ragged grids), so legality is
+    only: not wastefully larger than the image, fits the VMEM budget (the
+    RGB megakernel's input window is 3x the grayscale one — ``layout``), and
+    — on the hardware backend — the f32 (8, 128) tile so Mosaic gets aligned
+    output blocks.
     """
     r = size // 2
-    halo = 2 * r
+    channels = 3 if layout == "rgb" else None
     shapes = []
     for bh in _CAND_H:
         for bw in _CAND_W:
-            if bh % halo or bw % halo:
-                continue
             if backend == "pallas-tpu" and (bh % 8 or bw % 128):
                 continue
             # Bigger than the image in either dim is just the smaller sweep
             # point plus padding waste; keep the smallest such block only.
             if (bh >= 2 * h and bh != _CAND_H[0]) or (bw >= 2 * w and bw != _CAND_W[0]):
                 continue
-            if tile_vmem_bytes(bh, bw, r) > max_vmem_bytes:
+            if tile_vmem_bytes(bh, bw, r, channels=channels) > max_vmem_bytes:
                 continue
             shapes.append((bh, bw))
     return shapes
 
 
-def _run_shape(img, size, variant, directions, backend, bh, bw):
-    from repro.kernels.ops import sobel as pallas_sobel
+def _run_shape(img, size, variant, directions, padding, backend, bh, bw):
+    from repro.kernels.ops import edge_pipeline, sobel as pallas_sobel
 
-    return pallas_sobel(
-        img,
+    kwargs = dict(
         size=size,
         directions=directions,
         variant=variant,
+        padding=padding,
         block_h=bh,
         block_w=bw,
         interpret=(backend != "pallas-tpu"),
     )
+    if img.ndim >= 3 and img.shape[-1] == 3:
+        return edge_pipeline(img, normalize=False, **kwargs)
+    return pallas_sobel(img, **kwargs)
 
 
 def sweep(
@@ -213,6 +251,8 @@ def sweep(
     directions: int = 4,
     dtype: str = "float32",
     backend: str = "pallas-interpret",
+    padding: str = "reflect",
+    layout: str = "gray",
     shapes: Optional[Sequence[Tuple[int, int]]] = None,
     iters: int = 3,
     seed: int = 0,
@@ -221,19 +261,23 @@ def sweep(
 
     Returns one row per shape: ``{"block_h", "block_w", "us", "vmem_bytes",
     "halo_overhead", "grid_steps"}`` — the structural columns of the paper's
-    Fig. 6 sweep, generalized to both block dimensions.
+    Fig. 6 sweep, generalized to both block dimensions. ``layout="rgb"``
+    times the full fused gray->Sobel megakernel on an ``(1, h, w, 3)`` frame.
     """
     import jax.numpy as jnp
 
     r = size // 2
+    channels = 3 if layout == "rgb" else None
     if shapes is None:
-        shapes = legal_block_shapes(h, w, size=size, backend=backend)
+        shapes = legal_block_shapes(h, w, size=size, backend=backend, layout=layout)
     rng = np.random.default_rng(seed)
-    img = jnp.asarray(rng.integers(0, 256, (1, h, w)).astype(dtype))
+    shape = (1, h, w, 3) if layout == "rgb" else (1, h, w)
+    img = jnp.asarray(rng.integers(0, 256, shape).astype(dtype))
     rows = []
     for bh, bw in shapes:
         us = measure_us(
-            _run_shape, img, size, variant, directions, backend, bh, bw, iters=iters
+            _run_shape, img, size, variant, directions, padding, backend, bh, bw,
+            iters=iters,
         )
         gh, gw = -(-h // bh), -(-w // bw)
         rows.append(
@@ -241,7 +285,7 @@ def sweep(
                 "block_h": bh,
                 "block_w": bw,
                 "us": us,
-                "vmem_bytes": tile_vmem_bytes(bh, bw, r),
+                "vmem_bytes": tile_vmem_bytes(bh, bw, r, channels=channels),
                 "halo_overhead": halo_amplification(bh, bw, r),
                 "grid_steps": gh * gw,
             }
@@ -258,6 +302,8 @@ def autotune(
     directions: int = 4,
     dtype: str = "float32",
     backend: str = "pallas-interpret",
+    padding: str = "reflect",
+    layout: str = "gray",
     shapes: Optional[Sequence[Tuple[int, int]]] = None,
     iters: int = 3,
     cache: Optional[TuningCache] = None,
@@ -271,14 +317,15 @@ def autotune(
     persists the cache to disk (``save=False`` to skip, e.g. in tests).
     """
     cache = cache if cache is not None else get_default_cache()
-    key = TuneKey(backend, dtype, size, variant, h, w)
+    key = TuneKey(backend, dtype, size, variant, h, w, padding, layout)
     if not refresh:
         hit = cache.lookup(key)
         if hit is not None:
             return hit
     rows = sweep(
         h, w, size=size, variant=variant, directions=directions,
-        dtype=dtype, backend=backend, shapes=shapes, iters=iters,
+        dtype=dtype, backend=backend, padding=padding, layout=layout,
+        shapes=shapes, iters=iters,
     )
     if not rows:
         raise ValueError(f"no legal block shapes for {key.to_str()}")

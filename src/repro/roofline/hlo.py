@@ -22,7 +22,14 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["module_cost", "collective_bytes", "parse_collectives"]
+__all__ = [
+    "module_cost",
+    "collective_bytes",
+    "parse_collectives",
+    "stablehlo_op_counts",
+    "jaxpr_op_counts",
+    "DATA_PREP_PRIMITIVES",
+]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -310,6 +317,72 @@ def module_cost(text: str) -> Dict[str, object]:
         "collective_bytes": coll,
         "n_computations": len(comps),
     }
+
+
+# Fused-path structure checks -------------------------------------------------
+#
+# The zero-copy acceptance bar for the fused Sobel pipeline is structural:
+# the program must contain no whole-image data-preparation ops (pad the
+# boundary, pad to block multiples, slice the result back) outside the
+# kernel itself. Two artifacts make that checkable on a CPU-only host:
+#
+#   * the jaxpr — ``pallas_call`` is a single opaque primitive at trace
+#     time, so any pad/slice visible in the jaxpr is genuine HBM-side prep
+#     (``jaxpr_op_counts``);
+#   * the Mosaic-lowered StableHLO from a cross-platform TPU export
+#     (``jax.export(..., platforms=["tpu"])``) — the real hardware program,
+#     where the kernel is one ``tpu_custom_call`` (``stablehlo_op_counts``).
+#
+# (The *interpret-mode* lowering is NOT a valid artifact: the Pallas
+# interpreter pads carries to block multiples internally, which would show
+# pads that do not exist on hardware.)
+
+# jaxpr primitives that materialize whole-array data preparation when they
+# appear outside a kernel on the hot path.
+DATA_PREP_PRIMITIVES = (
+    "pad",
+    "slice",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "concatenate",
+    "gather",
+    "scatter",
+)
+
+_STABLEHLO_OP_RE = re.compile(r"\bstablehlo\.([a-z_0-9]+)")
+
+
+def stablehlo_op_counts(mlir_text: str) -> Dict[str, int]:
+    """Occurrences of each ``stablehlo.<op>`` in an MLIR module string."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _STABLEHLO_OP_RE.finditer(mlir_text):
+        out[m.group(1)] += 1
+    return dict(out)
+
+
+def jaxpr_op_counts(jaxpr, *, opaque: Tuple[str, ...] = ("pallas_call",)) -> Dict[str, int]:
+    """Primitive counts of a (closed) jaxpr, recursing through nested jaxprs
+    (pjit/scan/cond bodies) but treating ``opaque`` primitives — kernels —
+    as leaves: their internals run on-chip, not against HBM."""
+    counts: Dict[str, int] = defaultdict(int)
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            counts[eqn.primitive.name] += 1
+            if eqn.primitive.name in opaque:
+                continue
+            for v in eqn.params.values():
+                sub = getattr(v, "jaxpr", None)
+                if sub is not None:
+                    walk(sub)
+                elif isinstance(v, (list, tuple)):
+                    for vi in v:
+                        sub = getattr(vi, "jaxpr", None)
+                        if sub is not None:
+                            walk(sub)
+
+    walk(getattr(jaxpr, "jaxpr", jaxpr))
+    return dict(counts)
 
 
 # Back-compat helpers ---------------------------------------------------------

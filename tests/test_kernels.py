@@ -69,9 +69,8 @@ def test_kernel_3x3(rng):
 
 
 def test_kernel_components_output(rng):
-    img = _img(rng, (1, 32, 48))
-    padded = jnp.asarray(np.pad(img, [(0, 0), (2, 2), (2, 2)], mode="reflect"))
-    comps = sobel5x5_pallas(padded, variant="v2", out_components=True, block_h=16, interpret=True)
+    img = jnp.asarray(_img(rng, (1, 32, 48)))
+    comps = sobel5x5_pallas(img, variant="v2", out_components=True, block_h=16, interpret=True)
     assert comps.shape == (1, 4, 32, 48)
     from repro.kernels.ref import sobel_components_ref
 

@@ -91,13 +91,12 @@ def test_components_output_2d(rng):
     from repro.kernels.ref import sobel_components_ref
     from repro.kernels.sobel5x5 import sobel5x5_pallas
 
-    img = _img(rng, (1, 32, 48))
-    padded = jnp.asarray(np.pad(img, [(0, 0), (2, 2), (2, 2)], mode="reflect"))
+    img = jnp.asarray(_img(rng, (1, 32, 48)))
     comps = sobel5x5_pallas(
-        padded, variant="v2", out_components=True, block_h=16, block_w=16, interpret=True
+        img, variant="v2", out_components=True, block_h=16, block_w=16, interpret=True
     )
     assert comps.shape == (1, 4, 32, 48)
-    refs = sobel_components_ref(jnp.asarray(img))
+    refs = sobel_components_ref(img)
     for i, ref in enumerate(refs):
         np.testing.assert_allclose(
             np.asarray(comps[:, i]), np.asarray(ref), rtol=1e-6, atol=1e-3
@@ -118,14 +117,28 @@ def test_edge_detect_backend_parity(rng):
 # Tile geometry unit tests
 # ---------------------------------------------------------------------------
 
-def test_validate_block_shape_rejects_bad_geometry():
+def test_window_shape_geometry():
+    # Exact stencil window in interpret mode; clamped to the image when the
+    # image is smaller; rounded up to the Mosaic alignment on hardware.
+    assert tiling.window_shape(512, 640, 64, 128, 2) == (68, 132)
+    assert tiling.window_shape(5, 7, 64, 128, 2) == (5, 7)
+    assert tiling.window_shape(512, 640, 64, 128, 2, align=tiling.ALIGN_TPU_GRAY) == (72, 256)
+    assert tiling.window_shape(512, 640, 64, 128, 1, align=tiling.ALIGN_TPU_RGB) == (66, 136)
+
+
+def test_boundary_index_matches_numpy_pad():
+    # reflect/edge source indices must match np.pad semantics for any
+    # overhang (incl. overhang wider than the axis).
+    for n in (1, 2, 3, 7):
+        g = np.arange(-4, n + 4)
+        padded_order = np.pad(np.arange(n), (4, 4), mode="reflect")
+        got = np.asarray(tiling.boundary_index(jnp.asarray(g), n, "reflect"))
+        np.testing.assert_array_equal(got, padded_order)
+        edge = np.pad(np.arange(n), (4, 4), mode="edge")
+        got_e = np.asarray(tiling.boundary_index(jnp.asarray(g), n, "edge"))
+        np.testing.assert_array_equal(got_e, edge)
     with pytest.raises(ValueError):
-        tiling.validate_block_shape(64, 64, 10, 16, r=2)   # 10 % 4 != 0
-    with pytest.raises(ValueError):
-        tiling.validate_block_shape(64, 64, 16, 10, r=2)
-    with pytest.raises(ValueError):
-        tiling.validate_block_shape(60, 64, 16, 16, r=2)   # 60 % 16 != 0
-    tiling.validate_block_shape(64, 64, 16, 16, r=2)
+        tiling.boundary_index(jnp.arange(3), 8, "wrap")
 
 
 def test_halo_amplification_monotone():

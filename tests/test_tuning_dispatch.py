@@ -20,12 +20,15 @@ def _img(rng, shape):
 # Legal shape enumeration
 # ---------------------------------------------------------------------------
 
-def test_legal_shapes_divisibility():
-    for size, halo in ((5, 4), (3, 2)):
+def test_legal_shapes_unconstrained_on_interpret():
+    # The fused kernels have no divisibility constraints (clamped windows +
+    # in-kernel masking): every candidate that fits VMEM is legal.
+    for size in (5, 3):
         shapes = tuning.legal_block_shapes(256, 256, size=size)
         assert shapes
+        assert (8, 32) in shapes  # smallest candidate survives
         for bh, bw in shapes:
-            assert bh % halo == 0 and bw % halo == 0
+            assert bh >= 1 and bw >= 1
 
 
 def test_legal_shapes_tpu_alignment():
@@ -99,6 +102,57 @@ def test_cache_ignores_corrupt_file(tmp_path):
     path.write_text("{not json")
     cache = tuning.TuningCache(str(path))
     assert len(cache) == 0
+
+
+def test_cache_v1_migration(tmp_path):
+    """v1 cache files (no padding/layout key segments) must migrate to the
+    reflect/gray slot and be rewritten as schema v2 on save."""
+    path = tmp_path / "v1.json"
+    v1_key = "pallas-interpret/float32/5x5/v2/64x512"
+    path.write_text(json.dumps({
+        "__meta__": {"version": 1},
+        v1_key: {"block_h": 16, "block_w": 128, "us": 12.5},
+        "garbage-key": {"block_h": 1, "block_w": 1, "us": 1.0},
+    }))
+    cache = tuning.TuningCache(str(path))
+    # v1 tunings land in the reflect/gray slot of the v2 key space...
+    key = tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 64, 512)
+    assert key.padding == "reflect" and key.layout == "gray"
+    assert cache.lookup(key) == (16, 128)
+    # ...and do NOT shadow other padding/layout slots.
+    assert cache.lookup(
+        tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 64, 512,
+                       padding="zero", layout="rgb")
+    ) is None
+    # Unrecognizable keys are dropped, not corrupted into the v2 space.
+    assert len(cache) == 1
+    cache.save()
+    raw = json.load(open(path))
+    assert raw["__meta__"]["version"] == tuning.TuningCache.VERSION == 2
+    assert "pallas-interpret/float32/5x5/v2/reflect/gray/64x512" in raw
+
+
+def test_cache_v1_files_without_meta(tmp_path):
+    """Pre-versioning files (no __meta__ at all) are treated as v1."""
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps(
+        {"pallas-tpu/uint8/3x3/separable/1024x2048": {"block_h": 32, "block_w": 256, "us": 3.0}}
+    ))
+    cache = tuning.TuningCache(str(path))
+    assert cache.lookup(
+        tuning.TuneKey("pallas-tpu", "uint8", 3, "separable", 1024, 2048)
+    ) == (32, 256)
+
+
+def test_key_distinguishes_padding_and_layout(tmp_path):
+    cache = tuning.TuningCache(str(tmp_path / "c.json"))
+    base = dict(backend="pallas-interpret", dtype="uint8", size=5, variant="v2",
+                h=128, w=256)
+    cache.record(tuning.TuneKey(**base, padding="reflect", layout="gray"), 8, 32, 1.0)
+    cache.record(tuning.TuneKey(**base, padding="zero", layout="rgb"), 16, 64, 2.0)
+    assert cache.lookup(tuning.TuneKey(**base, padding="reflect", layout="gray")) == (8, 32)
+    assert cache.lookup(tuning.TuneKey(**base, padding="zero", layout="rgb")) == (16, 64)
+    assert cache.lookup(tuning.TuneKey(**base, padding="edge", layout="gray")) is None
 
 
 # ---------------------------------------------------------------------------
