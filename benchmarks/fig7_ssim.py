@@ -9,7 +9,7 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import edge_detect
+from repro.api import EdgeConfig, edge_detect
 from repro.core.ssim import ssim
 from repro.data.synthetic import image_batch
 from repro.configs import get_config
@@ -19,12 +19,17 @@ def run() -> List[Dict]:
     rows = []
     cfg = get_config("sobel-hd", smoke=True).replace(image_h=256, image_w=256)
     imgs = jnp.asarray(image_batch(cfg, 4)["images"])
-    ref2 = edge_detect(imgs, size=5, directions=2, variant="direct", normalize=False)
-    ref4 = edge_detect(imgs, size=5, directions=4, variant="direct", normalize=False)
+    def mag(directions, variant):
+        cfg = EdgeConfig(operator="sobel5", directions=directions,
+                         variant=variant, normalize=False)
+        return edge_detect(imgs, cfg).magnitude
+
+    ref2 = mag(2, "direct")
+    ref4 = mag(4, "direct")
     cases = [
-        ("2dir_RG_vs_naive", edge_detect(imgs, size=5, directions=2, variant="separable", normalize=False), ref2),
-        ("4dir_RGv1_vs_naive", edge_detect(imgs, size=5, directions=4, variant="v1", normalize=False), ref4),
-        ("4dir_RGv2_vs_naive", edge_detect(imgs, size=5, directions=4, variant="v2", normalize=False), ref4),
+        ("2dir_RG_vs_naive", mag(2, "separable"), ref2),
+        ("4dir_RGv1_vs_naive", mag(4, "v1"), ref4),
+        ("4dir_RGv2_vs_naive", mag(4, "v2"), ref4),
     ]
     for name, a, b in cases:
         val = float(jnp.mean(ssim(a, b)))

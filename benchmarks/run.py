@@ -8,12 +8,22 @@ bench-smoke job uploads per PR so the perf trajectory is tracked across PRs.
 
 ``--smoke`` runs suites that support it on tiny shapes (CI-sized smoke
 signal rather than a real measurement).
+
+``--compare BENCH_<tag>.json`` gates on a committed baseline: after the run,
+every row present in both the fresh results and the baseline is compared
+and the process exits non-zero if any row's throughput regressed by more
+than ``--compare-tol`` (default 10%). By default ratios are normalized by
+their geometric mean first (``--compare-norm geomean``), which cancels
+machine-speed differences between the baseline host and the current one and
+flags *relative* regressions — one path getting slower than the rest. Use
+``--compare-norm none`` for strict absolute comparison on a stable host.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
 import json
+import math
 import os
 import sys
 
@@ -61,6 +71,61 @@ def _json_rows(suite: str, rows) -> list:
     return out
 
 
+def compare_to_baseline(
+    suites: dict,
+    baseline: dict,
+    *,
+    tol: float = 0.10,
+    norm: str = "geomean",
+) -> tuple:
+    """Compare fresh suite rows against a baseline payload.
+
+    Returns ``(failures, report)``: ``failures`` is a list of strings, one
+    per row whose time regressed by more than ``tol`` (after optional
+    geomean normalization); ``report`` is a short human-readable summary.
+    Rows are matched by (suite, name); rows with non-positive
+    baseline/current time (e.g. fig7's SSIM-only rows) are skipped.
+
+    The geomean host-speed norm is taken over the matched ``xla``-backend
+    rows when any exist — the pure-XLA path is the stable reference
+    workload, so a regression confined to the Pallas path shows up at its
+    full ratio instead of being partially absorbed into the norm. Without
+    any xla rows the norm falls back to all matched rows.
+    """
+    matched = []  # (suite, name, ratio, backend)
+    for suite, rows in suites.items():
+        base_rows = {r["name"]: r for r in baseline.get("suites", {}).get(suite, [])}
+        for row in rows:
+            b = base_rows.get(row["name"])
+            if b is None:
+                continue
+            old, new = float(b["us_per_call"]), float(row["us_per_call"])
+            if old <= 0.0 or new <= 0.0:
+                continue
+            matched.append((suite, row["name"], new / old, row.get("backend")))
+    if not matched:
+        return [], "compare: no matching rows between run and baseline"
+    if norm == "geomean":
+        ref = [r for _, _, r, bk in matched if bk == "xla"]
+        ref = ref or [r for _, _, r, _ in matched]
+        g = math.exp(sum(math.log(r) for r in ref) / len(ref))
+    else:
+        g = 1.0
+    failures = []
+    for suite, name, ratio, _backend in matched:
+        rel = ratio / g
+        if rel > 1.0 + tol:
+            failures.append(
+                f"{name}: {rel:.2f}x slower than baseline "
+                f"(raw {ratio:.2f}x, host norm {g:.2f}x, tol {tol:.0%})"
+            )
+    report = (
+        f"compare: {len(matched)} rows matched, host norm {g:.2f}x, "
+        f"{len(failures)} regression(s) > {tol:.0%}"
+    )
+    return failures, report
+
+
 def main() -> None:
     from benchmarks import (
         fig6_blocksweep,
@@ -91,6 +156,15 @@ def main() -> None:
     ap.add_argument("--json", default=None,
                     help="explicit path for the JSON artifact "
                          "(default: BENCH_<tag>.json when --smoke)")
+    ap.add_argument("--compare", default=None, metavar="BENCH.json",
+                    help="baseline BENCH_<tag>.json; exit 1 on >tol "
+                         "throughput regression of any matched row")
+    ap.add_argument("--compare-tol", type=float, default=0.10,
+                    help="allowed per-row slowdown vs baseline (default 0.10)")
+    ap.add_argument("--compare-norm", choices=["geomean", "none"],
+                    default="geomean",
+                    help="normalize ratios by their geometric mean to cancel "
+                         "host-speed differences (default) or compare raw")
     args = ap.parse_args()
     names = [s for s, _ in suites]
     if args.suite and args.suite not in names:
@@ -128,6 +202,18 @@ def main() -> None:
             json.dump(payload, f, indent=1)
             f.write("\n")
         print(f"# wrote {json_path}", file=sys.stderr)
+
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        failures, report = compare_to_baseline(
+            by_suite, baseline, tol=args.compare_tol, norm=args.compare_norm
+        )
+        print(f"# {report}", file=sys.stderr)
+        for line in failures:
+            print(f"# REGRESSION {line}", file=sys.stderr)
+        if failures:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import edge_detect
+from repro.api import EdgeConfig, edge_detect
 from repro.kernels.tuning import measure_us
 
 CASES = [(3, 1024), (3, 2048), (5, 1024), (5, 2048)]
@@ -41,21 +41,17 @@ def run(smoke: bool = False) -> List[Dict]:
     fused_backend = _fused_backend()
     for size, n in SMOKE_CASES if smoke else CASES:
         img = jnp.asarray(rng.integers(0, 256, (n, n, 3)).astype(np.uint8))
-        d = 4 if size == 5 else 2
-        variant = "v2" if size == 5 else "separable"
+        operator = "sobel5" if size == 5 else "sobel3"
+        base = EdgeConfig(operator=operator).resolved()
+        d, variant = base.directions, base.variant
 
-        def pipeline(x, backend, v=variant, s=size, dd=d):
-            return edge_detect(
-                x, size=s, directions=dd, variant=v, normalize=True,
-                backend=backend,
-            )
+        def pipeline(x, cfg):
+            return edge_detect(x, cfg).magnitude
 
-        legacy = jax.jit(lambda x: pipeline(x, "xla"))
-        fused = jax.jit(lambda x: pipeline(x, fused_backend))
-        ref = jax.jit(lambda x: edge_detect(
-            x, size=size, directions=d, variant="direct", normalize=True,
-            backend="xla",
-        ))
+        legacy = jax.jit(lambda x: pipeline(x, base.replace(backend="xla")))
+        fused = jax.jit(lambda x: pipeline(x, base.replace(backend=fused_backend)))
+        ref = jax.jit(lambda x: pipeline(
+            x, base.replace(variant="direct", backend="xla")))
         us_legacy = measure_us(legacy, img, iters=3)
         us_fused = measure_us(fused, img, iters=3)
         us_ref = measure_us(ref, img, iters=3)

@@ -1,18 +1,19 @@
-"""Quickstart: four-directional 5x5 Sobel edge detection in three lines.
+"""Quickstart: multi-directional edge detection through the repro.api facade.
 
-Runs the whole paper pipeline (gray -> pad -> fused multi-directional Sobel
--> RSS magnitude) on synthetic images, compares all four kernel variants, and
-checks them against the Pallas kernel (interpret mode on CPU).
+One entry point, one frozen config, one structured result: runs the paper's
+four-directional 5x5 RG-v2 pipeline, swaps in other registered operators
+(Scharr / Prewitt / extended 7x7 Sobel), compares the kernel-variant ladder,
+and cross-checks the fused Pallas megakernel against pure XLA (interpret
+mode on CPU) — bit-exact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api import EdgeConfig, edge_detect
 from repro.configs import get_config
-from repro.core import SobelParams, edge_detect, ssim
+from repro.core import SobelParams, list_operators, ssim
 from repro.data.synthetic import image_batch
-from repro.kernels import sobel as sobel_kernel
 
 
 def main():
@@ -21,24 +22,40 @@ def main():
     print(f"input batch: {images.shape} {images.dtype}")
 
     # --- the three-liner ---
-    edges = edge_detect(images, size=5, directions=4, variant="v2")
-    print(f"edges: {edges.shape}, max={float(edges.max()):.1f}")
+    result = edge_detect(images, EdgeConfig(operator="sobel5"))
+    print(f"edges: {result.magnitude.shape}, layout={result.layout}, "
+          f"max={float(result.magnitude.max()):.1f}")
+
+    # --- structured outputs: components, orientation, per-image peak ---
+    rich = edge_detect(images, EdgeConfig(
+        with_components=True, with_orientation=True, with_max=True))
+    print(f"components: {rich.components.shape}, "
+          f"orientation in [{float(rich.orientation.min()):.2f}, "
+          f"{float(rich.orientation.max()):.2f}] rad, peaks={rich.peak}")
+
+    # --- the whole operator registry through the same call ---
+    for op in list_operators():
+        out = edge_detect(images, EdgeConfig(operator=op, normalize=False))
+        print(f"operator {op:10s}: resolved variant={out.config.variant}, "
+              f"directions={out.config.directions}, "
+              f"mean={float(out.magnitude.mean()):.1f}")
 
     # --- variant ladder agreement (paper Fig. 7 check) ---
-    ref = edge_detect(images, variant="direct", normalize=False)
+    ref = edge_detect(images, EdgeConfig(variant="direct", normalize=False))
     for variant in ("separable", "v1", "v2"):
-        out = edge_detect(images, variant=variant, normalize=False)
-        s = float(jnp.mean(ssim(out, ref)))
+        out = edge_detect(images, EdgeConfig(variant=variant, normalize=False))
+        s = float(jnp.mean(ssim(out.magnitude, ref.magnitude)))
         print(f"variant {variant:10s}: SSIM vs naive = {s:.6f}")
 
-    # --- fused Pallas kernel (TPU target; interpret-validated on CPU) ---
-    kern = sobel_kernel(images, variant="v2", block_h=64)
-    err = float(jnp.max(jnp.abs(kern - ref)))
+    # --- fused Pallas megakernel (TPU target; interpret-validated on CPU) ---
+    kern = edge_detect(images, EdgeConfig(
+        normalize=False, backend="pallas-interpret", block_h=64))
+    err = float(jnp.max(jnp.abs(kern.magnitude - ref.magnitude)))
     print(f"pallas kernel max |err| vs naive reference: {err:.2e}")
 
     # --- generalized weights (paper §3.2) ---
-    custom = edge_detect(images, params=SobelParams(a=1, b=3, m=8, n=4))
-    print(f"custom-weight edges: max={float(custom.max()):.1f}")
+    custom = edge_detect(images, EdgeConfig(params=SobelParams(a=1, b=3, m=8, n=4)))
+    print(f"custom-weight edges: max={float(custom.magnitude.max()):.1f}")
 
 
 if __name__ == "__main__":

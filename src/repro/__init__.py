@@ -1,4 +1,8 @@
 """repro: multi-directional Sobel operator (Chang et al., CS.DC 2023),
-TPU-native, embedded in a multi-pod JAX training/serving framework."""
+TPU-native, embedded in a multi-pod JAX training/serving framework.
 
-__version__ = "1.0.0"
+User-facing entry point: ``repro.api`` —
+``edge_detect(images, EdgeConfig(...)) -> EdgeResult`` over the declarative
+operator registry in ``repro.core.filters``."""
+
+__version__ = "1.1.0"

@@ -1,0 +1,191 @@
+"""repro.api — the single user-facing facade for the edge-detection stack.
+
+One call::
+
+    from repro.api import EdgeConfig, edge_detect
+
+    result = edge_detect(frames, EdgeConfig(operator="scharr3"))
+    result.magnitude      # (..., H, W) edge image
+    result.orientation    # present when with_orientation=True
+    result.components     # (..., D, H, W) when with_components=True
+    result.peak           # (...,) per-image max when with_max/normalize
+
+:class:`EdgeConfig` is one frozen dataclass — operator (any name in the
+``repro.core.filters`` registry), directions, variant, padding, backend,
+block overrides, and output selection — threaded verbatim through
+``repro.kernels.dispatch`` down to the Pallas megakernel / XLA reference.
+:class:`EdgeResult` is a structured output; both are registered pytrees, so
+the facade composes with ``jax.jit``/``vmap``/sharding.
+
+Input layout is auto-detected (``HW`` / ``HWC`` / ``NHW`` / ``NHWC`` /
+batched video ``NTHW``/``NTHWC``): a trailing dimension of exactly 3 on a
+>= 3-D input is treated as RGB channels; everything before the spatial
+``(H, W)`` pair is batch. Pass ``layout=`` to override (e.g. a genuine
+3-pixel-wide grayscale image).
+
+The legacy entry points — ``repro.core.pipeline.edge_detect``,
+``repro.kernels.dispatch.{sobel,edge_detect}``,
+``repro.kernels.ops.{sobel,edge_pipeline}`` — are deprecation-warning shims
+over this module and remain bit-exact with it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import SobelParams, get_operator
+
+__all__ = [
+    "EdgeConfig",
+    "EdgeResult",
+    "edge_detect",
+    "detect_layout",
+    "LAYOUTS",
+]
+
+# Recognized canonical layouts, in detection order of dims.
+LAYOUTS = ("HW", "HWC", "NHW", "NHWC", "NTHW", "NTHWC")
+
+
+def detect_layout(shape: Tuple[int, ...]) -> str:
+    """Canonical layout string for an input shape.
+
+    Rule: a trailing dim of exactly 3 on a >= 3-D input is the RGB channel
+    axis; the last two remaining dims are ``(H, W)``; every leading dim is
+    batch (``N``, then ``T`` for video stacks). 2-D input is one grayscale
+    image.
+    """
+    ndim = len(shape)
+    rgb = ndim >= 3 and shape[-1] == 3
+    spatial = ndim - (1 if rgb else 0)
+    if spatial < 2:
+        raise ValueError(f"cannot interpret shape {shape} as image(s)")
+    batch = spatial - 2
+    # 0/1/2 batch dims get the canonical names; deeper stacks are still
+    # accepted (every leading dim is batch) under a generic "N..." prefix.
+    prefix = ("", "N", "NT")[batch] if batch <= 2 else "N" * batch
+    return prefix + "HW" + ("C" if rgb else "")
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeConfig:
+    """Everything one edge-detection call needs, in one frozen value.
+
+    Fields:
+      operator:   registered operator name (``sobel5`` | ``sobel3`` |
+                  ``scharr3`` | ``prewitt3`` | ``sobel7`` | custom).
+      directions: direction count; 0 = the operator's maximum.
+      variant:    algorithmic variant (``direct``/``separable``/``v1``/``v2``);
+                  ``auto`` = the operator's best. Unsupported ladder variants
+                  coerce down (all variants are mathematically identical).
+      params:     custom generalized weights (Sobel-5x5 family; paper §3.2).
+      padding:    boundary rule: ``reflect`` | ``edge`` | ``zero``.
+      normalize:  scale magnitude into [0, 255] per image (display form).
+      backend:    ``auto`` | ``pallas-tpu`` | ``pallas-interpret`` | ``xla``;
+                  None = auto. Outputs are bit-exact across backends.
+      block_h/block_w: Pallas tile override; None = tuning cache / default.
+      with_components:  also return per-direction gradients ``(..., D, H, W)``.
+      with_orientation: also return gradient orientation ``atan2(G_y, G_x)``.
+      with_max:         also return the per-image peak of the unnormalized
+                        magnitude (free on the fused Pallas path).
+    """
+
+    operator: str = "sobel5"
+    directions: int = 0
+    variant: str = "auto"
+    params: Optional[SobelParams] = None
+    padding: str = "reflect"
+    normalize: bool = True
+    backend: Optional[str] = None
+    block_h: Optional[int] = None
+    block_w: Optional[int] = None
+    with_components: bool = False
+    with_orientation: bool = False
+    with_max: bool = False
+
+    def replace(self, **kw) -> "EdgeConfig":
+        return dataclasses.replace(self, **kw)
+
+    def resolved(self) -> "EdgeConfig":
+        """Fill ``auto``/0 fields from the operator spec and validate.
+
+        Idempotent; raises for unknown operators, unsupported directions, or
+        unknown variants. The resolved config is what gets threaded through
+        dispatch -> kernels (and recorded in :class:`EdgeResult`).
+        """
+        spec = get_operator(self.operator, self.params)
+        return self.replace(
+            directions=spec.resolve_directions(self.directions),
+            variant=spec.resolve_variant(self.variant),
+        )
+
+    @property
+    def spec(self):
+        return get_operator(self.operator, self.params)
+
+
+# Config is pure static data — by-value (hashable) through jit, like a str.
+jax.tree_util.register_static(EdgeConfig)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EdgeResult:
+    """Structured output of :func:`edge_detect`.
+
+    ``magnitude`` is always present; the optional fields mirror the
+    ``with_*`` output selection of :class:`EdgeConfig`. ``layout`` is the
+    detected (or overridden) input layout; ``config`` is the fully resolved
+    :class:`EdgeConfig` that produced the result.
+    """
+
+    magnitude: jnp.ndarray                     # (..., H, W) f32
+    components: Optional[jnp.ndarray] = None   # (..., D, H, W) f32
+    orientation: Optional[jnp.ndarray] = None  # (..., H, W) f32, radians
+    peak: Optional[jnp.ndarray] = None         # (...,) f32 per-image max
+    layout: str = "HW"
+    config: Optional[EdgeConfig] = None
+
+    def tree_flatten(self):
+        leaves = (self.magnitude, self.components, self.orientation, self.peak)
+        return leaves, (self.layout, self.config)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        layout, config = aux
+        magnitude, components, orientation, peak = leaves
+        return cls(magnitude, components, orientation, peak, layout, config)
+
+
+def edge_detect(
+    images,
+    config: Optional[EdgeConfig] = None,
+    *,
+    layout: Optional[str] = None,
+    **overrides,
+) -> EdgeResult:
+    """Run the full edge-detection pipeline on ``images``.
+
+    Args:
+      images: ``HW`` / ``HWC`` / ``NHW`` / ``NHWC`` grayscale or RGB images,
+        or batched video stacks (``NTHW`` / ``NTHWC``); u8 or float.
+      config: an :class:`EdgeConfig`; None = defaults.
+      layout: explicit layout override (skips auto-detection).
+      **overrides: convenience — field overrides applied to ``config`` via
+        ``dataclasses.replace`` (e.g. ``edge_detect(x, operator="scharr3")``).
+
+    Returns:
+      :class:`EdgeResult` with batch dims mirroring the input's.
+    """
+    from repro.kernels import dispatch
+
+    cfg = (config or EdgeConfig())
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cfg = cfg.resolved()
+    images = jnp.asarray(images)
+    layout = layout or detect_layout(images.shape)
+    return dispatch.edge(images, cfg, layout=layout)

@@ -76,12 +76,29 @@ class ModelConfig:
     # --- image pipeline (sobel-hd: the paper's own workload) ---
     image_h: int = 0
     image_w: int = 0
-    sobel_size: int = 5
+    sobel_operator: str = "sobel5"   # repro.core.filters registry name ("" = from sobel_size)
+    sobel_size: int = 5              # legacy selector; sobel_operator wins when set
     sobel_directions: int = 4
     sobel_variant: str = "v2"
     sobel_backend: str = "auto"      # dispatch backend: auto | pallas-tpu | pallas-interpret | xla
     sobel_block_h: int = 0           # Pallas tile rows; 0 = tuning cache / default
     sobel_block_w: int = 0           # Pallas tile cols; 0 = tuning cache / default
+
+    def edge_config(self, **overrides):
+        """This config's image pipeline as a ``repro.api.EdgeConfig``."""
+        from repro.api import EdgeConfig
+        from repro.core.filters import operator_for_size
+
+        operator = self.sobel_operator or operator_for_size(self.sobel_size)
+        cfg = EdgeConfig(
+            operator=operator,
+            directions=self.sobel_directions,
+            variant=self.sobel_variant,
+            backend=self.sobel_backend,
+            block_h=self.sobel_block_h or None,
+            block_w=self.sobel_block_w or None,
+        )
+        return cfg.replace(**overrides) if overrides else cfg
 
     # --- training/runtime ---
     tie_embeddings: bool = False

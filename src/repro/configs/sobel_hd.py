@@ -2,17 +2,23 @@
 batched four-directional 5x5 Sobel edge detection (RG-v2), sharded
 batch -> (pod, data), image rows -> model.
 
-Backend routing goes through ``repro.kernels.dispatch`` (``auto`` = fused
-2-D-tiled Pallas kernel on TPU, pure XLA elsewhere). The full-size config
-pins the paper-style block geometry; the smoke config leaves the block
-shape to the ``repro.kernels.tuning`` cache / defaults so CPU tests stay
-independent of any tuned state.
+The image pipeline knobs are one ``repro.api.EdgeConfig`` away:
+``cfg.edge_config()`` converts the ModelConfig fields (operator /
+directions / variant / backend / block overrides) into the facade config
+that ``launch.dryrun``, ``launch.serve`` and the examples thread through
+``repro.api.edge_detect``. ``sobel_operator`` names any registered
+operator (sobel5 / sobel3 / scharr3 / prewitt3 / sobel7 / custom).
+
+The full-size config pins the paper-style block geometry; the smoke config
+leaves the block shape to the ``repro.kernels.tuning`` cache / defaults so
+CPU tests stay independent of any tuned state.
 """
 from repro.configs.base import ModelConfig, register
 
 FULL = ModelConfig(
     name="sobel-hd", family="image",
-    image_h=2048, image_w=2048, sobel_size=5, sobel_directions=4, sobel_variant="v2",
+    image_h=2048, image_w=2048,
+    sobel_operator="sobel5", sobel_directions=4, sobel_variant="v2",
     sobel_backend="auto", sobel_block_h=64, sobel_block_w=256,
 )
 

@@ -1,6 +1,12 @@
-"""Core library: the paper's multi-directional Sobel operator."""
+"""Core library: the paper's multi-directional Sobel operator + the
+declarative operator registry (``OperatorSpec``)."""
 from repro.core.filters import (  # noqa: F401
+    OperatorSpec,
     SobelParams,
+    get_operator,
+    list_operators,
+    make_separable_spec,
+    register_operator,
     filter_bank_3x3,
     filter_bank_5x5,
     kd,

@@ -1,23 +1,41 @@
-"""Generalized multi-directional Sobel filters (paper §3.1–§3.2, Eqs. 3, 5, 10, 18).
+"""Generalized multi-directional edge filters + the declarative operator registry.
 
-All filters are parameterized by ``SobelParams(a, b, m, n)``; the paper's (and
-OpenCV's) 5x5 weights correspond to ``a=1, b=2, m=6, n=4``.
+Paper §3.1–§3.2 (Eqs. 3, 5, 10, 18): all 5x5 filters are parameterized by
+``SobelParams(a, b, m, n)``; the paper's (and OpenCV's) weights correspond to
+``a=1, b=2, m=6, n=4``.
 
 Orientation convention: filters are applied as *correlation* (OpenCV
 ``filter2D`` semantics), i.e. ``G[y, x] = sum_{i,j} K[i, j] * I[y+i-r, x+j-r]``.
 This matches the paper's row-indexed aggregation equations (Eq. 7, 13, 17),
 where vector ``k_i`` is applied to input row ``v - r + i``.
+
+The registry part: every operator the stack can run — Sobel 3x3/5x5, Scharr,
+Prewitt, the extended 7x7 Sobel (Bogdan et al., 2019), and anything a user
+registers — is one :class:`OperatorSpec`: a frozen, hashable declaration of
+its dense taps, separable factors, supported direction counts, and (where
+the paper's operator-transformation decomposition applies) the K_d± data
+that unlocks the RG-v1/RG-v2 variants. ``repro.core.sobel``, the Pallas
+megakernel (``repro.kernels.edge``), dispatch, and the tuning cache all
+consume specs — no layer hardcodes taps.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import functools
+from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "SobelParams",
+    "OperatorSpec",
+    "register_operator",
+    "get_operator",
+    "list_operators",
+    "operator_for_size",
+    "make_separable_spec",
     "kx",
     "ky",
     "kd",
@@ -190,3 +208,283 @@ def filter_bank_3x3(directions: int = 2) -> np.ndarray:
 
 def as_jnp(bank: np.ndarray, dtype=jnp.float32) -> jnp.ndarray:
     return jnp.asarray(bank, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Declarative operator registry
+# ---------------------------------------------------------------------------
+
+def _tupleize(a) -> tuple:
+    """np array -> nested tuple of python floats (hashable, exact f32 values)."""
+    a = np.asarray(a, np.float32)
+    if a.ndim == 1:
+        return tuple(float(v) for v in a)
+    return tuple(_tupleize(row) for row in a)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    """One edge operator, declaratively: everything the stack needs to run it.
+
+    All array-valued fields are stored as nested tuples of exact f32 values,
+    so a spec is hashable — it can be a jit static argument and (being
+    registered as a static pytree) crosses transformation boundaries freely.
+
+    Fields:
+      name:       registry key (``"sobel5"``, ``"scharr3"``, ...).
+      size:       odd kernel side length (3 / 5 / 7 / ...).
+      directions: supported direction counts, e.g. ``(2, 4)``.
+      variants:   supported algorithmic variants in ladder order, e.g.
+                  ``("direct", "separable", "v1", "v2")``. Requesting an
+                  unsupported ladder variant resolves to the best supported
+                  one (see :meth:`resolve_variant`).
+      taps:       ``(D_max, size, size)`` dense correlation taps in direction
+                  order ``(K_x, K_y[, K_d, K_dt])``.
+      sep:        per-direction ``(col, row)`` separable factors (or None
+                  for directions that are only available dense). ``K = col
+                  (x) row`` must hold exactly; enforced at registration.
+      v2_factors: the paper's Eq. 18 split of K_d- as
+                  ``(col_f, col_d, row_d)`` — ``row_f`` is K_x's row vector
+                  by construction (RG-v2's key reuse), so it is not stored.
+                  Present only when the ``v2`` variant is supported.
+    """
+
+    name: str
+    size: int
+    directions: Tuple[int, ...]
+    variants: Tuple[str, ...]
+    taps: tuple
+    sep: tuple
+    v2_factors: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.size % 2 != 1 or self.size < 3:
+            raise ValueError(f"operator size must be odd >= 3, got {self.size}")
+        if len(self.taps) < max(self.directions):
+            raise ValueError(
+                f"{self.name}: {len(self.taps)} tap matrices for "
+                f"directions={self.directions}"
+            )
+        for k in self.taps:
+            if len(k) != self.size or any(len(r) != self.size for r in k):
+                raise ValueError(f"{self.name}: taps are not {self.size}x{self.size}")
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def radius(self) -> int:
+        return self.size // 2
+
+    # -- numeric views (tuples -> arrays at trace time; exact round-trip) ---
+    def bank(self, directions: Optional[int] = None) -> np.ndarray:
+        """(D, size, size) dense f32 filter bank."""
+        d = directions or max(self.directions)
+        return np.asarray(self.taps[:d], np.float32)
+
+    def sep_factors(self, direction: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """(col, row) f32 factors of direction ``direction``, or None."""
+        if direction >= len(self.sep) or self.sep[direction] is None:
+            return None
+        col, row = self.sep[direction]
+        return np.asarray(col, np.float32), np.asarray(row, np.float32)
+
+    def kd_plus_dense(self) -> np.ndarray:
+        """K_d+ = K_d + K_dt (Eq. 10)."""
+        return self.bank(4)[2] + self.bank(4)[3]
+
+    def kd_minus_dense(self) -> np.ndarray:
+        """K_d- = K_d - K_dt (Eq. 10)."""
+        return self.bank(4)[2] - self.bank(4)[3]
+
+    def v2_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(col_f, col_d, row_d) f32 arrays of the Eq. 18 split."""
+        assert self.v2_factors is not None
+        col_f, col_d, row_d = self.v2_factors
+        return (
+            np.asarray(col_f, np.float32),
+            np.asarray(col_d, np.float32),
+            np.asarray(row_d, np.float32),
+        )
+
+    # -- request resolution -------------------------------------------------
+    def resolve_variant(self, variant: Optional[str]) -> str:
+        """Map a requested ladder variant onto this operator.
+
+        ``None``/``"auto"`` -> the operator's best (last) variant. A known
+        ladder variant the operator doesn't implement falls back to the best
+        supported one (e.g. 3x3 has no diagonal transform: v2 -> separable),
+        preserving the pre-registry coercion behavior. Unknown names raise.
+        """
+        ladder = ("direct", "separable", "v1", "v2")
+        if variant is None or variant == "auto":
+            return self.variants[-1]
+        if variant in self.variants:
+            return variant
+        if variant in ladder:
+            best = [v for v in self.variants if ladder.index(v) <= ladder.index(variant)]
+            return best[-1] if best else self.variants[0]
+        raise ValueError(
+            f"unknown variant {variant!r}; expected one of {ladder}"
+        )
+
+    def resolve_directions(self, directions: Optional[int]) -> int:
+        """``None``/``0`` -> the operator's max; otherwise validate."""
+        if not directions:
+            return max(self.directions)
+        if directions not in self.directions:
+            raise ValueError(
+                f"operator {self.name!r} supports directions {self.directions}, "
+                f"got {directions}"
+            )
+        return directions
+
+
+# A spec carries only static data — register it as a leafless pytree so jit
+# treats it by-value (hashable equality), like a string or an int.
+jax.tree_util.register_static(OperatorSpec)
+
+
+def _check_sep_reconstructs(spec: OperatorSpec) -> None:
+    """Separable factors must reconstruct the dense taps *exactly* (f32)."""
+    for d in range(len(spec.taps)):
+        fac = spec.sep_factors(d)
+        if fac is None:
+            continue
+        col, row = fac
+        dense = np.outer(col, row).astype(np.float32)
+        if not np.array_equal(dense, spec.bank(d + 1)[d]):
+            raise ValueError(
+                f"{spec.name}: separable factors of direction {d} do not "
+                f"reconstruct the dense taps exactly"
+            )
+
+
+_OPERATOR_BUILDERS: Dict[str, Callable[[Optional[SobelParams]], OperatorSpec]] = {}
+
+
+def register_operator(
+    name: str,
+    builder: "Callable[[Optional[SobelParams]], OperatorSpec] | OperatorSpec",
+    *,
+    overwrite: bool = False,
+) -> None:
+    """Register an operator under ``name``.
+
+    ``builder`` is either a constant :class:`OperatorSpec` or a callable
+    ``params -> OperatorSpec`` (the Sobel 5x5 family is parameterized by
+    :class:`SobelParams`; fixed-weight operators ignore ``params``). The
+    separable-factor/dense-tap consistency invariant is enforced here.
+    """
+    if name in _OPERATOR_BUILDERS and not overwrite:
+        raise ValueError(f"operator {name!r} already registered")
+    if isinstance(builder, OperatorSpec):
+        spec = builder
+
+        def builder(_params, _spec=spec):  # noqa: F811 — constant spec closure
+            return _spec
+
+    _check_sep_reconstructs(builder(None))
+    _OPERATOR_BUILDERS[name] = builder
+    get_operator.cache_clear()
+
+
+@functools.lru_cache(maxsize=128)
+def get_operator(name: str, params: Optional[SobelParams] = None) -> OperatorSpec:
+    """Look up a registered operator (optionally with custom weights)."""
+    if name not in _OPERATOR_BUILDERS:
+        raise KeyError(
+            f"unknown operator {name!r}; registered: {sorted(_OPERATOR_BUILDERS)}"
+        )
+    return _OPERATOR_BUILDERS[name](params)
+
+
+def list_operators() -> Tuple[str, ...]:
+    return tuple(sorted(_OPERATOR_BUILDERS))
+
+
+def operator_for_size(size: int) -> str:
+    """Legacy ``size=3|5`` kwargs -> registry name (back-compat shims)."""
+    names = {3: "sobel3", 5: "sobel5", 7: "sobel7"}
+    if size not in names:
+        raise ValueError(f"size must be one of {sorted(names)}, got {size}")
+    return names[size]
+
+
+def make_separable_spec(
+    name: str,
+    col: "np.ndarray | tuple",
+    row: "np.ndarray | tuple",
+) -> OperatorSpec:
+    """Build a 2-direction spec from one separable derivative filter.
+
+    ``K_x = col (x) row`` and ``K_y = K_x^T`` — the shape of every classical
+    derivative operator (Sobel/Scharr/Prewitt and their extensions). This is
+    also the documented hook for registering custom operators (DESIGN.md §5).
+    """
+    col = np.asarray(col, np.float32)
+    row = np.asarray(row, np.float32)
+    if col.ndim != 1 or col.shape != row.shape:
+        raise ValueError("col/row must be equal-length 1-D vectors")
+    gx = np.outer(col, row).astype(np.float32)
+    gy = gx.T.copy()
+    return OperatorSpec(
+        name=name,
+        size=int(col.shape[0]),
+        directions=(2,),
+        variants=("direct", "separable"),
+        taps=_tupleize(np.stack([gx, gy])),
+        sep=(( _tupleize(col), _tupleize(row)), (_tupleize(row), _tupleize(col))),
+    )
+
+
+# -- built-in specs ---------------------------------------------------------
+
+def _sobel5_builder(params: Optional[SobelParams]) -> OperatorSpec:
+    p = params or SobelParams()
+    a, col_x, row_x = kx_factors(p)
+    _, col_y, row_y = ky_factors(p)
+    (col_f, _row_f), (col_d, row_d) = kd_minus_factors(p)
+    return OperatorSpec(
+        name="sobel5",
+        size=5,
+        directions=(2, 4),
+        variants=("direct", "separable", "v1", "v2"),
+        taps=_tupleize(filter_bank_5x5(p)),
+        # a folded into the columns exactly as the pre-registry code computed
+        # it (``a * col`` in numpy f32) — keeps outputs bit-identical.
+        sep=((_tupleize(a * col_x), _tupleize(row_x)),
+             (_tupleize(a * col_y), _tupleize(row_y))),
+        v2_factors=(_tupleize(col_f), _tupleize(col_d), _tupleize(row_d)),
+    )
+
+
+def _sobel3_builder(params: Optional[SobelParams]) -> OperatorSpec:
+    # 3x3 has no SobelParams generalization; params are accepted-and-ignored
+    # to honor the legacy ``sobel(size=3, params=...)`` call shape.
+    return OperatorSpec(
+        name="sobel3",
+        size=3,
+        directions=(2, 4),
+        variants=("direct", "separable"),
+        taps=_tupleize(filter_bank_3x3(4)),
+        sep=((_tupleize([1.0, 2.0, 1.0]), _tupleize([-1.0, 0.0, 1.0])),
+             (_tupleize([-1.0, 0.0, 1.0]), _tupleize([1.0, 2.0, 1.0]))),
+    )
+
+
+# Extended 7x7 Sobel (Bogdan et al. 2019, "Custom Extended Sobel Filters"):
+# binomial smoothing of order 6 x the order-7 Sobel derivative vector —
+# identical to OpenCV's getDerivKernels(1, 0, ksize=7).
+_SOBEL7_SMOOTH = (1.0, 6.0, 15.0, 20.0, 15.0, 6.0, 1.0)
+_SOBEL7_DERIV = (-1.0, -4.0, -5.0, 0.0, 5.0, 4.0, 1.0)
+
+register_operator("sobel5", _sobel5_builder)
+register_operator("sobel3", _sobel3_builder)
+register_operator(
+    "scharr3", make_separable_spec("scharr3", (3.0, 10.0, 3.0), (-1.0, 0.0, 1.0))
+)
+register_operator(
+    "prewitt3", make_separable_spec("prewitt3", (1.0, 1.0, 1.0), (-1.0, 0.0, 1.0))
+)
+register_operator(
+    "sobel7", make_separable_spec("sobel7", _SOBEL7_SMOOTH, _SOBEL7_DERIV)
+)

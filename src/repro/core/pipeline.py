@@ -65,68 +65,78 @@ def edge_detect(
     block_h: Optional[int] = None,
     block_w: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Full pipeline on a batch of images.
+    """Deprecated: full pipeline on a batch of images, kwargs form.
+
+    Use :func:`repro.api.edge_detect` — this shim builds the equivalent
+    :class:`~repro.api.EdgeConfig` and returns ``result.magnitude``
+    (bit-exact with the facade; a test pins this).
 
     Args:
       images: ``(..., H, W)`` grayscale or ``(..., H, W, 3)`` RGB.
       normalize: scale magnitudes into [0, 255] (per image) and saturate —
         the display form used for the paper's Fig. 1/7 outputs.
-      backend: ``repro.kernels.dispatch`` backend (``auto`` / ``pallas-tpu``
-        / ``pallas-interpret`` / ``xla``); None = auto. Pallas backends run
-        the whole pipeline as one fused zero-copy kernel launch.
+      backend: ``auto`` / ``pallas-tpu`` / ``pallas-interpret`` / ``xla``;
+        None = auto. Pallas backends run the whole pipeline as one fused
+        zero-copy kernel launch.
       block_h, block_w: Pallas tile override; None = tuning cache / default.
     Returns:
       ``(..., H, W)`` float32 edge image.
     """
+    import warnings
+
     # Imported here: repro.core must stay importable without repro.kernels
     # (kernels itself builds on repro.core.sobel).
-    from repro.kernels.dispatch import edge_detect as dispatch_edge
+    from repro.api import EdgeConfig, edge_detect as api_edge_detect
+    from repro.core.filters import operator_for_size
 
-    return dispatch_edge(
-        images,
-        size=size,
-        directions=directions,
-        variant=variant,
-        params=params,
-        padding=padding,
-        normalize=normalize,
-        backend=backend,
-        block_h=block_h,
-        block_w=block_w,
+    warnings.warn(
+        "repro.core.pipeline.edge_detect is deprecated; use "
+        "repro.api.edge_detect",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    cfg = EdgeConfig(
+        operator=operator_for_size(size), directions=directions,
+        variant=variant, params=params, padding=padding, normalize=normalize,
+        backend=backend, block_h=block_h, block_w=block_w,
+    )
+    return api_edge_detect(images, cfg).magnitude
 
 
 def make_sharded_edge_fn(
     mesh: Mesh,
+    config=None,
     *,
     batch_axes=("data",),
     row_axis: Optional[str] = "model",
-    size: int = 5,
-    directions: int = 4,
-    variant: str = "v2",
-    params: SobelParams = SobelParams(),
-    backend: Optional[str] = None,
+    **config_overrides,
 ):
     """jit-compiled edge detector with batch sharded over ``batch_axes`` and
     image rows over ``row_axis`` (GSPMD inserts the 2r-row halo exchange).
 
-    Returns ``fn(images: (N, H, W) or (N, H, W, 3)) -> (N, H, W)``.
+    ``config`` is an :class:`~repro.api.EdgeConfig` (defaults to an
+    unnormalized Sobel-5x5 pass); ``config_overrides`` are field overrides,
+    including the legacy ``size=`` selector. Returns
+    ``fn(images: (N, H, W) or (N, H, W, 3)) -> (N, H, W)`` magnitude.
     """
+    from repro.api import EdgeConfig, edge_detect as api_edge_detect
+    from repro.core.filters import operator_for_size
+
+    size = config_overrides.pop("size", None)
+    cfg = config or EdgeConfig(normalize=False)
+    if size is not None:
+        cfg = cfg.replace(operator=operator_for_size(size))
+    if config_overrides:
+        cfg = cfg.replace(**config_overrides)
+    cfg = cfg.resolved()
+
     batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
     row = row_axis if (row_axis and row_axis in mesh.axis_names) else None
     in_spec = P(batch_axes if batch_axes else None, row)
     out_spec = P(batch_axes if batch_axes else None, row)
 
     def fn(images):
-        return edge_detect(
-            images,
-            size=size,
-            directions=directions,
-            variant=variant,
-            params=params,
-            normalize=False,
-            backend=backend,
-        )
+        return api_edge_detect(images, cfg).magnitude
 
     return jax.jit(
         fn,

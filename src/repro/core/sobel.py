@@ -28,7 +28,7 @@ import numpy as np
 from repro.core import filters as F
 from repro.core.filters import SobelParams
 
-__all__ = ["sobel", "sobel_components", "magnitude", "VARIANTS"]
+__all__ = ["sobel", "sobel_components", "spec_components", "magnitude", "VARIANTS"]
 
 VARIANTS = ("direct", "separable", "v1", "v2")
 
@@ -110,96 +110,82 @@ def _correlate2d(x: jnp.ndarray, kernel: np.ndarray, out_h: int, out_w: int) -> 
 
 
 # ---------------------------------------------------------------------------
-# Variant implementations (operate on a pre-padded image; return the four
-# direction components, each of shape (..., H, W))
+# Spec-driven variant ladder (operates on a pre-padded image or a halo'd
+# Pallas tile; returns the direction components, each of shape (..., H, W)).
+# This single implementation is shared by the pure-XLA path AND the kernel
+# body of ``repro.kernels.edge`` — cross-backend bit-exactness by
+# construction.
 # ---------------------------------------------------------------------------
 
-def _components_direct(xp, p: SobelParams, h, w, directions):
-    bank = F.filter_bank_5x5(p)[:directions]
-    return tuple(_correlate2d(xp, k, h, w) for k in bank)
+def _sym_rowpass(xp, dense: np.ndarray, h, w):
+    """Dense correlation exploiting shared/negated rows (Eqs. 13-17).
+
+    One horizontal pass per *distinct* row vector: rows equal to an earlier
+    row reuse its pass, rows equal to its negation reuse it with a subtract.
+    For K_d+ (odd row symmetry ``[k0, k1, 0, -k1, -k0]``) and K_d- (even,
+    ``[r0, r1, r2, r1, r0]``) this reproduces the paper's row-pass structure
+    — and the exact accumulation order of the pre-registry implementation.
+    """
+    dense = np.asarray(dense, np.float32)
+    passes = {}
+    acc = None
+    for i, r_ in enumerate(dense):
+        if not np.any(r_):
+            continue
+        key, nkey = tuple(r_.tolist()), tuple((-r_).tolist())
+        if key in passes:
+            f, sign = passes[key], 1.0
+        elif nkey in passes:
+            f, sign = passes[nkey], -1.0
+        else:
+            f, sign = passes.setdefault(key, _hpass(xp, r_, w)), 1.0
+        term = jax.lax.slice_in_dim(f, i, i + h, axis=-2)
+        if acc is None:
+            acc = term if sign > 0 else -term
+        else:
+            acc = acc + term if sign > 0 else acc - term
+    assert acc is not None
+    return acc
 
 
-def _gx_gy_separable(xp, p: SobelParams, h, w):
-    a, col_x, row_f = F.kx_factors(p)
-    _, col_y, row_s = F.ky_factors(p)
-    f = _hpass(xp, row_f, w)      # (..., H+4, W)  — 4 MACs (zero centre tap)
-    s = _hpass(xp, row_s, w)      # (..., H+4, W)  — 5 MACs
-    gx = _vpass(f, a * col_x, h)  # Eq. 7
-    gy = _vpass(s, a * col_y, h)
-    return gx, gy, f, s
+def spec_components(xp, spec: F.OperatorSpec, h, w, variant: str, directions: int):
+    """Direction components of ``spec`` on the pre-padded image ``xp``.
 
-
-def _gd_plus(xp, p: SobelParams, h, w):
-    """G_d+ via Eq. 13-15: rows are [k0, k1, 0, -k1, -k0]."""
-    k0, k1 = F.kd_plus_rows(p)
-    fk0 = _hpass(xp, k0, w)
-    fk1 = _hpass(xp, k1, w)
-
-    def row(f, t):
-        return jax.lax.slice_in_dim(f, t, t + h, axis=-2)
-
-    # G_d+[v] = Fk0[v-2] + Fk1[v-1] - Fk1[v+1] - Fk0[v+2]
-    return row(fk0, 0) + row(fk1, 1) - row(fk1, 3) - row(fk0, 4)
-
-
-def _gd_minus_v1(xp, p: SobelParams, h, w):
-    """G_d- via Eq. 16-17 (even symmetry: rows are [r0, r1, r2, r1, r0])."""
-    kdm = F.kd_minus(p)
-    r0, r1, r2 = kdm[0], kdm[1], kdm[2]
-    f0 = _hpass(xp, r0, w)
-    f1 = _hpass(xp, r1, w)
-    f2 = _hpass(xp, r2, w)
-
-    def row(f, t):
-        return jax.lax.slice_in_dim(f, t, t + h, axis=-2)
-
-    return row(f0, 0) + row(f1, 1) + row(f2, 2) + row(f1, 3) + row(f0, 4)
-
-
-def _gd_minus_v2(f, xp, p: SobelParams, h, w):
-    """G_d- via Eq. 18-19, reusing K_x's horizontal pass ``f``."""
-    (col_f, _row_f), (col_d, row_d) = F.kd_minus_factors(p)
-    d = _hpass(xp, row_d, w)        # 2-tap difference D = p3 - p1
-    return _vpass(f, col_f, h) - _vpass(d, col_d, h)
-
-
-def _components_5x5(xp, p: SobelParams, h, w, variant: str, directions: int):
+    ``variant``/``directions`` must already be resolved against the spec
+    (``spec.resolve_variant`` / ``spec.resolve_directions``).
+    """
     if variant == "direct":
-        return _components_direct(xp, p, h, w, directions)
+        return tuple(_correlate2d(xp, k, h, w) for k in spec.bank(directions))
 
-    gx, gy, f, _s = _gx_gy_separable(xp, p, h, w)
+    # Separable x/y (Eq. 5-7): one horizontal pass each, columns include the
+    # leading factor a.
+    col_x, row_x = spec.sep_factors(0)
+    col_y, row_y = spec.sep_factors(1)
+    f = _hpass(xp, row_x, w)       # the reused F pass (4 MACs: zero centre)
+    s = _hpass(xp, row_y, w)
+    gx = _vpass(f, col_x, h)
+    gy = _vpass(s, col_y, h)
     if directions == 2:
         return (gx, gy)
 
     if variant == "separable":
-        gd = _correlate2d(xp, F.kd(p), h, w)
-        gdt = _correlate2d(xp, F.kdt(p), h, w)
+        bank = spec.bank(4)
+        gd = _correlate2d(xp, bank[2], h, w)
+        gdt = _correlate2d(xp, bank[3], h, w)
         return (gx, gy, gd, gdt)
 
-    gd_plus = _gd_plus(xp, p, h, w)
+    # RG-v1/v2: the ± operator transformation (Eq. 10-19).
+    gd_plus = _sym_rowpass(xp, spec.kd_plus_dense(), h, w)
     if variant == "v1":
-        gd_minus = _gd_minus_v1(xp, p, h, w)
+        gd_minus = _sym_rowpass(xp, spec.kd_minus_dense(), h, w)
     elif variant == "v2":
-        gd_minus = _gd_minus_v2(f, xp, p, h, w)
+        col_f, col_d, row_d = spec.v2_arrays()
+        d = _hpass(xp, row_d, w)   # 2-tap difference D = p3 - p1
+        gd_minus = _vpass(f, col_f, h) - _vpass(d, col_d, h)
     else:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
     gd = (gd_plus + gd_minus) * 0.5   # Eq. 11
     gdt = (gd_plus - gd_minus) * 0.5
-    return (gx, gy, gd, gdt)
-
-
-def _components_3x3(xp, h, w, variant: str, directions: int):
-    bank = F.filter_bank_3x3(directions)
-    if variant == "direct":
-        return tuple(_correlate2d(xp, k, h, w) for k in bank)
-    # Classical separable factorization: Gx = [1,2,1]^T x [-1,0,1], etc.
-    gx = _vpass(_hpass(xp, np.float32([-1, 0, 1]), w), np.float32([1, 2, 1]), h)
-    gy = _vpass(_hpass(xp, np.float32([1, 2, 1]), w), np.float32([-1, 0, 1]), h)
-    if directions == 2:
-        return (gx, gy)
-    # Diagonal 3x3 via the same +-transform trick (Kd+Kdt has odd row symmetry).
-    gd = _correlate2d(xp, F.SOBEL3_GD, h, w)
-    gdt = _correlate2d(xp, F.SOBEL3_GDT, h, w)
     return (gx, gy, gd, gdt)
 
 
@@ -220,24 +206,27 @@ def sobel_components(
     image: jnp.ndarray,
     *,
     size: int = 5,
-    directions: int = 4,
+    directions: int = 0,
     variant: str = "v2",
     params: SobelParams = SobelParams(),
     padding: str = "reflect",
+    operator: "str | None" = None,
 ) -> Tuple[jnp.ndarray, ...]:
-    """Per-direction gradient images ``(G_x, G_y[, G_d, G_dt])``."""
-    if size not in (3, 5):
-        raise ValueError(f"size must be 3 or 5, got {size}")
-    if directions not in (2, 4):
-        raise ValueError(f"directions must be 2 or 4, got {directions}")
-    if variant not in VARIANTS:
+    """Per-direction gradient images ``(G_x, G_y[, G_d, G_dt])``.
+
+    ``operator`` selects any registered :class:`~repro.core.filters.OperatorSpec`
+    by name (``sobel5``/``sobel3``/``scharr3``/``prewitt3``/``sobel7``/...);
+    when omitted, the legacy ``size`` kwarg picks the Sobel operator of that
+    size. ``directions`` of 0 means the operator's maximum.
+    """
+    if variant not in VARIANTS and variant != "auto":
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
-    r = size // 2
+    spec = F.get_operator(operator or F.operator_for_size(size), params)
+    directions = spec.resolve_directions(directions)
+    variant = spec.resolve_variant(variant)
     x = image.astype(jnp.float32)
-    xp, h, w = _pad(x, r, padding)
-    if size == 3:
-        return _components_3x3(xp, h, w, variant, directions)
-    return _components_5x5(xp, params, h, w, variant, directions)
+    xp, h, w = _pad(x, spec.radius, padding)
+    return spec_components(xp, spec, h, w, variant, directions)
 
 
 def magnitude(components: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
@@ -262,22 +251,26 @@ def sobel(
     image: jnp.ndarray,
     *,
     size: int = 5,
-    directions: int = 4,
+    directions: int = 0,
     variant: str = "v2",
     params: SobelParams = SobelParams(),
     padding: str = "reflect",
     return_components: bool = False,
+    operator: "str | None" = None,
 ):
-    """Multi-directional Sobel edge magnitude ``G`` (paper Eq. 4).
+    """Multi-directional edge magnitude ``G`` (paper Eq. 4).
 
     Args:
       image: ``(..., H, W)`` grayscale image(s); any real dtype.
-      size: 3 or 5.
-      directions: 2 (``G_x, G_y``) or 4 (+ ``G_d, G_dt``).
-      variant: one of ``direct | separable | v1 | v2`` (identical results).
-      params: generalized weights (paper §3.2).
+      size: 3 or 5 (legacy operator selector; ignored when ``operator`` set).
+      directions: 2 (``G_x, G_y``) or 4 (+ ``G_d, G_dt``); 0 (default) =
+        the operator's maximum (4 for the Sobel 3x3/5x5 family).
+      variant: one of ``direct | separable | v1 | v2`` (identical results;
+        coerced to the operator's best supported variant).
+      params: generalized weights (paper §3.2; Sobel-5x5 family only).
       padding: ``reflect | edge | zero`` (same-size output) or ``valid``.
       return_components: also return the per-direction gradients.
+      operator: registered operator name (overrides ``size``).
     """
     comps = sobel_components(
         image,
@@ -286,6 +279,7 @@ def sobel(
         variant=variant,
         params=params,
         padding=padding,
+        operator=operator,
     )
     g = magnitude(comps)
     if return_components:
@@ -302,5 +296,6 @@ sobel_jit = jax.jit(
         "params",
         "padding",
         "return_components",
+        "operator",
     ),
 )

@@ -1,13 +1,17 @@
-"""Pallas TPU kernels for the paper's compute hot-spot (the Sobel operator).
+"""Pallas TPU kernels for the paper's compute hot-spot (the edge operator).
 
-Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
-(jit'd public wrappers incl. the fused gray->Sobel->normalize
-``edge_pipeline`` megakernel), ``ref.py`` (pure-jnp oracle), ``tiling.py``
-(zero-copy clamped-window geometry + in-kernel boundary handling),
-``tuning.py`` (block-shape autotuner + JSON cache), ``dispatch.py``
-(backend routing: pallas-tpu / pallas-interpret / xla).
+Layout: ``edge.py`` (the unified spec-driven megakernel — one pl.pallas_call
+for every operator in the ``repro.core.filters`` registry, incl. the fused
+gray->Sobel->normalize pipeline), ``tiling.py`` (zero-copy clamped-window
+geometry + in-kernel boundary handling), ``tuning.py`` (block-shape
+autotuner + JSON cache, keyed per operator), ``dispatch.py`` (the
+EdgeConfig engine under the ``repro.api`` facade + backend routing:
+pallas-tpu / pallas-interpret / xla), ``ref.py`` (pure-jnp oracle).
+``sobel5x5.py`` / ``sobel3x3.py`` / ``ops.py`` are back-compat wrappers
+over ``edge.py``.
 """
 from repro.kernels import dispatch, tuning  # noqa: F401
 from repro.kernels.dispatch import sobel as sobel_dispatch  # noqa: F401
+from repro.kernels.edge import edge_pallas  # noqa: F401
 from repro.kernels.ops import edge_pipeline, sobel  # noqa: F401
 from repro.kernels.ref import sobel_ref  # noqa: F401

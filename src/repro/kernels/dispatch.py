@@ -1,9 +1,7 @@
-"""Unified backend dispatch for the multi-directional Sobel operator.
+"""Unified backend dispatch: one EdgeConfig-driven engine, three backends.
 
-One entry point, three execution backends:
-
-  * ``pallas-tpu``       — the fused zero-copy Pallas megakernel, compiled
-                           by Mosaic (the production TPU path).
+  * ``pallas-tpu``       — the fused zero-copy Pallas megakernel
+                           (``repro.kernels.edge``), compiled by Mosaic.
   * ``pallas-interpret`` — the same kernel through the Pallas interpreter
                            (CPU correctness path; bit-exact vs the kernel).
   * ``xla``              — ``repro.core.sobel`` (pure XLA; fastest on CPU,
@@ -11,39 +9,44 @@ One entry point, three execution backends:
 
 ``backend=None``/``"auto"`` resolves to ``pallas-tpu`` on TPU hosts and
 ``xla`` elsewhere. For the Pallas backends, block shapes come from (in
-order): explicit ``block_h``/``block_w`` arguments, the tuning cache
-(``repro.kernels.tuning``, keyed by backend/dtype/size/variant/padding/
+order): explicit ``block_h``/``block_w`` config fields, the tuning cache
+(``repro.kernels.tuning``, keyed by backend/dtype/operator/variant/padding/
 layout/H/W), then a conservative default.
 
-Two entry points:
+:func:`edge` is the engine under the ``repro.api`` facade: it takes the
+*resolved* :class:`~repro.api.EdgeConfig` verbatim, routes to a backend,
+and assembles the structured :class:`~repro.api.EdgeResult` (magnitude,
+optional per-direction components / orientation / per-image peak). All
+backends are mathematically identical; for integer-weight taps the outputs
+are bit-exact across backends (see ``repro.core.sobel.magnitude`` and
+``repro.kernels.tiling.luma``).
 
-  * :func:`sobel`       — magnitude on grayscale input (mirrors
-                          ``repro.core.sobel.sobel``).
-  * :func:`edge_detect` — the full pipeline (RGB->gray, Sobel, normalize).
-                          On the Pallas backends this is ONE fused launch
-                          with zero HBM-side data preparation; on ``xla`` it
-                          is the legacy multi-pass pipeline.
-
-All backends are mathematically identical; for integer-weight params the
-outputs are bit-exact across backends (see ``repro.core.sobel.magnitude``
-and ``repro.kernels.tiling.luma``).
+The historical entry points :func:`sobel` and :func:`edge_detect` are
+deprecation-warning shims over the engine; their outputs are bit-exact with
+the facade's.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import warnings
+from typing import TYPE_CHECKING, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.filters import SobelParams
-from repro.core.sobel import sobel as xla_sobel
-from repro.kernels import ops
+from repro.core.filters import SobelParams, get_operator, operator_for_size
+from repro.core.sobel import magnitude as rss_magnitude
+from repro.core.sobel import sobel_components as core_components
+from repro.kernels import edge as ekern
 from repro.kernels import tuning
+
+if TYPE_CHECKING:  # no runtime import: repro.api imports this module
+    from repro.api import EdgeConfig, EdgeResult
 
 __all__ = [
     "BACKENDS",
     "resolve_backend",
     "choose_block_shape",
+    "edge",
     "sobel",
     "edge_detect",
 ]
@@ -65,7 +68,7 @@ def choose_block_shape(
     h: int,
     w: int,
     *,
-    size: int = 5,
+    operator: str = "sobel5",
     variant: str = "v2",
     dtype: str = "float32",
     backend: str = "pallas-interpret",
@@ -84,18 +87,147 @@ def choose_block_shape(
         return block_h, block_w, "explicit"
     cache = cache if cache is not None else tuning.get_default_cache()
     hit = cache.lookup(
-        tuning.TuneKey(backend, dtype, size, variant, h, w, padding, layout)
+        tuning.TuneKey(backend, dtype, operator, variant, h, w, padding, layout)
     )
     if hit is not None:
         bh, bw = hit
         return block_h or bh, block_w or bw, "tuned"
-    dbh, dbw = ops.default_block_shape(h, w, size)
+    spec = get_operator(operator)
+    dbh, dbw = ekern.default_block_shape(
+        h, w, spec.size, channels=3 if layout == "rgb" else None
+    )
     return block_h or dbh, block_w or dbw, "default"
 
 
 def _kernel_dtype_name(x: jnp.ndarray) -> str:
-    """Dtype the kernel will actually see in HBM (ops.py dtype policy)."""
+    """Dtype the kernel will actually see in HBM (edge.py dtype policy)."""
     return "uint8" if x.dtype == jnp.uint8 else "float32"
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+def edge(
+    images: jnp.ndarray,
+    config: "EdgeConfig",
+    *,
+    layout: Optional[str] = None,
+    tuning_cache: Optional[tuning.TuningCache] = None,
+) -> "EdgeResult":
+    """Run one resolved :class:`~repro.api.EdgeConfig` end to end.
+
+    This is the single funnel every entry point (the ``repro.api`` facade
+    and all legacy shims) goes through: backend resolution, block-shape
+    choice, the fused Pallas launch / XLA reference, and the assembly of
+    the structured result. ``layout`` must name the input layout (the
+    facade auto-detects it; see ``repro.api.detect_layout``).
+    """
+    from repro.api import EdgeResult, detect_layout
+
+    config = config.resolved()
+    images = jnp.asarray(images)
+    layout = layout or detect_layout(images.shape)
+    rgb = layout.endswith("C")
+    backend = resolve_backend(config.backend)
+
+    x = ekern.kernel_dtype(images)
+    if rgb:
+        batch_shape = x.shape[:-3]
+        h, w = x.shape[-3], x.shape[-2]
+        x = x.reshape((-1, h, w, 3))
+    else:
+        batch_shape = x.shape[:-2]
+        h, w = x.shape[-2], x.shape[-1]
+        x = x.reshape((-1, h, w))
+
+    need_comps = config.with_components or config.with_orientation
+    need_peak = config.normalize or config.with_max
+
+    comps = None
+    peak = None  # (B, 1, 1) while normalizing; squeezed into the result
+    if backend == "xla":
+        from repro.core.pipeline import rgb_to_gray
+
+        gray = rgb_to_gray(x) if rgb else x.astype(jnp.float32)
+        ctuple = core_components(
+            gray,
+            operator=config.operator,
+            directions=config.directions,
+            variant=config.variant,
+            params=config.params or SobelParams(),
+            padding=config.padding,
+        )
+        mag = rss_magnitude(ctuple)
+        if need_comps:
+            comps = jnp.stack(ctuple, axis=-3)          # (B, D, H, W)
+        if need_peak:
+            peak = jnp.max(mag, axis=(-2, -1), keepdims=True)
+    else:
+        interpret = backend == "pallas-interpret"
+        bh, bw, _src = choose_block_shape(
+            h, w, operator=config.operator, variant=config.variant,
+            dtype=_kernel_dtype_name(x), backend=backend,
+            padding=config.padding, layout="rgb" if rgb else "gray",
+            block_h=config.block_h, block_w=config.block_w,
+            cache=tuning_cache,
+        )
+        kw = dict(
+            operator=config.operator, variant=config.variant,
+            params=config.params, directions=config.directions,
+            padding=config.padding, block_h=bh, block_w=bw, rgb=rgb,
+            interpret=interpret,
+        )
+        if need_comps:
+            stacked = ekern.edge_pallas(x, out_components=True, **kw)
+            ctuple = tuple(
+                jax.lax.index_in_dim(stacked, d, axis=1, keepdims=False)
+                for d in range(config.directions)
+            )
+            mag = rss_magnitude(ctuple)
+            comps = stacked
+            if need_peak:
+                peak = jnp.max(mag, axis=(-2, -1), keepdims=True)
+        elif need_peak:
+            mag, bmax = ekern.edge_pallas(x, with_max=True, **kw)
+            # Max-of-block-maxes == max over the image (exact).
+            peak = jnp.max(bmax, axis=(-2, -1), keepdims=True)
+        else:
+            mag = ekern.edge_pallas(x, **kw)
+
+    orientation = None
+    if config.with_orientation:
+        # atan2 on bit-identical (G_y, G_x) — bit-exact across backends.
+        orientation = jnp.arctan2(ctuple[1], ctuple[0])
+
+    if config.normalize:
+        # The rescale expression matches the legacy pipeline op-for-op.
+        mag = mag * (255.0 / jnp.maximum(peak, 1e-8))
+
+    def unbatch(a, extra_dims=0):
+        return a.reshape(batch_shape + a.shape[a.ndim - 2 - extra_dims:])
+
+    return EdgeResult(
+        magnitude=unbatch(mag),
+        components=unbatch(comps, extra_dims=1)
+        if config.with_components else None,
+        orientation=unbatch(orientation) if config.with_orientation else None,
+        peak=peak.reshape(batch_shape) if config.with_max else None,
+        layout=layout,
+        config=config,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points (deprecation shims; bit-exact vs the facade)
+# ---------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (repro.api)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def sobel(
@@ -111,30 +243,23 @@ def sobel(
     block_w: Optional[int] = None,
     tuning_cache: Optional[tuning.TuningCache] = None,
 ) -> jnp.ndarray:
-    """Multi-directional Sobel magnitude, routed to the best backend.
+    """Deprecated: multi-directional Sobel magnitude on grayscale input.
 
-    Args mirror :func:`repro.core.sobel.sobel` plus the routing knobs;
-    output is identical for every backend: ``(..., H, W)`` float32.
+    Use ``repro.api.edge_detect(image, EdgeConfig(normalize=False, ...))``.
+    Input is always treated as ``(..., H, W)`` grayscale (no layout
+    detection), matching the historical contract; output is identical.
     """
-    b = resolve_backend(backend)
-    if b == "xla":
-        return xla_sobel(
-            image, size=size, directions=directions, variant=variant,
-            params=params, padding=padding,
-        )
+    from repro.api import EdgeConfig
+
+    _deprecated("repro.kernels.dispatch.sobel", "edge_detect")
     image = jnp.asarray(image)
-    h, w = image.shape[-2], image.shape[-1]
-    bh, bw, _src = choose_block_shape(
-        h, w, size=size, variant=variant,
-        dtype=_kernel_dtype_name(image),
-        backend=b, padding=padding, layout="gray",
-        block_h=block_h, block_w=block_w, cache=tuning_cache,
+    cfg = EdgeConfig(
+        operator=operator_for_size(size), directions=directions,
+        variant=variant, params=params, padding=padding, normalize=False,
+        backend=backend, block_h=block_h, block_w=block_w,
     )
-    return ops.sobel(
-        image, size=size, directions=directions, variant=variant,
-        params=params, padding=padding, block_h=bh, block_w=bw,
-        interpret=(b == "pallas-interpret"),
-    )
+    layout = "N" * max(0, image.ndim - 2) + "HW"
+    return edge(image, cfg, layout=layout, tuning_cache=tuning_cache).magnitude
 
 
 def edge_detect(
@@ -151,41 +276,17 @@ def edge_detect(
     block_w: Optional[int] = None,
     tuning_cache: Optional[tuning.TuningCache] = None,
 ) -> jnp.ndarray:
-    """Full edge-detection pipeline, routed to the best backend.
+    """Deprecated: full edge-detection pipeline, kwargs form.
 
-    On the Pallas backends the whole pipeline — RGB->luma, boundary
-    handling, multi-directional Sobel, per-block maxima for normalization —
-    is one fused kernel launch over the raw frame (see
-    ``repro.kernels.ops.edge_pipeline``); the ``xla`` backend runs the
-    legacy multi-pass pipeline. Outputs are bit-exact across backends.
+    Use ``repro.api.edge_detect`` — this shim builds the equivalent
+    :class:`~repro.api.EdgeConfig` and returns ``result.magnitude``.
     """
-    b = resolve_backend(backend)
-    images = jnp.asarray(images)
-    rgb = images.ndim >= 3 and images.shape[-1] == 3
-    if b == "xla":
-        from repro.core.pipeline import rgb_to_gray
+    from repro.api import EdgeConfig
 
-        gray = rgb_to_gray(images) if rgb else images.astype(jnp.float32)
-        g = xla_sobel(
-            gray, size=size, directions=directions, variant=variant,
-            params=params, padding=padding,
-        )
-        if normalize:
-            peak = jnp.max(g, axis=(-2, -1), keepdims=True)
-            g = g * (255.0 / jnp.maximum(peak, 1e-8))
-        return g
-    if rgb:
-        h, w = images.shape[-3], images.shape[-2]
-    else:
-        h, w = images.shape[-2], images.shape[-1]
-    bh, bw, _src = choose_block_shape(
-        h, w, size=size, variant=variant,
-        dtype=_kernel_dtype_name(images),
-        backend=b, padding=padding, layout="rgb" if rgb else "gray",
-        block_h=block_h, block_w=block_w, cache=tuning_cache,
+    _deprecated("repro.kernels.dispatch.edge_detect", "edge_detect")
+    cfg = EdgeConfig(
+        operator=operator_for_size(size), directions=directions,
+        variant=variant, params=params, padding=padding, normalize=normalize,
+        backend=backend, block_h=block_h, block_w=block_w,
     )
-    return ops.edge_pipeline(
-        images, size=size, directions=directions, variant=variant,
-        params=params, padding=padding, normalize=normalize,
-        block_h=bh, block_w=bw, interpret=(b == "pallas-interpret"),
-    )
+    return edge(jnp.asarray(images), cfg, tuning_cache=tuning_cache).magnitude

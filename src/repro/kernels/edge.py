@@ -1,0 +1,247 @@
+"""Unified spec-driven Pallas megakernel for every registered edge operator.
+
+One ``pallas_call`` wrapper serves the whole operator registry
+(``repro.core.filters.OperatorSpec``): Sobel 3x3/5x5, Scharr, Prewitt, the
+extended 7x7 Sobel, and any user-registered spec. The kernel body is the
+*same* spec-driven variant ladder the pure-XLA path runs
+(``repro.core.sobel.spec_components``) applied to a halo'd VMEM tile, so
+cross-backend bit-exactness holds by construction for every operator.
+
+GPU -> TPU mapping (see DESIGN.md §2) — unchanged from the size-specialized
+predecessors (``sobel5x5.py``/``sobel3x3.py``, now thin wrappers over this
+module):
+
+  * paper's CUDA-block tile ownership + 2r overlap (§4.3.1)  ->  2-D tiled
+    grid; step (k, j) owns a ``block_h x block_w`` output tile and reads a
+    clamped, possibly overlapping ``pl.Unblocked`` window of the raw
+    unpadded frame (``repro.kernels.tiling``); the halo radius r comes from
+    the operator spec (r=1/2/3 for 3x3/5x5/7x7).
+  * warp-shuffle register taps (§4.3.3)  ->  static strided slices of the
+    VMEM-resident tile feeding the VPU.
+  * explicit prefetch (§4.3.4)  ->  Pallas's automatic double buffering.
+
+The kernel is a megakernel for the full edge-detection pipeline: raw u8
+gray or RGB frame in (BT.601 luma per-tile in VMEM), in-kernel boundary
+rule, multi-directional magnitude out — optionally per-direction gradient
+components (``out_components``) and a per-block max (``with_max``) for
+one-pass normalization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.filters import OperatorSpec, SobelParams, get_operator
+from repro.core.sobel import magnitude, spec_components
+from repro.kernels import tuning
+from repro.kernels.tiling import (
+    ALIGN_INTERPRET,
+    ALIGN_TPU_GRAY,
+    ALIGN_TPU_RGB,
+    extend_tile,
+    luma,
+    tile_vmem_bytes,
+    valid_mask,
+    window_spec,
+)
+
+__all__ = ["edge_pallas", "default_interpret", "default_block_shape", "kernel_dtype"]
+
+
+def default_interpret() -> bool:
+    """Interpret (CPU emulation) unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def default_block_shape(
+    h: int,
+    w: int,
+    size: int = 5,
+    *,
+    channels: "int | None" = None,
+    max_vmem_bytes: int = tuning.VMEM_BUDGET,
+) -> tuple:
+    """Conservative (block_h, block_w) when no tuned shape is available.
+
+    Multiples of 8 match the f32 sublane tile; 256 lanes = 2 VPU lane tiles.
+    Small images shrink the block instead of spilling into masked overhang,
+    and the operator's halo (2r, from ``size``) is folded into a VMEM-fit
+    bound: the halo'd working set of the tile must fit ``max_vmem_bytes``,
+    shrinking the block if a large operator (or a small budget) demands it.
+    """
+    r = size // 2
+    bh = min(64, _round_up(h, 8))
+    bw = min(256, _round_up(w, 8))
+    # Halo'd working set must fit; halve the larger dimension until it does
+    # (floor 8x8 — below that the halo dominates and no block helps).
+    while tile_vmem_bytes(bh, bw, r, channels=channels) > max_vmem_bytes and (
+        bh > 8 or bw > 8
+    ):
+        if bw >= bh and bw > 8:
+            bw = max(8, bw // 2)
+        else:
+            bh = max(8, bh // 2)
+    return bh, bw
+
+
+def kernel_dtype(x: jnp.ndarray) -> jnp.ndarray:
+    """The repo-wide kernel dtype policy.
+
+    ``uint8`` is kept as-is (4x less HBM input traffic; the kernel casts
+    per-block in VMEM); every other integer/bool/float dtype is cast to
+    float32 here (the kernels compute in f32 everywhere).
+    """
+    if x.dtype == jnp.uint8:
+        return x
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Kernel body — pure math on the VMEM-resident halo'd tile
+# ---------------------------------------------------------------------------
+
+def _kernel(
+    x_ref, *o_refs,
+    spec, variant, directions, bh, bw, h, w, padding, rgb, out_components,
+    with_max,
+):
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    x = luma(x_ref[0]) if rgb else x_ref[0].astype(jnp.float32)
+    y = extend_tile(
+        x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=spec.radius,
+        padding=padding,
+    )
+    comps = spec_components(y, spec, bh, bw, variant, directions)
+    if out_components:
+        o_refs[0][0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
+        return
+    mag = magnitude(comps)
+    o_refs[0][0] = mag
+    if with_max:
+        masked = jnp.where(
+            valid_mask(k, j, h, w, bh, bw), mag, jnp.float32(0.0)
+        )
+        o_refs[1][0, k, j] = jnp.max(masked)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrapper (operates on the raw, unpadded batch)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "operator",
+        "variant",
+        "params",
+        "directions",
+        "padding",
+        "block_h",
+        "block_w",
+        "rgb",
+        "out_components",
+        "with_max",
+        "interpret",
+    ),
+)
+def edge_pallas(
+    x: jnp.ndarray,
+    *,
+    operator: str = "sobel5",
+    variant: str = "v2",
+    params: "SobelParams | None" = None,
+    directions: int = 0,   # 0 = operator max
+    padding: str = "reflect",
+    block_h: int = 64,
+    block_w: "int | None" = None,
+    rgb: bool = False,
+    out_components: bool = False,
+    with_max: bool = False,
+    interpret: bool = False,
+):
+    """Fused megakernel on the raw batch — any registered operator, any (H, W).
+
+    ``x``: ``(N, H, W)`` grayscale (u8 or f32), or ``(N, H, W, 3)`` RGB when
+    ``rgb`` (BT.601 luma applied per-tile in VMEM). Returns ``(N, H, W)``
+    float32 magnitude; with ``with_max`` also a ``(N, gh, gw)`` per-block max
+    (gh/gw = grid dims) for one-pass normalization; with ``out_components``
+    instead returns ``(N, directions, H, W)`` gradients.
+
+    ``variant``/``directions`` must be valid for the operator (resolve via
+    the spec first; see ``repro.api`` / ``repro.kernels.dispatch``).
+    """
+    spec: OperatorSpec = get_operator(operator, params)
+    variant = spec.resolve_variant(variant)
+    directions = spec.resolve_directions(directions)
+    if rgb:
+        n, h, w, _c = x.shape
+    else:
+        n, h, w = x.shape
+    bh = block_h
+    bw = block_w if block_w else w
+    gh, gw = pl.cdiv(h, bh), pl.cdiv(w, bw)
+    grid = (n, gh, gw)
+
+    if interpret:
+        align = ALIGN_INTERPRET
+    else:
+        align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
+    in_spec = window_spec(
+        h, w, bh, bw, spec.radius, align=align, channels=3 if rgb else None
+    )
+
+    if out_components:
+        out_specs = [
+            pl.BlockSpec((1, directions, bh, bw), lambda i, k, j: (i, 0, k, j))
+        ]
+        out_shape = [jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)]
+    else:
+        out_specs = [pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))]
+        out_shape = [jax.ShapeDtypeStruct((n, h, w), jnp.float32)]
+        if with_max:
+            # One whole-(gh, gw) SMEM block per image; each grid step stores
+            # its scalar block max — cheap, and legal under Mosaic's block
+            # alignment rules (dims equal to the array dims).
+            out_specs.append(
+                pl.BlockSpec(
+                    (1, gh, gw),
+                    lambda i, k, j: (i, 0, 0),
+                    memory_space=pltpu.SMEM,
+                )
+            )
+            out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
+
+    kernel = functools.partial(
+        _kernel,
+        spec=spec,
+        variant=variant,
+        directions=directions,
+        bh=bh,
+        bw=bw,
+        h=h,
+        w=w,
+        padding=padding,
+        rgb=rgb,
+        out_components=out_components,
+        with_max=with_max,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x)
+    if out_components or not with_max:
+        return out[0]
+    return tuple(out)

@@ -1,101 +1,41 @@
-"""Public jit'd entry points for the fused Pallas Sobel kernels.
+"""Deprecated jit'd entry points for the fused Pallas kernels.
 
-Zero HBM-side data preparation: the kernels read the raw, unpadded frame
-(u8 stays u8 through the HBM->VMEM DMA) and handle boundary padding and
-ragged sizes in-kernel, so this module no longer pads, slices, or stages
-anything — it only normalizes batch dims and dtypes and picks defaults.
+This module predates the declarative operator registry; the real
+implementation now lives in ``repro.kernels.edge`` (the unified spec-driven
+megakernel) behind the ``repro.api`` facade. :func:`sobel` and
+:func:`edge_pipeline` remain as deprecation-warning shims with their
+historical signatures and bit-exact outputs: they normalize batch dims and
+dtypes, fill in conservative block defaults (no tuning-cache consultation —
+the historical contract), and call the unified kernel.
 
-Dtype policy (the kernel casts per-block in VMEM):
-  * ``uint8``            — kept as-is: 4x less input traffic than f32 (the
-                           paper's images are 8-bit).
-  * other integers/bools — cast to float32 here (a previous revision let
-                           int16/int32 flow raw into the kernel path).
-  * floats               — cast to float32 (f64 inputs are narrowed; the
-                           kernels compute in f32 everywhere).
-
-Block-shape selection lives one level up in ``repro.kernels.dispatch`` (which
-consults the ``repro.kernels.tuning`` cache); this module takes explicit
-``block_h``/``block_w`` and only fills in conservative defaults.
+``default_interpret`` / ``default_block_shape`` are re-exported from
+``repro.kernels.edge`` for back-compat.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.filters import SobelParams
-from repro.kernels.sobel3x3 import sobel3x3_pallas
-from repro.kernels.sobel5x5 import sobel5x5_pallas
+from repro.core.filters import SobelParams, get_operator, operator_for_size
+from repro.kernels.edge import (  # noqa: F401  (re-exports)
+    default_block_shape,
+    default_interpret,
+    edge_pallas,
+    kernel_dtype as _kernel_dtype,
+)
 
 __all__ = ["sobel", "edge_pipeline", "default_interpret", "default_block_shape"]
 
 
-def default_interpret() -> bool:
-    """Interpret (CPU emulation) unless running on a real TPU."""
-    return jax.default_backend() != "tpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def default_block_shape(h: int, w: int, size: int = 5) -> tuple:
-    """Conservative (block_h, block_w) when no tuned shape is available.
-
-    Multiples of 8 match the f32 sublane tile; 256 lanes = 2 VPU lane tiles.
-    Small images shrink the block instead of spilling into masked overhang.
-    """
-    return min(64, _round_up(h, 8)), min(256, _round_up(w, 8))
-
-
-def _kernel_dtype(x: jnp.ndarray) -> jnp.ndarray:
-    """Apply the module-level dtype policy (see docstring)."""
-    if x.dtype == jnp.uint8:
-        return x
-    return x.astype(jnp.float32)
-
-
-def _kernel_call(
-    x: jnp.ndarray,
-    *,
-    size: int,
-    directions: int,
-    variant: str,
-    params: SobelParams,
-    padding: str,
-    block_h: int,
-    block_w: int,
-    rgb: bool,
-    with_max: bool,
-    interpret: bool,
-):
-    if size == 5:
-        return sobel5x5_pallas(
-            x,
-            variant=variant,
-            params=params,
-            directions=directions,
-            padding=padding,
-            block_h=block_h,
-            block_w=block_w,
-            rgb=rgb,
-            with_max=with_max,
-            interpret=interpret,
-        )
-    if size == 3:
-        return sobel3x3_pallas(
-            x,
-            variant=variant if variant in ("direct", "separable") else "separable",
-            directions=directions,
-            padding=padding,
-            block_h=block_h,
-            block_w=block_w,
-            rgb=rgb,
-            with_max=with_max,
-            interpret=interpret,
-        )
-    raise ValueError(f"size must be 3 or 5, got {size}")
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use repro.api.edge_detect "
+        f"(or repro.kernels.edge.edge_pallas for the raw kernel)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def sobel(
@@ -110,30 +50,31 @@ def sobel(
     block_w: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Fused Pallas multi-directional Sobel magnitude on grayscale input.
+    """Deprecated: fused Pallas multi-directional magnitude on grayscale input.
 
-    Args mirror :func:`repro.core.sobel.sobel`; output is identical (same-size
+    Output is identical to the pre-registry implementation (same-size
     ``(..., H, W)`` float32 magnitude).
     """
+    _deprecated("repro.kernels.ops.sobel")
     if interpret is None:
         interpret = default_interpret()
+    operator = operator_for_size(size)
+    spec = get_operator(operator, params)
     x = _kernel_dtype(image)
     batch_shape = x.shape[:-2]
     h, w = x.shape[-2], x.shape[-1]
     x = x.reshape((-1, h, w))
 
-    dbh, dbw = default_block_shape(h, w, size)
-    out = _kernel_call(
+    dbh, dbw = default_block_shape(h, w, spec.size)
+    out = edge_pallas(
         x,
-        size=size,
-        directions=directions,
-        variant=variant,
+        operator=operator,
+        variant=spec.resolve_variant(variant),
         params=params,
+        directions=directions,
         padding=padding,
         block_h=block_h or dbh,
         block_w=block_w or dbw,
-        rgb=False,
-        with_max=False,
         interpret=interpret,
     )
     return out.reshape(batch_shape + (h, w))
@@ -152,18 +93,18 @@ def edge_pipeline(
     block_w: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Full edge-detection pipeline as one fused Pallas launch.
+    """Deprecated: full edge-detection pipeline as one fused Pallas launch.
 
     ``images``: ``(..., H, W)`` grayscale or ``(..., H, W, 3)`` RGB, u8 or
-    float. The megakernel reads each frame from HBM exactly once (as u8 when
-    the input is u8), converts RGB to BT.601 luma per-tile in VMEM, applies
-    the boundary rule in-kernel, writes the magnitude exactly once, and —
-    when ``normalize`` — also emits per-block maxima so the [0, 255] rescale
-    is a single cheap elementwise pass instead of a full extra reduction
-    read. Output matches :func:`repro.core.pipeline.edge_detect` bit-exactly.
+    float. Output matches the pre-registry implementation bit-exactly (one
+    HBM read of the raw frame, in-kernel luma/boundary, per-block maxima
+    for one-pass normalization).
     """
+    _deprecated("repro.kernels.ops.edge_pipeline")
     if interpret is None:
         interpret = default_interpret()
+    operator = operator_for_size(size)
+    spec = get_operator(operator, params)
     rgb = images.ndim >= 3 and images.shape[-1] == 3
     x = _kernel_dtype(images)
     if rgb:
@@ -175,13 +116,13 @@ def edge_pipeline(
         h, w = x.shape[-2], x.shape[-1]
         x = x.reshape((-1, h, w))
 
-    dbh, dbw = default_block_shape(h, w, size)
-    out = _kernel_call(
+    dbh, dbw = default_block_shape(h, w, spec.size, channels=3 if rgb else None)
+    out = edge_pallas(
         x,
-        size=size,
-        directions=directions,
-        variant=variant,
+        operator=operator,
+        variant=spec.resolve_variant(variant),
         params=params,
+        directions=directions,
         padding=padding,
         block_h=block_h or dbh,
         block_w=block_w or dbw,

@@ -1,31 +1,15 @@
-"""Pallas TPU kernel: classical 3x3 Sobel (paper Table 1 "3x3" baseline rows).
+"""Back-compat wrapper: 3x3 Sobel megakernel via the unified spec kernel.
 
-Same fused zero-copy pipeline as ``sobel5x5`` with r = 1: one clamped
-``pl.Unblocked`` window per grid step over the raw unpadded frame, boundary
-padding and ragged edges handled in-kernel, optional per-tile BT.601 luma and
-per-block max; see ``repro.kernels.tiling`` for the geometry.
+The size-specialized kernel body that used to live here is now the
+spec-driven ``repro.kernels.edge.edge_pallas``. :func:`sobel3x3_pallas`
+keeps its historical signature and bit-exact outputs by delegating with
+``operator="sobel3"``.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import filters as F
-from repro.core.sobel import _correlate2d, _hpass, _vpass, magnitude
-from repro.kernels.tiling import (
-    ALIGN_INTERPRET,
-    ALIGN_TPU_GRAY,
-    ALIGN_TPU_RGB,
-    extend_tile,
-    luma,
-    valid_mask,
-    window_spec,
-)
+from repro.kernels.edge import edge_pallas
 
 __all__ = ["sobel3x3_pallas"]
 
@@ -34,51 +18,6 @@ VARIANTS = ("direct", "separable")
 _R = 1  # 3x3 operator radius; halo width = 2r = 2
 
 
-def _tile_components(x, variant: str, bh: int, w: int, directions: int):
-    if variant == "direct":
-        bank = F.filter_bank_3x3(directions)
-        return tuple(_correlate2d(x, k, bh, w) for k in bank)
-    gx = _vpass(_hpass(x, np.float32([-1, 0, 1]), w), np.float32([1, 2, 1]), bh)
-    gy = _vpass(_hpass(x, np.float32([1, 2, 1]), w), np.float32([-1, 0, 1]), bh)
-    if directions == 2:
-        return gx, gy
-    gd = _correlate2d(x, F.SOBEL3_GD, bh, w)
-    gdt = _correlate2d(x, F.SOBEL3_GDT, bh, w)
-    return gx, gy, gd, gdt
-
-
-def _kernel(
-    x_ref, *o_refs,
-    variant, directions, bh, bw, h, w, padding, rgb, with_max,
-):
-    k = pl.program_id(1)
-    j = pl.program_id(2)
-    x = luma(x_ref[0]) if rgb else x_ref[0].astype(jnp.float32)
-    y = extend_tile(
-        x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=_R, padding=padding
-    )
-    mag = magnitude(_tile_components(y, variant, bh, bw, directions))
-    o_refs[0][0] = mag
-    if with_max:
-        masked = jnp.where(
-            valid_mask(k, j, h, w, bh, bw), mag, jnp.float32(0.0)
-        )
-        o_refs[1][0, k, j] = jnp.max(masked)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "variant",
-        "directions",
-        "padding",
-        "block_h",
-        "block_w",
-        "rgb",
-        "with_max",
-        "interpret",
-    ),
-)
 def sobel3x3_pallas(
     x: jnp.ndarray,
     *,
@@ -86,7 +25,7 @@ def sobel3x3_pallas(
     directions: int = 2,
     padding: str = "reflect",
     block_h: int = 64,
-    block_w: int | None = None,
+    block_w: "int | None" = None,
     rgb: bool = False,
     with_max: bool = False,
     interpret: bool = False,
@@ -95,50 +34,15 @@ def sobel3x3_pallas(
     magnitude (plus ``(N, gh, gw)`` block maxes when ``with_max``)."""
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}")
-    if rgb:
-        n, h, w, _c = x.shape
-    else:
-        n, h, w = x.shape
-    bh = block_h
-    bw = block_w if block_w else w
-    gh, gw = pl.cdiv(h, bh), pl.cdiv(w, bw)
-    grid = (n, gh, gw)
-
-    if interpret:
-        align = ALIGN_INTERPRET
-    else:
-        align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
-    in_spec = window_spec(
-        h, w, bh, bw, _R, align=align, channels=3 if rgb else None
-    )
-    out_specs = [pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))]
-    out_shape = [jax.ShapeDtypeStruct((n, h, w), jnp.float32)]
-    if with_max:
-        out_specs.append(
-            pl.BlockSpec(
-                (1, gh, gw), lambda i, k, j: (i, 0, 0), memory_space=pltpu.SMEM
-            )
-        )
-        out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
-
-    kernel = functools.partial(
-        _kernel,
+    return edge_pallas(
+        x,
+        operator="sobel3",
         variant=variant,
         directions=directions,
-        bh=bh,
-        bw=bw,
-        h=h,
-        w=w,
         padding=padding,
+        block_h=block_h,
+        block_w=block_w,
         rgb=rgb,
         with_max=with_max,
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[in_spec],
-        out_specs=out_specs,
-        out_shape=out_shape,
         interpret=interpret,
-    )(x)
-    return tuple(out) if with_max else out[0]
+    )

@@ -1,58 +1,17 @@
-"""Pallas TPU kernel: fused four-directional 5x5 Sobel (paper §4, TPU-native).
+"""Back-compat wrapper: 5x5 Sobel megakernel via the unified spec kernel.
 
-GPU -> TPU mapping (see DESIGN.md §2):
-
-  * paper's CUDA-block tile ownership + 2r overlap (§4.3.1)  ->  2-D tiled
-    grid: step (k, j) owns the ``block_h x block_w`` output tile and reads a
-    clamped, possibly overlapping window of the *raw unpadded* image via one
-    ``pl.Unblocked`` BlockSpec (see ``repro.kernels.tiling``). Boundary
-    padding (reflect/edge/zero) and ragged edges are handled inside the
-    kernel, so the array in HBM is the camera frame itself — zero staging
-    copies. VMEM per step is O(block_h * block_w), independent of image
-    width.
-  * warp-shuffle register taps (§4.3.3)                      ->  static strided
-    slices of the VMEM-resident tile feeding the VPU.
-  * explicit prefetch of the next row (§4.3.4)               ->  Pallas's
-    automatic double-buffered pipeline: the HBM->VMEM DMA for grid step k+1
-    is issued while step k computes.
-  * per-row ring buffer f(x) = x mod 5/6 (Eq. 8/9)           ->  vectorized
-    across sublanes: all ``block_h + 4`` horizontal passes of a tile are one
-    VPU op; the separable-reuse FLOP savings (Eq. 5-19) carry over unchanged.
-
-The kernel is a megakernel for the full edge-detection pipeline: it takes
-the raw u8 frame (grayscale, or RGB with ``rgb=True`` — BT.601 luma runs
-per-tile in VMEM), applies the boundary rule in-kernel, computes the
-multi-directional magnitude (Eq. 4), and optionally emits a per-block max
-(``with_max=True``) so per-image normalization needs no extra full-image
-reduction read. One HBM read of the frame, one HBM write of the magnitude.
-
-Variant ladder (identical math to ``repro.core.sobel``):
-  ``direct``    4 dense 5x5 correlations               (~200 MAC/px)  "GM"
-  ``separable`` Kx/Ky separable, Kd/Kdt dense          (~138 MAC/px)  "RG"
-  ``v1``        + diagonal transform K_d+-             (~ 96 MAC/px)  "RG-v1"
-  ``v2``        + Eq.18 split of K_d- (reuses F)       (~ 82 MAC/px)  "RG-v2"
+The size-specialized kernel body that used to live here is now the
+spec-driven ``repro.kernels.edge.edge_pallas`` (one kernel for every
+registered operator; see DESIGN.md §2/§5 for the GPU->TPU mapping and the
+registry). :func:`sobel5x5_pallas` keeps its historical signature and
+bit-exact outputs by delegating with ``operator="sobel5"``.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import filters as F
 from repro.core.filters import SobelParams
-from repro.core.sobel import _correlate2d, _hpass, _vpass, magnitude
-from repro.kernels.tiling import (
-    ALIGN_INTERPRET,
-    ALIGN_TPU_GRAY,
-    ALIGN_TPU_RGB,
-    extend_tile,
-    luma,
-    valid_mask,
-    window_spec,
-)
+from repro.kernels.edge import edge_pallas
 
 __all__ = ["sobel5x5_pallas", "VARIANTS"]
 
@@ -61,109 +20,6 @@ VARIANTS = ("direct", "separable", "v1", "v2")
 _R = 2  # 5x5 operator radius; halo width = 2r = 4
 
 
-# ---------------------------------------------------------------------------
-# Kernel body — pure math on the VMEM-resident tile (bh+4, bw+4)
-# ---------------------------------------------------------------------------
-
-def _tile_components(x, p: SobelParams, variant: str, bh: int, w: int):
-    """Four direction components for one tile.
-
-    ``x``: (bh+4, w+4) halo'd tile; returns 4 arrays of shape (bh, w).
-    """
-    if variant == "direct":
-        bank = F.filter_bank_5x5(p)
-        return tuple(_correlate2d(x, k, bh, w) for k in bank)
-
-    a, col_x, row_f = F.kx_factors(p)
-    _, col_y, row_s = F.ky_factors(p)
-    f = _hpass(x, row_f, w)                 # (bh+4, w): the reused F pass
-    s = _hpass(x, row_s, w)
-    gx = _vpass(f, a * col_x, bh)
-    gy = _vpass(s, a * col_y, bh)
-
-    if variant == "separable":
-        gd = _correlate2d(x, F.kd(p), bh, w)
-        gdt = _correlate2d(x, F.kdt(p), bh, w)
-        return gx, gy, gd, gdt
-
-    # K_d+ (Eq. 13-15): rows [k0, k1, 0, -k1, -k0]
-    k0, k1 = F.kd_plus_rows(p)
-    fk0 = _hpass(x, k0, w)
-    fk1 = _hpass(x, k1, w)
-    gd_plus = (
-        fk0[0:bh, :] + fk1[1 : 1 + bh, :] - fk1[3 : 3 + bh, :] - fk0[4 : 4 + bh, :]
-    )
-
-    if variant == "v1":
-        kdm = F.kd_minus(p)
-        f0 = _hpass(x, kdm[0], w)
-        f1 = _hpass(x, kdm[1], w)
-        f2 = _hpass(x, kdm[2], w)
-        gd_minus = (
-            f0[0:bh, :]
-            + f1[1 : 1 + bh, :]
-            + f2[2 : 2 + bh, :]
-            + f1[3 : 3 + bh, :]
-            + f0[4 : 4 + bh, :]
-        )
-    elif variant == "v2":
-        (col_f, _), (col_d, row_d) = F.kd_minus_factors(p)
-        d = _hpass(x, row_d, w)             # 2-tap difference D = p3 - p1
-        gd_minus = _vpass(f, col_f, bh) - _vpass(d, col_d, bh)
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-
-    gd = (gd_plus + gd_minus) * 0.5
-    gdt = (gd_plus - gd_minus) * 0.5
-    return gx, gy, gd, gdt
-
-
-# Back-compat alias (pre-2-D-tiling name).
-_strip_components = _tile_components
-
-
-def _kernel(
-    x_ref, *o_refs,
-    p, variant, directions, bh, bw, h, w, padding, rgb, out_components, with_max,
-):
-    k = pl.program_id(1)
-    j = pl.program_id(2)
-    x = luma(x_ref[0]) if rgb else x_ref[0].astype(jnp.float32)
-    y = extend_tile(
-        x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=_R, padding=padding
-    )
-    comps = _tile_components(y, p, variant, bh, bw)[:directions]
-    if out_components:
-        o_refs[0][0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
-        return
-    mag = magnitude(comps)
-    o_refs[0][0] = mag
-    if with_max:
-        masked = jnp.where(
-            valid_mask(k, j, h, w, bh, bw), mag, jnp.float32(0.0)
-        )
-        o_refs[1][0, k, j] = jnp.max(masked)
-
-
-# ---------------------------------------------------------------------------
-# pallas_call wrapper (operates on the raw, unpadded batch)
-# ---------------------------------------------------------------------------
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "variant",
-        "params",
-        "directions",
-        "padding",
-        "block_h",
-        "block_w",
-        "rgb",
-        "out_components",
-        "with_max",
-        "interpret",
-    ),
-)
 def sobel5x5_pallas(
     x: jnp.ndarray,
     *,
@@ -172,82 +28,26 @@ def sobel5x5_pallas(
     directions: int = 4,
     padding: str = "reflect",
     block_h: int = 64,
-    block_w: int | None = None,
+    block_w: "int | None" = None,
     rgb: bool = False,
     out_components: bool = False,
     with_max: bool = False,
     interpret: bool = False,
 ):
-    """Fused megakernel on the raw batch — no pre-padding, any (H, W).
-
-    ``x``: ``(N, H, W)`` grayscale (u8 or f32), or ``(N, H, W, 3)`` RGB when
-    ``rgb`` (BT.601 luma applied per-tile in VMEM). Returns ``(N, H, W)``
-    float32 magnitude; with ``with_max`` also a ``(N, gh, gw)`` per-block max
-    (gh/gw = grid dims) for one-pass normalization; with ``out_components``
-    instead returns ``(N, directions, H, W)`` gradients.
-    """
+    """Fused 5x5 megakernel on the raw batch — see ``edge_pallas``."""
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}")
-    if rgb:
-        n, h, w, _c = x.shape
-    else:
-        n, h, w = x.shape
-    bh = block_h
-    bw = block_w if block_w else w
-    gh, gw = pl.cdiv(h, bh), pl.cdiv(w, bw)
-    grid = (n, gh, gw)
-
-    if interpret:
-        align = ALIGN_INTERPRET
-    else:
-        align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
-    in_spec = window_spec(
-        h, w, bh, bw, _R, align=align, channels=3 if rgb else None
-    )
-
-    if out_components:
-        out_specs = [
-            pl.BlockSpec((1, directions, bh, bw), lambda i, k, j: (i, 0, k, j))
-        ]
-        out_shape = [jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)]
-    else:
-        out_specs = [pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))]
-        out_shape = [jax.ShapeDtypeStruct((n, h, w), jnp.float32)]
-        if with_max:
-            # One whole-(gh, gw) SMEM block per image; each grid step stores
-            # its scalar block max — cheap, and legal under Mosaic's block
-            # alignment rules (dims equal to the array dims).
-            out_specs.append(
-                pl.BlockSpec(
-                    (1, gh, gw),
-                    lambda i, k, j: (i, 0, 0),
-                    memory_space=pltpu.SMEM,
-                )
-            )
-            out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
-
-    kernel = functools.partial(
-        _kernel,
-        p=params,
+    return edge_pallas(
+        x,
+        operator="sobel5",
         variant=variant,
+        params=params,
         directions=directions,
-        bh=bh,
-        bw=bw,
-        h=h,
-        w=w,
         padding=padding,
+        block_h=block_h,
+        block_w=block_w,
         rgb=rgb,
         out_components=out_components,
         with_max=with_max,
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[in_spec],
-        out_specs=out_specs,
-        out_shape=out_shape,
         interpret=interpret,
-    )(x)
-    if out_components or not with_max:
-        return out[0]
-    return tuple(out)
+    )

@@ -9,13 +9,16 @@ The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
     (:func:`measure_us` — warm call to exclude compile, then a best-of-iters
     loop), and
   * persists the winner in a JSON cache keyed by
-    ``(backend, dtype, size, variant, padding, layout, H, W)``
+    ``(backend, dtype, operator, variant, padding, layout, H, W)``
     (:class:`TuningCache`), which ``repro.kernels.dispatch`` consults on
-    every ``sobel()`` call. ``padding`` and ``layout`` (gray/rgb) entered the
-    key with the fused zero-copy pipeline: the boundary rule and the input
-    layout now change the kernel's window geometry and in-kernel work, so
-    their tunings must not collide (schema v2; v1 entries are migrated on
-    load as reflect/gray).
+    every call. ``operator`` entered the key with the declarative operator
+    registry (schema v3): tunings for ``sobel5`` vs ``scharr3`` vs the 7x7
+    extended operator must not collide — the halo radius and in-kernel
+    arithmetic differ per spec. ``padding`` and ``layout`` (gray/rgb)
+    entered with the fused zero-copy pipeline (schema v2). Older files
+    migrate on load: v1 entries land in the reflect/gray slot, v2 entries
+    map their ``SxS`` size segment onto the Sobel operator of that size;
+    the next :meth:`TuningCache.save` rewrites the file as v3.
 
 Cache location: ``$REPRO_TUNE_CACHE`` if set, else
 ``~/.cache/repro/sobel_blocks.json``. The file is plain JSON so it can be
@@ -61,7 +64,7 @@ class TuneKey:
 
     backend: str      # pallas-tpu | pallas-interpret
     dtype: str        # canonical jnp dtype name of the *input* image
-    size: int         # 3 | 5
+    operator: str     # registered operator name (sobel5 | sobel3 | scharr3 | ...)
     variant: str
     h: int
     w: int
@@ -70,32 +73,51 @@ class TuneKey:
 
     def to_str(self) -> str:
         return (
-            f"{self.backend}/{self.dtype}/{self.size}x{self.size}/{self.variant}"
+            f"{self.backend}/{self.dtype}/{self.operator}/{self.variant}"
             f"/{self.padding}/{self.layout}/{self.h}x{self.w}"
         )
 
 
+# v1/v2 key size segments ("5x5") -> operator registry names.
+_SIZE_TO_OPERATOR = {"3x3": "sobel3", "5x5": "sobel5", "7x7": "sobel7"}
+
+
 def _migrate_v1_key(key: str) -> Optional[str]:
     """v1 keys were ``backend/dtype/SxS/variant/HxW``; the v1 kernels always
-    behaved as reflect padding on grayscale input, so that is the v2 slot
-    their tunings carry over to. Returns None for unrecognizable keys."""
+    behaved as reflect padding on grayscale input, so that is the slot their
+    tunings carry over to (then through v2->v3). Returns None for
+    unrecognizable keys."""
     parts = key.split("/")
     if len(parts) != 5:
         return None
     backend, dtype, size, variant, hw = parts
-    return f"{backend}/{dtype}/{size}/{variant}/reflect/gray/{hw}"
+    return _migrate_v2_key(f"{backend}/{dtype}/{size}/{variant}/reflect/gray/{hw}")
+
+
+def _migrate_v2_key(key: str) -> Optional[str]:
+    """v2 keys carried an ``SxS`` size segment; v3 names the operator — the
+    v2 kernels were the Sobel family, so ``5x5 -> sobel5`` etc."""
+    parts = key.split("/")
+    if len(parts) != 7:
+        return None
+    op = _SIZE_TO_OPERATOR.get(parts[2])
+    if op is None:
+        return None
+    parts[2] = op
+    return "/".join(parts)
 
 
 class TuningCache:
     """JSON-backed best-known-config store.
 
     Schema: ``{key: {"block_h": int, "block_w": int, "us": float}}`` with a
-    ``__meta__`` entry recording the schema version. v1 files (no
-    padding/layout key segments) are migrated in-memory on load and
-    rewritten as v2 on the next :meth:`save`.
+    ``__meta__`` entry recording the schema version. Older files (v1: no
+    padding/layout key segments; v2: size segment instead of operator name)
+    are migrated in-memory on load and rewritten as v3 on the next
+    :meth:`save`.
     """
 
-    VERSION = 2
+    VERSION = 3
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -113,10 +135,11 @@ class TuningCache:
             return self
         version = raw.get("__meta__", {}).get("version", 1)
         entries = {k: v for k, v in raw.items() if not k.startswith("__")}
-        if version < 2:
+        if version < 3:
+            migrate = _migrate_v1_key if version < 2 else _migrate_v2_key
             migrated = {}
             for k, v in entries.items():
-                mk = _migrate_v1_key(k)
+                mk = migrate(k)
                 if mk is not None:
                     migrated[mk] = v
             entries = migrated
@@ -173,28 +196,47 @@ def get_default_cache() -> TuningCache:
 # ---------------------------------------------------------------------------
 
 def measure_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
-    """Mean wall-time per call in microseconds, after ``warmup`` calls
-    (compile + cache warm). This is the harness all benchmark suites use."""
+    """Best-of-``iters`` wall time per call in microseconds, after
+    ``warmup`` calls (compile + cache warm). Best-of, not mean: the minimum
+    is the standard de-noised microbenchmark statistic (scheduler and
+    frequency jitter only ever add time), which keeps the
+    ``benchmarks/run.py --compare`` regression gate stable. This is the
+    harness all benchmark suites use."""
+    # $REPRO_BENCH_ITERS raises the floor on noisy/shared hosts (CI sets it
+    # for the --compare regression gate).
+    iters = max(iters, int(os.environ.get("REPRO_BENCH_ITERS", "0") or 0))
     out = None
     for _ in range(max(1, warmup)):
         out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 # ---------------------------------------------------------------------------
 # Shape enumeration + sweep
 # ---------------------------------------------------------------------------
 
+def _operator_size(operator: Optional[str], size: int) -> int:
+    """Halo geometry for a key: the spec's size when ``operator`` is given."""
+    if operator is None:
+        return size
+    from repro.core.filters import get_operator
+
+    return get_operator(operator).size
+
+
 def legal_block_shapes(
     h: int,
     w: int,
     *,
     size: int = 5,
+    operator: Optional[str] = None,
     backend: str = "pallas-interpret",
     layout: str = "gray",
     max_vmem_bytes: int = VMEM_BUDGET,
@@ -206,9 +248,10 @@ def legal_block_shapes(
     only: not wastefully larger than the image, fits the VMEM budget (the
     RGB megakernel's input window is 3x the grayscale one — ``layout``), and
     — on the hardware backend — the f32 (8, 128) tile so Mosaic gets aligned
-    output blocks.
+    output blocks. ``operator`` (registry name) overrides ``size`` for the
+    halo geometry.
     """
-    r = size // 2
+    r = _operator_size(operator, size) // 2
     channels = 3 if layout == "rgb" else None
     shapes = []
     for bh in _CAND_H:
@@ -225,21 +268,21 @@ def legal_block_shapes(
     return shapes
 
 
-def _run_shape(img, size, variant, directions, padding, backend, bh, bw):
-    from repro.kernels.ops import edge_pipeline, sobel as pallas_sobel
+def _run_shape(img, operator, variant, directions, padding, backend, bh, bw):
+    from repro.kernels.edge import edge_pallas
 
-    kwargs = dict(
-        size=size,
+    rgb = img.ndim >= 3 and img.shape[-1] == 3
+    return edge_pallas(
+        img,
+        operator=operator,
         directions=directions,
         variant=variant,
         padding=padding,
         block_h=bh,
         block_w=bw,
+        rgb=rgb,
         interpret=(backend != "pallas-tpu"),
     )
-    if img.ndim >= 3 and img.shape[-1] == 3:
-        return edge_pipeline(img, normalize=False, **kwargs)
-    return pallas_sobel(img, **kwargs)
 
 
 def sweep(
@@ -247,8 +290,9 @@ def sweep(
     w: int,
     *,
     size: int = 5,
+    operator: Optional[str] = None,
     variant: str = "v2",
-    directions: int = 4,
+    directions: int = 0,   # 0 = operator max
     dtype: str = "float32",
     backend: str = "pallas-interpret",
     padding: str = "reflect",
@@ -263,21 +307,30 @@ def sweep(
     "halo_overhead", "grid_steps"}`` — the structural columns of the paper's
     Fig. 6 sweep, generalized to both block dimensions. ``layout="rgb"``
     times the full fused gray->Sobel megakernel on an ``(1, h, w, 3)`` frame.
+    ``operator`` (registry name) overrides the legacy ``size`` selector.
     """
     import jax.numpy as jnp
 
-    r = size // 2
+    from repro.core.filters import get_operator, operator_for_size
+
+    operator = operator or operator_for_size(size)
+    spec = get_operator(operator)
+    variant = spec.resolve_variant(variant)
+    directions = spec.resolve_directions(directions)
+    r = spec.radius
     channels = 3 if layout == "rgb" else None
     if shapes is None:
-        shapes = legal_block_shapes(h, w, size=size, backend=backend, layout=layout)
+        shapes = legal_block_shapes(
+            h, w, operator=operator, backend=backend, layout=layout
+        )
     rng = np.random.default_rng(seed)
     shape = (1, h, w, 3) if layout == "rgb" else (1, h, w)
     img = jnp.asarray(rng.integers(0, 256, shape).astype(dtype))
     rows = []
     for bh, bw in shapes:
         us = measure_us(
-            _run_shape, img, size, variant, directions, padding, backend, bh, bw,
-            iters=iters,
+            _run_shape, img, operator, variant, directions, padding, backend,
+            bh, bw, iters=iters,
         )
         gh, gw = -(-h // bh), -(-w // bw)
         rows.append(
@@ -298,8 +351,9 @@ def autotune(
     w: int,
     *,
     size: int = 5,
+    operator: Optional[str] = None,
     variant: str = "v2",
-    directions: int = 4,
+    directions: int = 0,   # 0 = operator max
     dtype: str = "float32",
     backend: str = "pallas-interpret",
     padding: str = "reflect",
@@ -315,15 +369,22 @@ def autotune(
     Consults ``cache`` (default: the process-wide JSON cache) unless
     ``refresh``; on a miss, sweeps the legal shapes, records the winner, and
     persists the cache to disk (``save=False`` to skip, e.g. in tests).
+    ``operator`` (registry name) overrides the legacy ``size`` selector.
     """
+    from repro.core.filters import get_operator, operator_for_size
+
+    operator = operator or operator_for_size(size)
+    # Key on the *resolved* variant so the slot matches what actually ran
+    # (e.g. scharr3 has no diagonal transform: v2 -> separable).
+    variant = get_operator(operator).resolve_variant(variant)
     cache = cache if cache is not None else get_default_cache()
-    key = TuneKey(backend, dtype, size, variant, h, w, padding, layout)
+    key = TuneKey(backend, dtype, operator, variant, h, w, padding, layout)
     if not refresh:
         hit = cache.lookup(key)
         if hit is not None:
             return hit
     rows = sweep(
-        h, w, size=size, variant=variant, directions=directions,
+        h, w, operator=operator, variant=variant, directions=directions,
         dtype=dtype, backend=backend, padding=padding, layout=layout,
         shapes=shapes, iters=iters,
     )

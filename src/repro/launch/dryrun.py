@@ -52,19 +52,14 @@ def lower_cell(arch: str, shape_name: str, mesh: Mesh, cfg=None, rules=None) -> 
     model = Model(cfg)
 
     if cfg.family == "image":
-        from repro.core.pipeline import edge_detect
+        from repro.api import edge_detect
 
         batch_abs = input_specs(cfg, shape_name)
         in_sh = _batch_shardings(batch_abs, mesh)
+        edge_cfg = cfg.edge_config(normalize=False).resolved()
 
         def serve_step(images):
-            return edge_detect(
-                images, size=cfg.sobel_size, directions=cfg.sobel_directions,
-                variant=cfg.sobel_variant, normalize=False,
-                backend=cfg.sobel_backend,
-                block_h=cfg.sobel_block_h or None,
-                block_w=cfg.sobel_block_w or None,
-            )
+            return edge_detect(images, edge_cfg).magnitude
 
         with mesh_context(mesh):
             return jax.jit(

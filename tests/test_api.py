@@ -1,0 +1,276 @@
+"""The ``repro.api`` facade: EdgeConfig threading, EdgeResult fields,
+layout auto-detection, and the back-compat deprecation shims.
+
+No optional deps (runs without hypothesis).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import EdgeConfig, EdgeResult, detect_layout, edge_detect
+from repro.core.sobel import magnitude as rss_magnitude
+from repro.core.sobel import sobel_components
+
+
+def _img(rng, shape, dtype=np.float32):
+    return rng.integers(0, 256, size=shape).astype(dtype)
+
+
+_PALLAS = dict(backend="pallas-interpret", block_h=8, block_w=16)
+
+
+# ---------------------------------------------------------------------------
+# Layout auto-detection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "shape,layout",
+    [
+        ((21, 17), "HW"),
+        ((21, 17, 3), "HWC"),
+        ((4, 21, 17), "NHW"),
+        ((4, 21, 17, 3), "NHWC"),
+        ((2, 5, 21, 17), "NTHW"),
+        ((2, 5, 21, 17, 3), "NTHWC"),
+    ],
+)
+def test_detect_layout(shape, layout):
+    assert detect_layout(shape) == layout
+
+
+def test_detect_layout_rejects_non_images():
+    with pytest.raises(ValueError):
+        detect_layout((7,))
+
+
+@pytest.mark.parametrize(
+    "shape", [(21, 17), (21, 17, 3), (4, 21, 17), (4, 21, 17, 3),
+              (2, 3, 21, 17), (2, 3, 21, 17, 3)],
+)
+def test_facade_batch_shapes(shape, rng):
+    """Magnitude mirrors the input's batch dims for every layout."""
+    imgs = jnp.asarray(_img(rng, shape, np.uint8))
+    res = edge_detect(imgs)
+    expect = shape[:-1] if detect_layout(shape).endswith("C") else shape
+    assert res.magnitude.shape == expect
+    assert res.layout == detect_layout(shape)
+
+
+def test_layout_override(rng):
+    """A genuine 3-pixel-wide grayscale batch would auto-detect as HWC;
+    ``layout=`` forces the grayscale interpretation."""
+    imgs = jnp.asarray(_img(rng, (4, 21, 3)))
+    res = edge_detect(imgs, layout="NHW", backend="xla")
+    assert res.magnitude.shape == (4, 21, 3)
+    assert res.layout == "NHW"
+
+
+# ---------------------------------------------------------------------------
+# Config resolution and threading
+# ---------------------------------------------------------------------------
+
+def test_config_resolution():
+    cfg = EdgeConfig(operator="sobel5").resolved()
+    assert (cfg.variant, cfg.directions) == ("v2", 4)
+    cfg = EdgeConfig(operator="scharr3", variant="v2").resolved()
+    assert (cfg.variant, cfg.directions) == ("separable", 2)
+    with pytest.raises(KeyError):
+        EdgeConfig(operator="nope").resolved()
+    with pytest.raises(ValueError):
+        EdgeConfig(operator="sobel7", directions=4).resolved()
+    with pytest.raises(ValueError):
+        EdgeConfig(variant="v3").resolved()
+
+
+def test_result_records_resolved_config(rng):
+    img = jnp.asarray(_img(rng, (8, 8)))
+    res = edge_detect(img, EdgeConfig(operator="prewitt3"), backend="xla")
+    assert res.config.operator == "prewitt3"
+    assert res.config.variant == "separable"
+    assert res.config.directions == 2
+    assert res.config.backend == "xla"  # the kwarg override was threaded
+
+
+def test_block_override_threads_to_kernel(rng):
+    """Explicit block overrides must reach the Pallas launch (block-shape
+    invariance makes this observable only via bit-exact equality)."""
+    img = jnp.asarray(_img(rng, (1, 45, 67)))
+    outs = [
+        np.asarray(edge_detect(img, backend="pallas-interpret",
+                               block_h=bh, block_w=bw).magnitude)
+        for bh, bw in [(8, 8), (16, 32), (45, 67)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+def test_edge_config_is_jit_static(rng):
+    cfg = EdgeConfig(backend="xla", normalize=False).resolved()
+    img = jnp.asarray(_img(rng, (8, 8)))
+
+    @jax.jit
+    def run(x):
+        return edge_detect(x, cfg)
+
+    res = run(img)
+    assert isinstance(res, EdgeResult)  # EdgeResult round-trips as a pytree
+    assert res.config == cfg
+    np.testing.assert_array_equal(
+        np.asarray(res.magnitude),
+        np.asarray(edge_detect(img, cfg).magnitude),
+    )
+
+
+# ---------------------------------------------------------------------------
+# EdgeResult fields: components / orientation / peak
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("operator", ["sobel5", "sobel3", "scharr3", "sobel7"])
+def test_components_and_orientation_cross_backend_bit_exact(operator, rng):
+    """Acceptance: per-direction components and orientation bit-exact across
+    xla / pallas-interpret on ragged (non-block-multiple) sizes."""
+    img = jnp.asarray(_img(rng, (2, 37, 53)))
+    cfg = EdgeConfig(operator=operator, with_components=True,
+                     with_orientation=True, with_max=True)
+    rx = edge_detect(img, cfg, backend="xla")
+    rp = edge_detect(img, cfg, **_PALLAS)
+    np.testing.assert_array_equal(np.asarray(rp.magnitude), np.asarray(rx.magnitude))
+    np.testing.assert_array_equal(np.asarray(rp.components), np.asarray(rx.components))
+    np.testing.assert_array_equal(np.asarray(rp.orientation), np.asarray(rx.orientation))
+    np.testing.assert_array_equal(np.asarray(rp.peak), np.asarray(rx.peak))
+    d = rx.config.directions
+    assert rx.components.shape == (2, d, 37, 53)
+    assert rp.components.shape == (2, d, 37, 53)
+
+
+def test_components_match_core_reference(rng):
+    img = jnp.asarray(_img(rng, (1, 29, 31)))
+    res = edge_detect(img, EdgeConfig(with_components=True, normalize=False),
+                      **_PALLAS)
+    ref = sobel_components(img)
+    for d in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(res.components[:, d]), np.asarray(ref[d])
+        )
+    # magnitude is the RSS of the components, and unnormalized here
+    np.testing.assert_array_equal(
+        np.asarray(res.magnitude), np.asarray(rss_magnitude(ref))
+    )
+
+
+def test_orientation_values(rng):
+    img = jnp.asarray(_img(rng, (1, 19, 23)))
+    res = edge_detect(img, EdgeConfig(with_components=True, with_orientation=True),
+                      backend="xla")
+    gx, gy = res.components[:, 0], res.components[:, 1]
+    # Exact vs the same XLA op; allclose vs numpy (libm differs by ~1 ulp).
+    np.testing.assert_array_equal(
+        np.asarray(res.orientation), np.asarray(jnp.arctan2(gy, gx))
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.orientation), np.arctan2(np.asarray(gy), np.asarray(gx)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_peak_is_unnormalized_max(rng):
+    img = jnp.asarray(_img(rng, (3, 29, 43)))
+    raw = edge_detect(img, EdgeConfig(normalize=False, with_max=True), backend="xla")
+    np.testing.assert_array_equal(
+        np.asarray(raw.peak), np.asarray(raw.magnitude).max(axis=(-2, -1))
+    )
+    # normalize=True still reports the *unnormalized* peak, on both backends
+    normed_x = edge_detect(img, EdgeConfig(with_max=True), backend="xla")
+    normed_p = edge_detect(img, EdgeConfig(with_max=True), **_PALLAS)
+    np.testing.assert_array_equal(np.asarray(normed_x.peak), np.asarray(raw.peak))
+    np.testing.assert_array_equal(np.asarray(normed_p.peak), np.asarray(raw.peak))
+    assert np.asarray(normed_x.magnitude).max() <= 255.0 + 1e-3
+
+
+def test_default_result_has_no_optional_fields(rng):
+    res = edge_detect(jnp.asarray(_img(rng, (8, 8))), backend="xla")
+    assert res.components is None and res.orientation is None and res.peak is None
+
+
+def test_video_layout_rgb_normalized(rng):
+    """Batched video NTHWC through the fused pallas path, per-frame peaks."""
+    vid = jnp.asarray(_img(rng, (2, 3, 21, 27, 3), np.uint8))
+    rp = edge_detect(vid, EdgeConfig(with_max=True), **_PALLAS)
+    rx = edge_detect(vid, EdgeConfig(with_max=True), backend="xla")
+    assert rp.magnitude.shape == (2, 3, 21, 27)
+    assert rp.peak.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(rp.magnitude), np.asarray(rx.magnitude))
+    np.testing.assert_array_equal(np.asarray(rp.peak), np.asarray(rx.peak))
+
+
+# ---------------------------------------------------------------------------
+# Back-compat shims: old signatures, DeprecationWarning, bit-exact output
+# ---------------------------------------------------------------------------
+
+def test_pipeline_shim_bit_exact(rng):
+    from repro.core.pipeline import edge_detect as legacy_edge_detect
+
+    rgbs = jnp.asarray(_img(rng, (2, 37, 53, 3), np.uint8))
+    for backend in ("xla", "pallas-interpret"):
+        with pytest.warns(DeprecationWarning):
+            old = legacy_edge_detect(rgbs, backend=backend, block_h=8, block_w=16)
+        new = edge_detect(rgbs, backend=backend, block_h=8, block_w=16).magnitude
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_dispatch_sobel_shim_bit_exact(rng):
+    from repro.kernels.dispatch import sobel as legacy_sobel
+
+    img = jnp.asarray(_img(rng, (1, 45, 61)))
+    for backend in ("xla", "pallas-interpret"):
+        with pytest.warns(DeprecationWarning):
+            old = legacy_sobel(img, backend=backend, block_h=8, block_w=16)
+        new = edge_detect(
+            img, EdgeConfig(normalize=False), backend=backend,
+            block_h=8, block_w=16,
+        ).magnitude
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_dispatch_edge_detect_shim_bit_exact(rng):
+    from repro.kernels.dispatch import edge_detect as legacy_edge_detect
+
+    img = jnp.asarray(_img(rng, (3, 29, 43)))
+    with pytest.warns(DeprecationWarning):
+        old = legacy_edge_detect(img, backend="pallas-interpret",
+                                 block_h=8, block_w=8)
+    new = edge_detect(img, backend="pallas-interpret",
+                      block_h=8, block_w=8).magnitude
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_ops_shims_warn_and_match(rng):
+    from repro.kernels.ops import edge_pipeline, sobel as ops_sobel
+
+    img = jnp.asarray(_img(rng, (1, 33, 41)))
+    with pytest.warns(DeprecationWarning):
+        old = ops_sobel(img, block_h=8, block_w=16, interpret=True)
+    new = edge_detect(img, EdgeConfig(normalize=False),
+                      **_PALLAS).magnitude
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    rgbs = jnp.asarray(_img(rng, (1, 21, 27, 3), np.uint8))
+    with pytest.warns(DeprecationWarning):
+        old = edge_pipeline(rgbs, block_h=8, block_w=16, interpret=True)
+    new = edge_detect(rgbs, **_PALLAS).magnitude
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_shim_keeps_gray_contract_on_trailing_3(rng):
+    """dispatch.sobel historically treated input as grayscale always —
+    the shim must not let layout auto-detection reinterpret (..., H, 3)."""
+    from repro.kernels.dispatch import sobel as legacy_sobel
+
+    img = jnp.asarray(_img(rng, (2, 21, 3)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = legacy_sobel(img, backend="xla")
+    assert out.shape == (2, 21, 3)

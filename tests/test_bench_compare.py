@@ -1,0 +1,147 @@
+"""benchmarks/run.py --compare: the throughput-regression gate.
+
+Deterministic unit tests on synthetic payloads (no timing involved).
+"""
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.run import compare_to_baseline  # noqa: E402
+
+
+def _payload(times):
+    """{suite: {name: us}} -> the suites dict shape run.py produces."""
+    return {
+        suite: [{"name": name, "us_per_call": us} for name, us in rows.items()]
+        for suite, rows in times.items()
+    }
+
+
+def _baseline(times):
+    return {"suites": _payload(times)}
+
+
+def test_identical_run_passes():
+    t = {"table2": {"a": 100.0, "b": 200.0}}
+    failures, report = compare_to_baseline(_payload(t), _baseline(t))
+    assert failures == []
+    assert "2 rows matched" in report
+
+
+def test_uniform_slowdown_is_normalized_away():
+    """A 2x-slower host regresses nothing *relatively* — geomean
+    normalization cancels machine speed."""
+    base = {"table2": {"a": 100.0, "b": 200.0, "c": 400.0}}
+    new = {"table2": {"a": 200.0, "b": 400.0, "c": 800.0}}
+    failures, _ = compare_to_baseline(_payload(new), _baseline(base))
+    assert failures == []
+
+
+def test_single_row_regression_fails():
+    """>10% relative slowdown of one row against the rest fails the gate."""
+    base = {"table2": {"a": 100.0, "b": 200.0, "c": 400.0, "d": 100.0}}
+    new = {"table2": {"a": 100.0, "b": 200.0, "c": 400.0, "d": 200.0}}
+    failures, _ = compare_to_baseline(_payload(new), _baseline(base))
+    assert len(failures) == 1 and failures[0].startswith("d:")
+
+
+def test_norm_none_is_absolute():
+    base = {"table2": {"a": 100.0, "b": 100.0}}
+    new = {"table2": {"a": 150.0, "b": 150.0}}
+    failures, _ = compare_to_baseline(_payload(new), _baseline(base), norm="none")
+    assert len(failures) == 2
+    # ...and a looser tolerance admits it
+    failures, _ = compare_to_baseline(
+        _payload(new), _baseline(base), tol=0.60, norm="none"
+    )
+    assert failures == []
+
+
+def test_unmatched_and_zero_rows_skipped():
+    base = {"table2": {"a": 100.0, "ssim_row": 0.0}, "other": {"x": 5.0}}
+    new = {"table2": {"a": 100.0, "ssim_row": 0.0, "new_row": 7.0}}
+    failures, report = compare_to_baseline(_payload(new), _baseline(base))
+    assert failures == []
+    assert "1 rows matched" in report
+
+
+def test_no_overlap_passes():
+    failures, report = compare_to_baseline(
+        _payload({"t": {"a": 1.0}}), _baseline({"u": {"b": 1.0}})
+    )
+    assert failures == [] and "no matching rows" in report
+
+
+def test_cli_exit_codes(tmp_path):
+    """End-to-end: the run.py process exits 1 on a regression, 0 otherwise.
+
+    Uses fig7 (SSIM-only, us=0 rows are skipped -> no matches -> pass) to
+    keep the subprocess cheap, then fabricates a regressing baseline for a
+    fast failure path via --compare-norm none on matched fig7 rows."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    # Baseline with no matching measurable rows: compare passes.
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"suites": {}}))
+    out = subprocess.run(
+        [sys.executable, "benchmarks/run.py", "fig7",
+         "--compare", str(empty)],
+        cwd=root, env=env, capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stderr
+
+    # Regressing baseline for roofline_sobel (analytic, deterministic rows):
+    # claim the baseline was 100x faster -> guaranteed failure.
+    out = subprocess.run(
+        [sys.executable, "benchmarks/run.py", "roofline_sobel",
+         "--json", str(tmp_path / "now.json")],
+        cwd=root, env=env, capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stderr
+    now = json.loads((tmp_path / "now.json").read_text())
+    for row in now["suites"]["roofline_sobel"]:
+        row["us_per_call"] = row["us_per_call"] / 100.0
+    slow = tmp_path / "slow.json"
+    slow.write_text(json.dumps(now))
+    out = subprocess.run(
+        [sys.executable, "benchmarks/run.py", "roofline_sobel",
+         "--compare", str(slow), "--compare-norm", "none"],
+        cwd=root, env=env, capture_output=True, text=True,
+    )
+    assert out.returncode == 1
+    assert "REGRESSION" in out.stderr
+
+    # Same rows, norm=none, against an identical baseline: passes (analytic
+    # rows are deterministic).
+    same = tmp_path / "same.json"
+    same.write_text(json.dumps(json.loads((tmp_path / "now.json").read_text())))
+    out = subprocess.run(
+        [sys.executable, "benchmarks/run.py", "roofline_sobel",
+         "--compare", str(same), "--compare-norm", "none"],
+        cwd=root, env=env, capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stderr
+
+
+def test_norm_uses_xla_reference_rows():
+    """A regression confined to the Pallas path must not be absorbed into
+    the host norm: the geomean is taken over the xla rows only."""
+    base = {"table2": {"legacy_a": 100.0, "legacy_b": 200.0,
+                       "fused_a": 100.0, "fused_b": 200.0}}
+    new = {"table2": {"legacy_a": 100.0, "legacy_b": 200.0,
+                      "fused_a": 200.0, "fused_b": 400.0}}
+    suites = {
+        "table2": [
+            {"name": n, "us_per_call": us,
+             "backend": "xla" if n.startswith("legacy") else "pallas-interpret"}
+            for n, us in new["table2"].items()
+        ]
+    }
+    failures, _ = compare_to_baseline(suites, _baseline(base), tol=0.5)
+    # norm = 1.0 (xla rows unchanged) -> both fused rows fail at 2.0x
+    assert len(failures) == 2
+    assert all(f.startswith("fused") for f in failures)

@@ -1,0 +1,223 @@
+"""The declarative operator registry (``repro.core.filters.OperatorSpec``).
+
+Pins: separable-factor/dense-tap reconstruction for every registered spec,
+cross-backend bit-exactness for every operator x supported variant, variant
+coercion, and custom-operator registration through the facade (the DESIGN.md
+§5 example).
+
+No optional deps (runs without hypothesis).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import EdgeConfig, edge_detect
+from repro.core import filters as F
+from repro.core.sobel import sobel as core_sobel
+
+ALL_OPERATORS = ("sobel3", "sobel5", "scharr3", "prewitt3", "sobel7")
+
+
+def _img(rng, shape, dtype=np.float32):
+    return rng.integers(0, 256, size=shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry contents and spec invariants
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_builtins():
+    ops = F.list_operators()
+    for name in ALL_OPERATORS:
+        assert name in ops
+    with pytest.raises(KeyError):
+        F.get_operator("unknown-op")
+
+
+@pytest.mark.parametrize("name", ALL_OPERATORS)
+def test_sep_factors_reconstruct_dense_taps_exactly(name):
+    """Every registered spec: col (x) row == dense taps, bit-for-bit in f32."""
+    spec = F.get_operator(name)
+    checked = 0
+    for d in range(len(spec.taps)):
+        fac = spec.sep_factors(d)
+        if fac is None:
+            continue
+        col, row = fac
+        dense = np.outer(col, row).astype(np.float32)
+        np.testing.assert_array_equal(dense, spec.bank(d + 1)[d])
+        checked += 1
+    assert checked >= 2  # x and y are separable for every built-in
+
+
+@pytest.mark.parametrize("name", ALL_OPERATORS)
+def test_spec_geometry(name):
+    spec = F.get_operator(name)
+    assert spec.size % 2 == 1
+    assert spec.radius == spec.size // 2
+    assert spec.bank().shape == (max(spec.directions), spec.size, spec.size)
+    assert spec.variants[0] == "direct"
+
+
+def test_sobel5_spec_matches_legacy_filters():
+    """The sobel5 spec is the paper's Eq. 3/5 bank — identical arrays to the
+    legacy module-level functions, including the v1/v2 decomposition data."""
+    p = F.SobelParams()
+    spec = F.get_operator("sobel5")
+    np.testing.assert_array_equal(spec.bank(4), F.filter_bank_5x5(p))
+    np.testing.assert_array_equal(spec.kd_plus_dense(), F.kd_plus(p))
+    np.testing.assert_array_equal(spec.kd_minus_dense(), F.kd_minus(p))
+    (col_f, _), (col_d, row_d) = F.kd_minus_factors(p)
+    scol_f, scol_d, srow_d = spec.v2_arrays()
+    np.testing.assert_array_equal(scol_f, col_f)
+    np.testing.assert_array_equal(scol_d, col_d)
+    np.testing.assert_array_equal(srow_d, row_d)
+
+
+def test_sobel5_custom_params_spec():
+    p = F.SobelParams(a=1, b=3, m=8, n=4)
+    spec = F.get_operator("sobel5", p)
+    np.testing.assert_array_equal(spec.bank(4), F.filter_bank_5x5(p))
+
+
+def test_sobel7_is_opencv_deriv_kernel():
+    """7x7 taps = binomial-6 smoothing x the order-7 Sobel derivative
+    (OpenCV getDerivKernels(1, 0, 7)); Gy is the transpose."""
+    spec = F.get_operator("sobel7")
+    smooth = np.float32([1, 6, 15, 20, 15, 6, 1])
+    deriv = np.float32([-1, -4, -5, 0, 5, 4, 1])
+    gx = np.outer(smooth, deriv)
+    np.testing.assert_array_equal(spec.bank(2)[0], gx)
+    np.testing.assert_array_equal(spec.bank(2)[1], gx.T)
+
+
+def test_variant_resolution():
+    s5 = F.get_operator("sobel5")
+    assert s5.resolve_variant("auto") == "v2"
+    assert s5.resolve_variant("v1") == "v1"
+    s3 = F.get_operator("sobel3")
+    assert s3.resolve_variant("v2") == "separable"   # no diagonal transform
+    assert s3.resolve_variant("direct") == "direct"
+    with pytest.raises(ValueError):
+        s3.resolve_variant("fancy")
+    sc = F.get_operator("scharr3")
+    assert sc.resolve_directions(None) == 2
+    with pytest.raises(ValueError):
+        sc.resolve_directions(4)
+
+
+def test_spec_is_hashable_static():
+    """Specs must be usable as jit static arguments (hashable, equal by
+    value) — the property the unified kernel relies on."""
+    a = F.get_operator("scharr3")
+    b = F.get_operator("scharr3")
+    assert a == b and hash(a) == hash(b)
+    assert len(jax.tree_util.tree_leaves(a)) == 0  # static pytree: no leaves
+
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: every operator x variant, bit-exact across backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_OPERATORS)
+def test_operator_cross_backend_bit_exact(name, rng):
+    """Acceptance bar: every registered operator (scharr3 and sobel7
+    included) runs on xla AND pallas-interpret with bit-exact magnitude,
+    on a ragged (non-block-multiple) size."""
+    img = jnp.asarray(_img(rng, (1, 57, 83)))
+    spec = F.get_operator(name)
+    for variant in spec.variants:
+        cfg = EdgeConfig(operator=name, variant=variant, normalize=False)
+        x = np.asarray(edge_detect(img, cfg, backend="xla").magnitude)
+        p = np.asarray(
+            edge_detect(img, cfg, backend="pallas-interpret",
+                        block_h=16, block_w=32).magnitude
+        )
+        np.testing.assert_array_equal(p, x, err_msg=f"{name}/{variant}")
+
+
+@pytest.mark.parametrize("name", ALL_OPERATORS)
+@pytest.mark.parametrize("padding", ["reflect", "edge", "zero"])
+def test_operator_boundary_modes(name, padding, rng):
+    """In-kernel boundary handling must honor the spec's halo radius (r=3
+    for sobel7) for every padding rule."""
+    img = jnp.asarray(_img(rng, (1, 23, 19)))
+    cfg = EdgeConfig(operator=name, padding=padding, normalize=False)
+    x = np.asarray(edge_detect(img, cfg, backend="xla").magnitude)
+    p = np.asarray(
+        edge_detect(img, cfg, backend="pallas-interpret",
+                    block_h=8, block_w=8).magnitude
+    )
+    np.testing.assert_array_equal(p, x)
+
+
+@pytest.mark.parametrize("name", ALL_OPERATORS)
+def test_operator_variant_ladder_identical(name, rng):
+    """All supported variants of an operator are mathematically identical
+    (bit-exact in f32 for the integer-weight built-ins)."""
+    img = jnp.asarray(_img(rng, (1, 31, 37)))
+    spec = F.get_operator(name)
+    ref = np.asarray(core_sobel(img, operator=name, variant="direct", directions=0))
+    for variant in spec.variants[1:]:
+        out = np.asarray(core_sobel(img, operator=name, variant=variant, directions=0))
+        np.testing.assert_array_equal(out, ref, err_msg=f"{name}/{variant}")
+
+
+def test_rgb_normalized_pipeline_all_operators(rng):
+    """The fused RGB + normalization megakernel works for every operator."""
+    rgbs = jnp.asarray(_img(rng, (1, 21, 27, 3), np.uint8))
+    for name in ALL_OPERATORS:
+        cfg = EdgeConfig(operator=name)
+        x = np.asarray(edge_detect(rgbs, cfg, backend="xla").magnitude)
+        p = np.asarray(
+            edge_detect(rgbs, cfg, backend="pallas-interpret",
+                        block_h=8, block_w=16).magnitude
+        )
+        np.testing.assert_array_equal(p, x, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Custom operator registration (the DESIGN.md §5 example)
+# ---------------------------------------------------------------------------
+
+def test_register_custom_operator(rng):
+    name = "test-smooth3"
+    if name not in F.list_operators():
+        # A softer 3x3 derivative: heavier center smoothing than Sobel.
+        F.register_operator(
+            name, F.make_separable_spec(name, (1.0, 4.0, 1.0), (-1.0, 0.0, 1.0))
+        )
+    assert name in F.list_operators()
+    img = jnp.asarray(_img(rng, (1, 25, 33)))
+    cfg = EdgeConfig(operator=name, normalize=False)
+    x = np.asarray(edge_detect(img, cfg, backend="xla").magnitude)
+    p = np.asarray(
+        edge_detect(img, cfg, backend="pallas-interpret",
+                    block_h=8, block_w=8).magnitude
+    )
+    np.testing.assert_array_equal(p, x)
+    # And the tuning key space accepts it.
+    from repro.kernels import tuning
+    key = tuning.TuneKey("pallas-interpret", "float32", name, "separable", 25, 33)
+    assert name in key.to_str()
+
+
+def test_register_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        F.register_operator("sobel5", F.get_operator("sobel3"))  # duplicate
+    with pytest.raises(ValueError):
+        F.make_separable_spec("even", (1.0, 1.0), (1.0, 1.0))  # even size
+    # Inconsistent separable factors are rejected at registration.
+    good = F.get_operator("prewitt3")
+    bad = F.OperatorSpec(
+        name="bad",
+        size=3,
+        directions=(2,),
+        variants=("direct", "separable"),
+        taps=good.taps,
+        sep=(((1.0, 2.0, 1.0), (-1.0, 0.0, 1.0)),) + good.sep[1:],  # wrong col
+    )
+    with pytest.raises(ValueError):
+        F.register_operator("bad-op", bad)

@@ -66,7 +66,7 @@ def test_autotune_cache_roundtrip(tmp_path, rng):
     raw = json.load(open(path))
     assert any(k.endswith("/32x48") for k in raw if not k.startswith("__"))
     reloaded = tuning.TuningCache(path)
-    key = tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 32, 48)
+    key = tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 32, 48)
     assert reloaded.lookup(key) == (bh, bw)
 
     # A second autotune is a pure cache hit (no sweep: empty shape list ok).
@@ -87,7 +87,7 @@ def test_choose_block_shape_priority(tmp_path):
     bh, bw, src = dispatch.choose_block_shape(64, 512, backend="pallas-interpret", cache=cache)
     assert src == "default" and bh and bw
     # cached entry -> tuned
-    cache.record(tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 64, 512), 16, 32, 1.0)
+    cache.record(tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 64, 512), 16, 32, 1.0)
     assert dispatch.choose_block_shape(
         64, 512, backend="pallas-interpret", cache=cache
     ) == (16, 32, "tuned")
@@ -105,8 +105,9 @@ def test_cache_ignores_corrupt_file(tmp_path):
 
 
 def test_cache_v1_migration(tmp_path):
-    """v1 cache files (no padding/layout key segments) must migrate to the
-    reflect/gray slot and be rewritten as schema v2 on save."""
+    """v1 cache files (no padding/layout key segments) must migrate through
+    the chain to the reflect/gray slot of the v3 (operator-named) key space
+    and be rewritten as schema v3 on save."""
     path = tmp_path / "v1.json"
     v1_key = "pallas-interpret/float32/5x5/v2/64x512"
     path.write_text(json.dumps({
@@ -115,21 +116,21 @@ def test_cache_v1_migration(tmp_path):
         "garbage-key": {"block_h": 1, "block_w": 1, "us": 1.0},
     }))
     cache = tuning.TuningCache(str(path))
-    # v1 tunings land in the reflect/gray slot of the v2 key space...
-    key = tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 64, 512)
+    # v1 tunings land in the reflect/gray slot of the v3 key space...
+    key = tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 64, 512)
     assert key.padding == "reflect" and key.layout == "gray"
     assert cache.lookup(key) == (16, 128)
     # ...and do NOT shadow other padding/layout slots.
     assert cache.lookup(
-        tuning.TuneKey("pallas-interpret", "float32", 5, "v2", 64, 512,
+        tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 64, 512,
                        padding="zero", layout="rgb")
     ) is None
-    # Unrecognizable keys are dropped, not corrupted into the v2 space.
+    # Unrecognizable keys are dropped, not corrupted into the new space.
     assert len(cache) == 1
     cache.save()
     raw = json.load(open(path))
-    assert raw["__meta__"]["version"] == tuning.TuningCache.VERSION == 2
-    assert "pallas-interpret/float32/5x5/v2/reflect/gray/64x512" in raw
+    assert raw["__meta__"]["version"] == tuning.TuningCache.VERSION == 3
+    assert "pallas-interpret/float32/sobel5/v2/reflect/gray/64x512" in raw
 
 
 def test_cache_v1_files_without_meta(tmp_path):
@@ -140,14 +141,56 @@ def test_cache_v1_files_without_meta(tmp_path):
     ))
     cache = tuning.TuningCache(str(path))
     assert cache.lookup(
-        tuning.TuneKey("pallas-tpu", "uint8", 3, "separable", 1024, 2048)
+        tuning.TuneKey("pallas-tpu", "uint8", "sobel3", "separable", 1024, 2048)
     ) == (32, 256)
+
+
+def test_cache_v2_to_v3_migration(tmp_path, rng):
+    """A v2 JSON cache on disk loads cleanly, old entries resolve for
+    operator="sobel5" (the SxS size segment maps onto the Sobel operator of
+    that size), dispatch consults them, and re-save writes schema v3."""
+    path = tmp_path / "v2.json"
+    path.write_text(json.dumps({
+        "__meta__": {"version": 2},
+        "pallas-interpret/float32/5x5/v2/reflect/gray/32x48":
+            {"block_h": 16, "block_w": 16, "us": 10.0},
+        "pallas-tpu/uint8/3x3/separable/zero/rgb/1024x2048":
+            {"block_h": 32, "block_w": 256, "us": 3.0},
+        "pallas-tpu/uint8/9x9/separable/zero/rgb/1024x2048":  # no such operator
+            {"block_h": 8, "block_w": 128, "us": 9.0},
+    }))
+    cache = tuning.TuningCache(str(path))
+    # Old entries resolve under the operator-named keys...
+    assert cache.lookup(
+        tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 32, 48)
+    ) == (16, 16)
+    assert cache.lookup(
+        tuning.TuneKey("pallas-tpu", "uint8", "sobel3", "separable", 1024, 2048,
+                       padding="zero", layout="rgb")
+    ) == (32, 256)
+    # ...unmappable sizes are dropped, and no non-Sobel operator is shadowed.
+    assert len(cache) == 2
+    assert cache.lookup(
+        tuning.TuneKey("pallas-interpret", "float32", "scharr3", "separable", 32, 48)
+    ) is None
+    # Dispatch consults the migrated entry end to end.
+    got = dispatch.choose_block_shape(32, 48, backend="pallas-interpret", cache=cache)
+    assert got == (16, 16, "tuned")
+    img = _img(rng, (1, 32, 48))
+    out = dispatch.sobel(img, backend="pallas-interpret", tuning_cache=cache)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(core_sobel(img)))
+    # Re-save writes v3.
+    cache.save()
+    raw = json.load(open(path))
+    assert raw["__meta__"]["version"] == 3
+    assert "pallas-interpret/float32/sobel5/v2/reflect/gray/32x48" in raw
+    assert not any("5x5" in k for k in raw if not k.startswith("__"))
 
 
 def test_key_distinguishes_padding_and_layout(tmp_path):
     cache = tuning.TuningCache(str(tmp_path / "c.json"))
-    base = dict(backend="pallas-interpret", dtype="uint8", size=5, variant="v2",
-                h=128, w=256)
+    base = dict(backend="pallas-interpret", dtype="uint8", operator="sobel5",
+                variant="v2", h=128, w=256)
     cache.record(tuning.TuneKey(**base, padding="reflect", layout="gray"), 8, 32, 1.0)
     cache.record(tuning.TuneKey(**base, padding="zero", layout="rgb"), 16, 64, 2.0)
     assert cache.lookup(tuning.TuneKey(**base, padding="reflect", layout="gray")) == (8, 32)
@@ -199,3 +242,45 @@ def test_fig6_sweeps_both_dims():
     ws = {r["name"].split("block_w=")[1]
           for r in rows if "block_w=" in r["name"]}
     assert len(hs) > 1 and len(ws) > 1
+
+
+def test_key_distinguishes_operator(tmp_path):
+    """Same geometry, different operator -> different tuning slots (the
+    schema-v3 point: scharr3/sobel7 tunings must not collide with sobel3/5)."""
+    cache = tuning.TuningCache(str(tmp_path / "c.json"))
+    base = dict(backend="pallas-interpret", dtype="float32", variant="separable",
+                h=128, w=256)
+    cache.record(tuning.TuneKey(operator="sobel3", **base), 8, 32, 1.0)
+    cache.record(tuning.TuneKey(operator="scharr3", **base), 16, 64, 2.0)
+    assert cache.lookup(tuning.TuneKey(operator="sobel3", **base)) == (8, 32)
+    assert cache.lookup(tuning.TuneKey(operator="scharr3", **base)) == (16, 64)
+    assert cache.lookup(tuning.TuneKey(operator="sobel7", **base)) is None
+
+
+def test_autotune_operator_keyed(tmp_path):
+    cache = tuning.TuningCache(str(tmp_path / "blocks.json"))
+    bh, bw = tuning.autotune(24, 32, operator="scharr3", shapes=[(8, 16)],
+                             iters=1, cache=cache, save=False)
+    assert (bh, bw) == (8, 16)
+    key = tuning.TuneKey("pallas-interpret", "float32", "scharr3", "separable", 24, 32)
+    assert cache.lookup(key) == (8, 16)
+
+
+def test_default_block_shape_folds_halo():
+    """The satellite fix: ``size`` must actually constrain the default block
+    — the halo'd (2r) working set has to fit the VMEM budget."""
+    from repro.kernels.edge import default_block_shape
+    from repro.kernels.tiling import tile_vmem_bytes
+
+    # Roomy budget: size does not bite, defaults cap at (64, 256).
+    assert default_block_shape(2048, 2048, 5) == (64, 256)
+    # Tight budget: the block shrinks until the halo'd tile fits, and a
+    # larger operator (bigger halo) can only shrink it further.
+    budget = 96 * 1024
+    shapes = {}
+    for size in (3, 5, 7):
+        bh, bw = default_block_shape(2048, 2048, size, max_vmem_bytes=budget)
+        assert tile_vmem_bytes(bh, bw, size // 2) <= budget, (size, bh, bw)
+        shapes[size] = bh * bw
+    assert shapes[7] <= shapes[5] <= shapes[3]
+    assert shapes[7] < 64 * 256
