@@ -132,6 +132,7 @@ def main() -> None:
         fig7_ssim,
         roofline_lm,
         roofline_sobel,
+        shard_scaling,
         table1_variants,
         table2_throughput,
     )
@@ -141,6 +142,7 @@ def main() -> None:
         ("table2", table2_throughput),
         ("fig6", fig6_blocksweep),
         ("fig7", fig7_ssim),
+        ("shard", shard_scaling),
         ("roofline_sobel", roofline_sobel),
         ("roofline_lm", roofline_lm),
     ]

@@ -1,0 +1,73 @@
+"""Multi-device scaling of the edge pipeline: single device vs batch-sharded
+vs 2-D spatially-sharded (halo exchange) on the image mesh.
+
+Rows come in a fixed set of shard shapes so the perf trajectory gains a
+stable multi-device series: ``1x1x1`` (the single-device reference, always
+emitted), ``Dx1x1`` (pure batch parallelism) and ``Dx R x C`` (spatial
+halo-exchange grid) for whatever the host's device count carries. On a
+1-device host only the reference row is emitted; CI runs this suite under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the sharded rows
+are tracked per PR. On forced *host* devices the collectives are memcpys —
+like the interpret-mode Pallas rows, a correctness-level trajectory signal,
+not a hardware speed claim.
+
+Timing uses the shared ``repro.kernels.tuning.measure_us`` harness; every
+variant is jitted end to end (halo exchange + per-shard kernel + masked
+pmax normalization).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import EdgeConfig, ShardConfig, edge_detect
+from repro.kernels.tuning import measure_us
+
+CASES = [(8, 1024)]          # (batch, frame side)
+SMOKE_CASES = [(4, 96)]
+
+
+def _shard_points(n_devices: int) -> List[ShardConfig]:
+    points = [ShardConfig(data=1, rows=1, cols=1)]
+    if n_devices >= 2:
+        points.append(ShardConfig(data=min(8, n_devices), rows=1, cols=1))
+    if n_devices >= 4:
+        points.append(ShardConfig(data=n_devices // 4, rows=2, cols=2))
+    if n_devices >= 8:
+        points.append(ShardConfig(data=1, rows=4, cols=2))
+    return points
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    n_dev = len(jax.devices())
+    backend = "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+    for batch, n in SMOKE_CASES if smoke else CASES:
+        img = jnp.asarray(rng.integers(0, 256, (batch, n, n, 3)).astype(np.uint8))
+        for shard in _shard_points(n_dev):
+            d, r, c = shard.data, shard.rows, shard.cols
+            cfg = EdgeConfig(
+                backend=backend,
+                shard=None if d * r * c == 1 else shard,
+            ).resolved()
+            fn = jax.jit(lambda x, cfg=cfg: edge_detect(x, cfg).magnitude)
+            us = measure_us(fn, img, iters=3)
+            rows.append(
+                {
+                    "name": f"shard/{batch}x{n}x{n}/{d}x{r}x{c}",
+                    "us_per_call": us,
+                    "backend": backend,
+                    "variant": cfg.variant,
+                    "derived": (
+                        f"MPS={batch * n * n / us:.1f};"
+                        f"mesh={d}x{r}x{c};devices={d * r * c}"
+                    ),
+                    "config": {"batch": batch, "n": n, "mesh": f"{d}x{r}x{c}",
+                               "normalize": True, "input": "rgb-u8"},
+                }
+            )
+    return rows

@@ -53,7 +53,7 @@ def _variant(arch, shape, name):
     if name == "rows_dp":
         # pure data-parallel images (no row sharding -> no halo exchange)
         rules = dict(base_rules)
-        rules["image_rows"] = ()
+        rules["height"] = ()
         return cfg, rules
     if name.startswith("variant_"):
         return cfg.replace(sobel_variant=name.split("_", 1)[1]), None

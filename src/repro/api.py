@@ -37,10 +37,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.filters import SobelParams, get_operator
+from repro.sharding.halo import ShardConfig
 
 __all__ = [
     "EdgeConfig",
     "EdgeResult",
+    "ShardConfig",
     "edge_detect",
     "detect_layout",
     "LAYOUTS",
@@ -87,6 +89,10 @@ class EdgeConfig:
       backend:    ``auto`` | ``pallas-tpu`` | ``pallas-interpret`` | ``xla``;
                   None = auto. Outputs are bit-exact across backends.
       block_h/block_w: Pallas tile override; None = tuning cache / default.
+      shard:      :class:`~repro.sharding.halo.ShardConfig` — spread the call
+                  over the image mesh ``(data, row, col)`` with halo
+                  exchange between spatial neighbors; None = single device.
+                  Sharded outputs are bit-exact with single-device ones.
       with_components:  also return per-direction gradients ``(..., D, H, W)``.
       with_orientation: also return gradient orientation ``atan2(G_y, G_x)``.
       with_max:         also return the per-image peak of the unnormalized
@@ -102,6 +108,7 @@ class EdgeConfig:
     backend: Optional[str] = None
     block_h: Optional[int] = None
     block_w: Optional[int] = None
+    shard: Optional[ShardConfig] = None
     with_components: bool = False
     with_orientation: bool = False
     with_max: bool = False
@@ -165,6 +172,7 @@ def edge_detect(
     config: Optional[EdgeConfig] = None,
     *,
     layout: Optional[str] = None,
+    mesh=None,
     **overrides,
 ) -> EdgeResult:
     """Run the full edge-detection pipeline on ``images``.
@@ -173,7 +181,12 @@ def edge_detect(
       images: ``HW`` / ``HWC`` / ``NHW`` / ``NHWC`` grayscale or RGB images,
         or batched video stacks (``NTHW`` / ``NTHWC``); u8 or float.
       config: an :class:`EdgeConfig`; None = defaults.
-      layout: explicit layout override (skips auto-detection).
+      layout: explicit layout override (skips auto-detection) — the escape
+        hatch for ambiguous shapes, e.g. a ``(3, H, W)`` grayscale batch
+        whose trailing dim happens to be 3.
+      mesh: concrete image mesh (axes ``data``/``row``/``col``) overriding
+        ``config.shard`` — for callers that manage the device population
+        themselves (elastic serving).
       **overrides: convenience — field overrides applied to ``config`` via
         ``dataclasses.replace`` (e.g. ``edge_detect(x, operator="scharr3")``).
 
@@ -188,4 +201,4 @@ def edge_detect(
     cfg = cfg.resolved()
     images = jnp.asarray(images)
     layout = layout or detect_layout(images.shape)
-    return dispatch.edge(images, cfg, layout=layout)
+    return dispatch.edge(images, cfg, layout=layout, mesh=mesh)

@@ -83,10 +83,11 @@ class ModelConfig:
     sobel_backend: str = "auto"      # dispatch backend: auto | pallas-tpu | pallas-interpret | xla
     sobel_block_h: int = 0           # Pallas tile rows; 0 = tuning cache / default
     sobel_block_w: int = 0           # Pallas tile cols; 0 = tuning cache / default
+    sobel_shard: str = ""            # image-mesh shard spec "DxRxC" | "auto"; "" = single device
 
     def edge_config(self, **overrides):
         """This config's image pipeline as a ``repro.api.EdgeConfig``."""
-        from repro.api import EdgeConfig
+        from repro.api import EdgeConfig, ShardConfig
         from repro.core.filters import operator_for_size
 
         operator = self.sobel_operator or operator_for_size(self.sobel_size)
@@ -97,6 +98,7 @@ class ModelConfig:
             backend=self.sobel_backend,
             block_h=self.sobel_block_h or None,
             block_w=self.sobel_block_w or None,
+            shard=ShardConfig.parse(self.sobel_shard) if self.sobel_shard else None,
         )
         return cfg.replace(**overrides) if overrides else cfg
 

@@ -1,6 +1,9 @@
 """sobel-hd [image] — the paper's own workload as an 11th architecture:
-batched four-directional 5x5 Sobel edge detection (RG-v2), sharded
-batch -> (pod, data), image rows -> model.
+batched four-directional 5x5 Sobel edge detection (RG-v2). On the image
+mesh the logical axes shard batch -> data and height/width -> row/col with
+halo exchange (``repro.sharding.halo``); ``sobel_shard`` ("DxRxC" | "auto")
+opts a deployment into it, and ``--shard`` on ``launch.serve`` overrides
+per run.
 
 The image pipeline knobs are one ``repro.api.EdgeConfig`` away:
 ``cfg.edge_config()`` converts the ModelConfig fields (operator /

@@ -21,12 +21,20 @@ backends are mathematically identical; for integer-weight taps the outputs
 are bit-exact across backends (see ``repro.core.sobel.magnitude`` and
 ``repro.kernels.tiling.luma``).
 
+When the config carries a :class:`~repro.sharding.halo.ShardConfig` (or an
+explicit image ``mesh`` is passed), the same per-shard backend compute runs
+under ``shard_map`` on the image mesh ``(data, row, col)`` with halo
+exchange of the operator radius between spatial neighbors
+(``repro.sharding.halo``) — batch-sharded, spatially sharded, or both, and
+bit-exact with the single-device engine for every backend.
+
 The historical entry points :func:`sobel` and :func:`edge_detect` are
 deprecation-warning shims over the engine; their outputs are bit-exact with
 the facade's.
 """
 from __future__ import annotations
 
+import math
 import warnings
 from typing import TYPE_CHECKING, Optional, Tuple
 
@@ -77,24 +85,35 @@ def choose_block_shape(
     block_h: Optional[int] = None,
     block_w: Optional[int] = None,
     cache: Optional[tuning.TuningCache] = None,
+    devices: int = 1,
+    mesh: str = "1x1x1",
+    kernel_h: Optional[int] = None,
+    kernel_w: Optional[int] = None,
 ) -> Tuple[int, int, str]:
     """Resolve (block_h, block_w, source) for a Pallas backend.
 
     ``source`` is ``"explicit"``, ``"tuned"`` or ``"default"`` — tests and
     benchmarks use it to verify the tuning cache actually steers dispatch.
+    ``h``/``w`` key the cache on the user-visible frame; under spatial
+    sharding ``kernel_h``/``kernel_w`` name the halo-extended local block
+    the kernel actually tiles (they size the fallback default), and
+    ``devices``/``mesh`` keep sharded tunings from colliding with
+    single-device entries (TuneKey schema v4).
     """
     if block_h and block_w:
         return block_h, block_w, "explicit"
     cache = cache if cache is not None else tuning.get_default_cache()
     hit = cache.lookup(
-        tuning.TuneKey(backend, dtype, operator, variant, h, w, padding, layout)
+        tuning.TuneKey(backend, dtype, operator, variant, h, w, padding,
+                       layout, devices, mesh)
     )
     if hit is not None:
         bh, bw = hit
         return block_h or bh, block_w or bw, "tuned"
     spec = get_operator(operator)
     dbh, dbw = ekern.default_block_shape(
-        h, w, spec.size, channels=3 if layout == "rgb" else None
+        kernel_h or h, kernel_w or w, spec.size,
+        channels=3 if layout == "rgb" else None,
     )
     return block_h or dbh, block_w or dbw, "default"
 
@@ -108,20 +127,113 @@ def _kernel_dtype_name(x: jnp.ndarray) -> str:
 # The engine
 # ---------------------------------------------------------------------------
 
+def _backend_compute(config, backend, *, rgb, need_comps, block_h, block_w):
+    """The backend compute: ``(B, h, w[, 3]) -> (magnitude, stacked
+    components | None)``.
+
+    Both engine branches run this same closure — single-device directly,
+    sharded per-shard under ``shard_map`` — which is what makes
+    sharded-vs-single bit-exactness hold per backend by construction. (The
+    single-device magnitude+peak case bypasses it for the fused ``with_max``
+    kernel; the sharded path computes its peak from the cropped magnitude
+    instead, an exact max either way.)
+    """
+    if backend == "xla":
+        from repro.core.pipeline import rgb_to_gray
+
+        def run(xl):
+            gray = rgb_to_gray(xl) if rgb else xl.astype(jnp.float32)
+            ctuple = core_components(
+                gray,
+                operator=config.operator,
+                directions=config.directions,
+                variant=config.variant,
+                params=config.params or SobelParams(),
+                padding=config.padding,
+            )
+            mag = rss_magnitude(ctuple)
+            return mag, (jnp.stack(ctuple, axis=-3) if need_comps else None)
+
+        return run
+
+    kw = dict(
+        operator=config.operator, variant=config.variant,
+        params=config.params, directions=config.directions,
+        padding=config.padding, block_h=block_h, block_w=block_w, rgb=rgb,
+        interpret=(backend == "pallas-interpret"),
+    )
+
+    def run(xl):
+        if need_comps:
+            stacked = ekern.edge_pallas(xl, out_components=True, **kw)
+            ctuple = tuple(
+                jax.lax.index_in_dim(stacked, d, axis=1, keepdims=False)
+                for d in range(config.directions)
+            )
+            return rss_magnitude(ctuple), stacked
+        return ekern.edge_pallas(xl, **kw), None
+
+    return run
+
+
+def _edge_sharded(
+    x, config, backend, mesh, *, rgb, h, w, need_comps, need_peak,
+    tuning_cache,
+):
+    """Sharded engine body: returns ``(mag, comps|None, peak (B,1,1)|None)``
+    bit-exact with the single-device branch."""
+    from repro.sharding import halo
+
+    spec = config.spec
+    r = spec.radius
+    d, rr, cc = mesh.shape["data"], mesh.shape["row"], mesh.shape["col"]
+    sh, _hp = halo.shard_geometry(h, rr, r)
+    sw, _wp = halo.shard_geometry(w, cc, r)
+    he = sh + (2 * r if rr > 1 else 0)
+    we = sw + (2 * r if cc > 1 else 0)
+
+    bh = bw = None
+    if backend != "xla":
+        bh, bw, _src = choose_block_shape(
+            h, w, operator=config.operator, variant=config.variant,
+            dtype=_kernel_dtype_name(x), backend=backend,
+            padding=config.padding, layout="rgb" if rgb else "gray",
+            block_h=config.block_h, block_w=config.block_w,
+            cache=tuning_cache,
+            devices=d * rr * cc, mesh=f"{d}x{rr}x{cc}",
+            kernel_h=he, kernel_w=we,
+        )
+    run = _backend_compute(
+        config, backend, rgb=rgb, need_comps=need_comps,
+        block_h=bh, block_w=bw,
+    )
+    mag, comps, peak = halo.sharded_edge(
+        x, mesh, radius=r, padding=config.padding, compute=run,
+        rgb=rgb, need_comps=need_comps, need_peak=need_peak,
+    )
+    if need_peak:
+        peak = peak[:, None, None]
+    return mag, comps, peak
+
+
 def edge(
     images: jnp.ndarray,
     config: "EdgeConfig",
     *,
     layout: Optional[str] = None,
     tuning_cache: Optional[tuning.TuningCache] = None,
+    mesh=None,
 ) -> "EdgeResult":
     """Run one resolved :class:`~repro.api.EdgeConfig` end to end.
 
     This is the single funnel every entry point (the ``repro.api`` facade
     and all legacy shims) goes through: backend resolution, block-shape
-    choice, the fused Pallas launch / XLA reference, and the assembly of
-    the structured result. ``layout`` must name the input layout (the
-    facade auto-detects it; see ``repro.api.detect_layout``).
+    choice, the fused Pallas launch / XLA reference / sharded engine, and
+    the assembly of the structured result. ``layout`` must name the input
+    layout (the facade auto-detects it; see ``repro.api.detect_layout``).
+    ``mesh`` (a concrete image mesh with axes ``data``/``row``/``col``)
+    overrides ``config.shard`` — the serve loop passes the surviving-device
+    mesh here after an elastic reshard.
     """
     from repro.api import EdgeResult, detect_layout
 
@@ -144,61 +256,57 @@ def edge(
     need_comps = config.with_components or config.with_orientation
     need_peak = config.normalize or config.with_max
 
+    if mesh is None and config.shard is not None:
+        from repro.sharding import halo
+
+        mesh = halo.mesh_from_config(config.shard)
+
     comps = None
     peak = None  # (B, 1, 1) while normalizing; squeezed into the result
-    if backend == "xla":
-        from repro.core.pipeline import rgb_to_gray
-
-        gray = rgb_to_gray(x) if rgb else x.astype(jnp.float32)
-        ctuple = core_components(
-            gray,
-            operator=config.operator,
-            directions=config.directions,
-            variant=config.variant,
-            params=config.params or SobelParams(),
-            padding=config.padding,
+    if mesh is not None and math.prod(mesh.shape.values()) > 1:
+        mag, comps, peak = _edge_sharded(
+            x, config, backend, mesh, rgb=rgb, h=h, w=w,
+            need_comps=need_comps, need_peak=need_peak,
+            tuning_cache=tuning_cache,
         )
-        mag = rss_magnitude(ctuple)
-        if need_comps:
-            comps = jnp.stack(ctuple, axis=-3)          # (B, D, H, W)
-        if need_peak:
-            peak = jnp.max(mag, axis=(-2, -1), keepdims=True)
     else:
-        interpret = backend == "pallas-interpret"
-        bh, bw, _src = choose_block_shape(
-            h, w, operator=config.operator, variant=config.variant,
-            dtype=_kernel_dtype_name(x), backend=backend,
-            padding=config.padding, layout="rgb" if rgb else "gray",
-            block_h=config.block_h, block_w=config.block_w,
-            cache=tuning_cache,
-        )
-        kw = dict(
-            operator=config.operator, variant=config.variant,
-            params=config.params, directions=config.directions,
-            padding=config.padding, block_h=bh, block_w=bw, rgb=rgb,
-            interpret=interpret,
-        )
-        if need_comps:
-            stacked = ekern.edge_pallas(x, out_components=True, **kw)
-            ctuple = tuple(
-                jax.lax.index_in_dim(stacked, d, axis=1, keepdims=False)
-                for d in range(config.directions)
+        bh = bw = None
+        if backend != "xla":
+            bh, bw, _src = choose_block_shape(
+                h, w, operator=config.operator, variant=config.variant,
+                dtype=_kernel_dtype_name(x), backend=backend,
+                padding=config.padding, layout="rgb" if rgb else "gray",
+                block_h=config.block_h, block_w=config.block_w,
+                cache=tuning_cache,
             )
-            mag = rss_magnitude(ctuple)
-            comps = stacked
-            if need_peak:
-                peak = jnp.max(mag, axis=(-2, -1), keepdims=True)
-        elif need_peak:
-            mag, bmax = ekern.edge_pallas(x, with_max=True, **kw)
+        if backend != "xla" and need_peak and not need_comps:
+            # Fused Pallas fast path: the kernel emits per-block maxima, so
+            # normalization needs no second whole-image reduction read.
+            mag, bmax = ekern.edge_pallas(
+                x, with_max=True,
+                operator=config.operator, variant=config.variant,
+                params=config.params, directions=config.directions,
+                padding=config.padding, block_h=bh, block_w=bw, rgb=rgb,
+                interpret=(backend == "pallas-interpret"),
+            )
             # Max-of-block-maxes == max over the image (exact).
             peak = jnp.max(bmax, axis=(-2, -1), keepdims=True)
         else:
-            mag = ekern.edge_pallas(x, **kw)
+            run = _backend_compute(
+                config, backend, rgb=rgb, need_comps=need_comps,
+                block_h=bh, block_w=bw,
+            )
+            mag, comps = run(x)
+            if need_peak:
+                peak = jnp.max(mag, axis=(-2, -1), keepdims=True)
 
     orientation = None
     if config.with_orientation:
         # atan2 on bit-identical (G_y, G_x) — bit-exact across backends.
-        orientation = jnp.arctan2(ctuple[1], ctuple[0])
+        # comps is (B, D, H, W) on every path that reaches here.
+        g_x = jax.lax.index_in_dim(comps, 0, axis=1, keepdims=False)
+        g_y = jax.lax.index_in_dim(comps, 1, axis=1, keepdims=False)
+        orientation = jnp.arctan2(g_y, g_x)
 
     if config.normalize:
         # The rescale expression matches the legacy pipeline op-for-op.

@@ -9,16 +9,21 @@ The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
     (:func:`measure_us` — warm call to exclude compile, then a best-of-iters
     loop), and
   * persists the winner in a JSON cache keyed by
-    ``(backend, dtype, operator, variant, padding, layout, H, W)``
-    (:class:`TuningCache`), which ``repro.kernels.dispatch`` consults on
-    every call. ``operator`` entered the key with the declarative operator
-    registry (schema v3): tunings for ``sobel5`` vs ``scharr3`` vs the 7x7
-    extended operator must not collide — the halo radius and in-kernel
-    arithmetic differ per spec. ``padding`` and ``layout`` (gray/rgb)
-    entered with the fused zero-copy pipeline (schema v2). Older files
-    migrate on load: v1 entries land in the reflect/gray slot, v2 entries
-    map their ``SxS`` size segment onto the Sobel operator of that size;
-    the next :meth:`TuningCache.save` rewrites the file as v3.
+    ``(backend, dtype, operator, variant, padding, layout, H, W, devices,
+    mesh)`` (:class:`TuningCache`), which ``repro.kernels.dispatch``
+    consults on every call. ``devices``/``mesh`` entered with the
+    multi-device edge engine (schema v4): under spatial sharding the kernel
+    runs on the halo-extended *local* block, so a tuning taken on a
+    ``1x2x2`` mesh must not collide with the single-device entry for the
+    same frame size. ``operator`` entered the key with the declarative
+    operator registry (schema v3): tunings for ``sobel5`` vs ``scharr3`` vs
+    the 7x7 extended operator must not collide — the halo radius and
+    in-kernel arithmetic differ per spec. ``padding`` and ``layout``
+    (gray/rgb) entered with the fused zero-copy pipeline (schema v2). Older
+    files migrate on load: v1 entries land in the reflect/gray slot, v2
+    entries map their ``SxS`` size segment onto the Sobel operator of that
+    size, v3 entries land in the single-device (``1/1x1x1``) slot; the next
+    :meth:`TuningCache.save` rewrites the file as v4.
 
 Cache location: ``$REPRO_TUNE_CACHE`` if set, else
 ``~/.cache/repro/sobel_blocks.json``. The file is plain JSON so it can be
@@ -66,15 +71,18 @@ class TuneKey:
     dtype: str        # canonical jnp dtype name of the *input* image
     operator: str     # registered operator name (sobel5 | sobel3 | scharr3 | ...)
     variant: str
-    h: int
+    h: int            # frame H/W as the user sees it (not the local block)
     w: int
     padding: str = "reflect"   # reflect | edge | zero
     layout: str = "gray"       # gray | rgb
+    devices: int = 1           # devices the call spans (1 = single-device)
+    mesh: str = "1x1x1"        # image mesh shape "DxRxC" (data x row x col)
 
     def to_str(self) -> str:
         return (
             f"{self.backend}/{self.dtype}/{self.operator}/{self.variant}"
             f"/{self.padding}/{self.layout}/{self.h}x{self.w}"
+            f"/{self.devices}/{self.mesh}"
         )
 
 
@@ -85,7 +93,7 @@ _SIZE_TO_OPERATOR = {"3x3": "sobel3", "5x5": "sobel5", "7x7": "sobel7"}
 def _migrate_v1_key(key: str) -> Optional[str]:
     """v1 keys were ``backend/dtype/SxS/variant/HxW``; the v1 kernels always
     behaved as reflect padding on grayscale input, so that is the slot their
-    tunings carry over to (then through v2->v3). Returns None for
+    tunings carry over to (then through v2->v3->v4). Returns None for
     unrecognizable keys."""
     parts = key.split("/")
     if len(parts) != 5:
@@ -104,7 +112,16 @@ def _migrate_v2_key(key: str) -> Optional[str]:
     if op is None:
         return None
     parts[2] = op
-    return "/".join(parts)
+    return _migrate_v3_key("/".join(parts))
+
+
+def _migrate_v3_key(key: str) -> Optional[str]:
+    """v3 keys predate the multi-device engine — every tuning was taken on
+    one device, so they land in the ``1/1x1x1`` slot of the v4 key space."""
+    parts = key.split("/")
+    if len(parts) != 7:
+        return None
+    return "/".join(parts + ["1", "1x1x1"])
 
 
 class TuningCache:
@@ -112,12 +129,12 @@ class TuningCache:
 
     Schema: ``{key: {"block_h": int, "block_w": int, "us": float}}`` with a
     ``__meta__`` entry recording the schema version. Older files (v1: no
-    padding/layout key segments; v2: size segment instead of operator name)
-    are migrated in-memory on load and rewritten as v3 on the next
-    :meth:`save`.
+    padding/layout key segments; v2: size segment instead of operator name;
+    v3: no device-count/mesh segments) are migrated in-memory on load and
+    rewritten as v4 on the next :meth:`save`.
     """
 
-    VERSION = 3
+    VERSION = 4
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -135,8 +152,10 @@ class TuningCache:
             return self
         version = raw.get("__meta__", {}).get("version", 1)
         entries = {k: v for k, v in raw.items() if not k.startswith("__")}
-        if version < 3:
-            migrate = _migrate_v1_key if version < 2 else _migrate_v2_key
+        if version < self.VERSION:
+            migrate = {1: _migrate_v1_key, 2: _migrate_v2_key}.get(
+                version, _migrate_v3_key
+            )
             migrated = {}
             for k, v in entries.items():
                 mk = migrate(k)
@@ -363,6 +382,8 @@ def autotune(
     cache: Optional[TuningCache] = None,
     refresh: bool = False,
     save: bool = True,
+    devices: int = 1,
+    mesh: str = "1x1x1",
 ) -> Tuple[int, int]:
     """Best (block_h, block_w) for the workload; cached across processes.
 
@@ -370,6 +391,9 @@ def autotune(
     ``refresh``; on a miss, sweeps the legal shapes, records the winner, and
     persists the cache to disk (``save=False`` to skip, e.g. in tests).
     ``operator`` (registry name) overrides the legacy ``size`` selector.
+    ``devices``/``mesh`` slot the tuning for a sharded deployment — the
+    sweep itself times the per-shard (h, w) block, which for a spatial mesh
+    is the halo-extended local shape (see ``dispatch.choose_block_shape``).
     """
     from repro.core.filters import get_operator, operator_for_size
 
@@ -378,7 +402,8 @@ def autotune(
     # (e.g. scharr3 has no diagonal transform: v2 -> separable).
     variant = get_operator(operator).resolve_variant(variant)
     cache = cache if cache is not None else get_default_cache()
-    key = TuneKey(backend, dtype, operator, variant, h, w, padding, layout)
+    key = TuneKey(backend, dtype, operator, variant, h, w, padding, layout,
+                  devices, mesh)
     if not refresh:
         hit = cache.lookup(key)
         if hit is not None:

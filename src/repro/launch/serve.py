@@ -8,6 +8,18 @@ traffic through the ``repro.api`` facade — the arch's ``EdgeConfig``
 (operator / directions / variant / backend / block overrides) is threaded
 verbatim into :func:`repro.api.edge_detect`; reports megapixels/second and
 per-batch latency percentiles (the paper's Table 2 metric).
+
+Multi-device serving: ``--shard DxRxC`` (or the arch's ``sobel_shard``)
+spreads every request over the image mesh — D-way batch parallelism plus an
+RxC spatial grid with halo exchange (``repro.sharding.halo``). The loop is
+elastic: ``--simulate-loss-at N`` drops half the devices before request N,
+replans the mesh via ``runtime.elastic.plan_image_mesh`` (the spatial grid
+survives, the data axis shrinks), re-jits, and keeps serving.
+
+Latency methodology: compile iterations (the initial warm-up and the
+re-warm after a reshard) are excluded from the percentile window, and every
+stamped request is ``block_until_ready`` on the *full* result pytree, so
+p50/p95 reflect steady-state serving.
 """
 from __future__ import annotations
 
@@ -28,44 +40,90 @@ def serve_image(cfg, args) -> None:
     """Edge-detection serving: one request = one batch of frames."""
     import jax.numpy as jnp
 
-    from repro.api import edge_detect
+    from repro.api import ShardConfig, edge_detect
     from repro.data.synthetic import image_batch
+    from repro.runtime.elastic import make_image_mesh, plan_image_mesh, reshard
+    from repro.sharding.partition import layout_logical_axes
 
     edge_cfg = cfg.edge_config(with_max=True).resolved()
+    shard_spec = args.shard if args.shard is not None else cfg.sobel_shard
+    shard = ShardConfig.parse(shard_spec) if shard_spec else None
+    devices = list(jax.devices())
+    if shard is not None:
+        # Strict at startup: a spec that does not fit the machine is a
+        # config error, not something to silently downgrade. The clamping
+        # path below is reserved for elastic *loss* of devices mid-run.
+        shard.resolve(len(devices))
     print(
         f"serving {cfg.name}: operator={edge_cfg.operator} "
         f"variant={edge_cfg.variant} directions={edge_cfg.directions} "
-        f"backend={edge_cfg.backend} {cfg.image_h}x{cfg.image_w}"
+        f"backend={edge_cfg.backend} {cfg.image_h}x{cfg.image_w} "
+        f"devices={len(devices)} shard={shard_spec or 'none'}"
     )
 
-    @jax.jit
-    def step(frames):
-        return edge_detect(frames, edge_cfg)
+    def build_step(devs):
+        """(mesh, jitted step) for the current device population."""
+        if shard is None:
+            mesh = None
+        else:
+            (d, r, c), _ = plan_image_mesh(
+                len(devs), rows=shard.rows, cols=shard.cols, data=shard.data
+            )
+            mesh = make_image_mesh(devs, rows=r, cols=c, data=d)
+            print(f"image mesh: data={d} row={r} col={c} on {d * r * c} device(s)")
+        return mesh, jax.jit(lambda frames: edge_detect(frames, edge_cfg, mesh=mesh))
+
+    def place(frames, mesh):
+        if mesh is None:
+            return frames
+        layout = "NHW" if frames.ndim == 3 else "NHWC"
+        return reshard(frames, layout_logical_axes(layout), mesh, frames,
+                       rules="image")
+
+    def warm(step, mesh, req):
+        """Pay compile outside the latency window."""
+        frames = jnp.asarray(image_batch(cfg, batch=args.slots, step=req)["images"])
+        jax.block_until_ready(step(place(frames, mesh)))
+
+    mesh, step = build_step(devices)
+    warm(step, mesh, req=0)
 
     lat_ms = []
     px_total = 0
+    resharded = False
     t_all = time.perf_counter()
     for req in range(args.requests):
+        if args.simulate_loss_at and req == args.simulate_loss_at:
+            survivors = devices[: max(1, len(devices) // 2)]
+            print(
+                f"simulated device loss: {len(devices)} -> {len(survivors)} "
+                f"devices; replanning mesh and resharding"
+            )
+            devices = survivors
+            mesh, step = build_step(devices)
+            warm(step, mesh, req=req)  # recompile excluded from the window
+            resharded = True
         frames = jnp.asarray(
             image_batch(cfg, batch=args.slots, step=req)["images"]
         )
+        frames = place(frames, mesh)
         t0 = time.perf_counter()
         out = step(frames)
-        jax.block_until_ready(out.magnitude)
+        jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        if req > 0:  # first request pays compile
-            lat_ms.append(dt * 1e3)
-            px_total += frames.shape[0] * cfg.image_h * cfg.image_w
+        lat_ms.append(dt * 1e3)
+        px_total += frames.shape[0] * cfg.image_h * cfg.image_w
     wall = time.perf_counter() - t_all
-    if not lat_ms:  # --requests 1: everything was compile warm-up
-        print(f"{args.requests} request(s), {wall:.2f}s (all warm-up; "
-              f"use --requests >= 2 for steady-state numbers)")
+    if not lat_ms:  # --requests 0: nothing but the warm-up ran
+        print(f"0 requests served in {wall:.2f}s (warm-up only; "
+              f"use --requests >= 1 for steady-state numbers)")
         return
     mps = px_total / 1e6 / (sum(lat_ms) / 1e3)
+    tag = " (served through reshard)" if resharded else ""
     print(
         f"{args.requests} requests x {args.slots} frames, {wall:.2f}s -> "
         f"{mps:.1f} MPS; latency p50={_percentile(lat_ms, 50):.1f}ms "
-        f"p95={_percentile(lat_ms, 95):.1f}ms"
+        f"p95={_percentile(lat_ms, 95):.1f}ms{tag}"
     )
 
 
@@ -99,6 +157,12 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--shard", default=None,
+                    help="image mesh 'DxRxC' (data x row x col) or 'auto'; "
+                         "default: the arch's sobel_shard")
+    ap.add_argument("--simulate-loss-at", type=int, default=0, metavar="N",
+                    help="before request N, drop half the devices and "
+                         "reshard (elastic serving drill)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke).replace(dtype="float32")

@@ -90,7 +90,7 @@ _BATCH_AXES = {
     "loss_weights": ("batch", None),
     "patch_embeds": ("batch", None, None),
     "enc_embeds": ("batch", None, None),
-    "images": ("batch", "image_rows", None),
+    "images": ("batch", "height", "width"),
     "positions": ("batch", None),
     "cache_positions": ("batch", None),
 }

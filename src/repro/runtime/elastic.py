@@ -1,11 +1,21 @@
 """Elastic scaling: rebuild the mesh when the device population changes and
-re-shard live training state onto it.
+re-shard live state onto it.
 
-``plan_mesh`` picks the largest (data, model) grid for the surviving devices
-(keeping the model axis if possible — TP degree is a property of the
-checkpointed layout, DP shrinks first). ``reshard`` moves a state pytree onto
-the new mesh via its logical axes, so a job that loses a host continues with
-a smaller data axis instead of dying.
+Two mesh families share one policy — a parallelism degree that is a
+property of the workload survives device loss, pure data parallelism
+shrinks first:
+
+  * LM meshes ``(pod, data, model)``: :func:`plan_mesh` keeps the ``model``
+    axis if possible (TP degree is a property of the checkpointed layout)
+    and shrinks ``data``.
+  * Image meshes ``(data, row, col)``: :func:`plan_image_mesh` keeps the
+    spatial ``row x col`` grid if possible (the spatial degree is what the
+    block shapes were tuned for; see ``sharding.halo``) and shrinks
+    ``data``. Only when the survivors cannot carry the spatial grid does it
+    halve the larger spatial axis.
+
+``reshard`` moves a state pytree onto the new mesh via its logical axes, so
+a job that loses a host continues with a smaller data axis instead of dying.
 """
 from __future__ import annotations
 
@@ -17,7 +27,13 @@ from jax.sharding import Mesh
 
 from repro.sharding.partition import shardings_for_tree
 
-__all__ = ["plan_mesh", "make_mesh", "reshard"]
+__all__ = [
+    "plan_mesh",
+    "make_mesh",
+    "plan_image_mesh",
+    "make_image_mesh",
+    "reshard",
+]
 
 
 def plan_mesh(n_devices: int, *, model_parallel: int = 1, pods: int = 1) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
@@ -42,7 +58,53 @@ def make_mesh(
     return Mesh(grid, axes)
 
 
-def reshard(state: Any, axes_tree: Any, new_mesh: Mesh, shape_tree: Any = None) -> Any:
-    """Move ``state`` onto ``new_mesh`` according to its logical axes."""
-    shardings = shardings_for_tree(axes_tree, new_mesh, shape_tree)
+IMAGE_MESH_AXES = ("data", "row", "col")
+
+
+def plan_image_mesh(
+    n_devices: int, *, rows: int = 1, cols: int = 1, data: int = 0
+) -> Tuple[Tuple[int, int, int], Tuple[str, str, str]]:
+    """Largest ``(data, row, col)`` image mesh for ``n_devices``.
+
+    The requested spatial grid is kept if it fits (halving the larger
+    spatial axis until it does); ``data`` fills the remaining devices
+    (``data=0``) or is clamped down to what the survivors can carry — the
+    device-loss path: losing half the machine halves throughput, not the
+    halo-tuned spatial layout.
+    """
+    rows, cols = max(1, rows), max(1, cols)
+    while rows * cols > n_devices:
+        if rows >= cols and rows > 1:
+            rows //= 2
+        elif cols > 1:
+            cols //= 2
+        else:
+            rows //= 2
+    spatial = rows * cols
+    fill = n_devices // spatial
+    d = min(data, fill) if data else fill
+    return (max(1, d), rows, cols), IMAGE_MESH_AXES
+
+
+def make_image_mesh(
+    devices: Optional[Sequence] = None, *, rows: int = 1, cols: int = 1, data: int = 0
+) -> Mesh:
+    """Concrete image mesh over ``devices`` (default: all local devices)."""
+    devices = list(devices if devices is not None else jax.devices())
+    shape, axes = plan_image_mesh(len(devices), rows=rows, cols=cols, data=data)
+    n = int(np.prod(shape))
+    grid = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(grid, axes)
+
+
+def reshard(
+    state: Any, axes_tree: Any, new_mesh: Mesh, shape_tree: Any = None, rules=None
+) -> Any:
+    """Move ``state`` onto ``new_mesh`` according to its logical axes.
+
+    ``rules`` selects the rule table ("train" | "serve" | "image" or an
+    explicit dict); the default merged table resolves both LM and image
+    logical axes.
+    """
+    shardings = shardings_for_tree(axes_tree, new_mesh, shape_tree, rules=rules)
     return jax.tree.map(jax.device_put, state, shardings)

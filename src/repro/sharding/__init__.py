@@ -1,9 +1,24 @@
-from repro.sharding.partition import replicated, shardings_for_tree, specs_for_tree  # noqa: F401
+from repro.sharding.partition import (  # noqa: F401
+    image_spec,
+    layout_logical_axes,
+    replicated,
+    shardings_for_tree,
+    specs_for_tree,
+)
 from repro.sharding.rules import (  # noqa: F401
     DEFAULT_RULES,
+    IMAGE_RULES,
+    LM_RULES,
     activation_shard,
     current_mesh,
     logical_to_spec,
     mesh_context,
     sharding_for,
+)
+from repro.sharding.halo import (  # noqa: F401
+    ShardConfig,
+    halo_exchange,
+    mesh_from_config,
+    sharded_edge,
+    shard_geometry,
 )

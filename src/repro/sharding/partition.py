@@ -1,14 +1,48 @@
-"""Apply logical-axis trees to parameter pytrees -> NamedSharding trees."""
+"""Apply logical-axis trees to parameter pytrees -> NamedSharding trees,
+plus the image-layout helpers the multi-device edge engine places with."""
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.sharding.rules import logical_to_spec
 
-__all__ = ["specs_for_tree", "shardings_for_tree", "replicated"]
+__all__ = [
+    "specs_for_tree",
+    "shardings_for_tree",
+    "replicated",
+    "layout_logical_axes",
+    "image_spec",
+]
+
+
+def layout_logical_axes(layout: str) -> Tuple[Optional[str], ...]:
+    """Logical image axes for a ``repro.api`` layout string.
+
+    Every leading batch dim (``N``/``T``) is ``batch`` on the first and
+    unsharded after that (one data axis); ``H``/``W``/``C`` map to
+    ``height``/``width``/``channel``.
+    """
+    table = {"H": "height", "W": "width", "C": "channel"}
+    axes = []
+    seen_batch = False
+    for ch in layout:
+        if ch in table:
+            axes.append(table[ch])
+        else:
+            axes.append(None if seen_batch else "batch")
+            seen_batch = True
+    return tuple(axes)
+
+
+def image_spec(
+    layout: str, mesh: Mesh, shape: Optional[Tuple[int, ...]] = None
+) -> P:
+    """PartitionSpec for an image batch of ``layout`` on ``mesh`` under the
+    image rule set (batch -> data, height -> row, width -> col)."""
+    return logical_to_spec(layout_logical_axes(layout), mesh, shape, rules="image")
 
 
 def specs_for_tree(axes_tree: Any, mesh: Mesh, shape_tree: Any = None, rules=None) -> Any:

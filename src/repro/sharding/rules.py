@@ -1,7 +1,28 @@
-"""Logical-axis -> mesh-axis sharding rules (MaxText-style GSPMD setup).
+"""Logical-axis -> mesh-axis sharding rules, organized as named rule sets.
 
-Model code annotates every parameter and key activation with *logical* axis
-names; this module maps them onto the physical mesh ``(pod, data, model)``.
+The primary workload of this repo is the edge-detection engine, so the
+primary rule set maps *image* logical axes onto the image mesh
+``(data, row, col)``:
+
+  * ``batch``   -> ``data``  — independent frames, embarrassingly parallel;
+  * ``height``  -> ``row``   — spatial row bands (halo exchange of the
+                   operator radius stitches them; see ``sharding.halo``);
+  * ``width``   -> ``col``   — spatial column bands, same halo story;
+  * ``channel`` -> replicated — 3 RGB channels never shard.
+
+``height`` carries a fallback onto the legacy LM ``model`` axis so image
+batches placed on a ``(pod, data, model)`` training mesh still spread
+their rows instead of replicating (``width`` gets no fallback — a mesh
+axis is never used twice, so on an LM mesh ``model`` is already spent on
+the rows).
+
+The LM architectures (the other ten configs) keep their MaxText-style rule
+set (``heads``/``experts``/``vocab`` -> ``model``, ZeRO-1 optimizer state
+-> ``data``, FSDP overrides in train mode). Both sets are merged into one
+default lookup — the names are disjoint, and ``batch`` means the same thing
+in both worlds — so mixed pytrees (an image batch next to LM state) resolve
+through a single table.
+
 Rules degrade gracefully: a mesh axis is dropped for a given array dim if it
 does not divide the dim (e.g. glm4's 2 KV heads on a 16-way model axis), so
 one rule table serves every architecture and mesh.
@@ -17,21 +38,35 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
+    "IMAGE_RULES",
+    "LM_RULES",
     "DEFAULT_RULES",
     "logical_to_spec",
     "sharding_for",
     "activation_shard",
     "mesh_context",
     "current_mesh",
+    "get_rules",
 ]
 
-# Logical axis -> mesh axes (tried in order; first that divides wins).
-# "fsdp" style weight sharding is intentionally NOT default — params are
-# TP-sharded over `model` and replicated over `data`; optimizer state is
-# ZeRO-1 sharded over `data` (see optim/).
-DEFAULT_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
-    ("batch", (("pod", "data"), ("data",))),  # composite first, fallback
-    ("seq", ()),
+# ---------------------------------------------------------------------------
+# Rule tables. Each entry: logical axis -> mesh-axis options (tried in
+# order; the first option whose axes all exist in the mesh, are unused, and
+# divide the dim wins).
+# ---------------------------------------------------------------------------
+
+# Image logical axes on the image mesh (data, row, col); `model` fallbacks
+# keep image batches usable on the LM production mesh.
+IMAGE_RULES: Tuple[Tuple[str, Tuple[Tuple[str, ...], ...]], ...] = (
+    ("height", (("row",), ("model",))),
+    ("width", (("col",),)),
+    ("channel", ()),
+)
+
+# MaxText-style LM rules. "fsdp" weight sharding is intentionally NOT
+# default — params are TP-sharded over `model` and replicated over `data`;
+# optimizer state is ZeRO-1 sharded over `data` (see optim/).
+LM_RULES: Tuple[Tuple[str, Tuple[Tuple[str, ...], ...]], ...] = (
     ("embed", ()),
     ("embed_td", (("model",),)),  # d-sharded embedding table (local gather)
     ("heads", (("model",),)),
@@ -41,22 +76,30 @@ DEFAULT_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     ("kv_rank", (("model",),)),
     ("mlp", (("model",),)),
     ("experts", (("model",),)),
-    ("expert_cap", (("pod", "data"), ("data",))),
     ("groups", (("pod", "data"), ("data",))),
     ("vocab", (("model",),)),
+    ("table_vocab", ()),
     ("kv_len", (("model",),)),
     ("attn_seq", (("model",),)),  # sequence-parallel attention fallback
     ("ssm_inner", (("model",),)),
     ("ssm_heads", (("model",),)),
-    ("ssm_state", ()),
-    ("conv_dim", ()),
     ("zero1", (("data",),)),  # ZeRO-1 optimizer-state sharding
     ("layers", ()),
     ("stack", ()),
-    ("image_rows", (("model",),)),
+)
+
+# Shared by both worlds: the leading batch dim of anything.
+_BATCH_RULE: Tuple[Tuple[str, Tuple[Tuple[str, ...], ...]], ...] = (
+    ("batch", (("pod", "data"), ("data",))),  # composite first, fallback
+)
+
+# One merged default table (disjoint names; `batch` defined once).
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[Tuple[str, ...], ...]], ...] = (
+    _BATCH_RULE + IMAGE_RULES + LM_RULES
 )
 
 _RULES = {name: opts for name, opts in DEFAULT_RULES}
+_IMAGE_RULES = {name: opts for name, opts in _BATCH_RULE + IMAGE_RULES}
 
 # Train mode: FSDP — weight d_model/vocab-table dims shard over `data`
 # (GSPMD then all-gathers params per scanned layer and reduce-scatters
@@ -68,11 +111,16 @@ TRAIN_OVERRIDES = {
     "table_vocab": (("data",),),
 }
 TRAIN_RULES = dict(_RULES, **TRAIN_OVERRIDES)
-_RULES.setdefault("table_vocab", ())
 
 
 def get_rules(mode: str = "serve"):
-    return TRAIN_RULES if mode == "train" else _RULES
+    """Rule table by mode: ``serve`` (default), ``train`` (FSDP overrides),
+    or ``image`` (image axes only — what ``sharding.halo`` places with)."""
+    if mode == "train":
+        return TRAIN_RULES
+    if mode == "image":
+        return _IMAGE_RULES
+    return _RULES
 
 
 def _axis_size(mesh: Mesh, axes) -> int:
@@ -91,7 +139,7 @@ def logical_to_spec(
 
     If ``shape`` is given, mesh axes that do not divide the corresponding dim
     are dropped (graceful degradation) and a mesh axis is never used twice.
-    ``rules`` may be a dict or a mode string ("train" | "serve").
+    ``rules`` may be a dict or a mode string ("train" | "serve" | "image").
     """
     if isinstance(rules, str):
         rules = get_rules(rules)

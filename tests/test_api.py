@@ -68,6 +68,37 @@ def test_layout_override(rng):
     assert res.layout == "NHW"
 
 
+def test_detect_layout_ambiguous_3dim():
+    """The two readings of a 3-dim shape: only a *trailing* 3 means RGB.
+
+    ``(3, H, W)`` is a batch of three grayscale frames (the leading 3 is
+    never channels); ``(H, W, 3)`` is one RGB frame; ``(3, H, 3)`` is
+    genuinely ambiguous and the trailing-dim rule picks RGB — the
+    ``layout=`` escape hatch covers the other reading (next test).
+    """
+    assert detect_layout((3, 21, 17)) == "NHW"
+    assert detect_layout((21, 17, 3)) == "HWC"
+    assert detect_layout((3, 21, 3)) == "HWC"
+    assert detect_layout((3, 3, 3)) == "HWC"
+
+
+def test_layout_override_matches_per_image_calls(rng):
+    """The escape hatch is not just shape plumbing: overriding an ambiguous
+    ``(3, H, 3)`` input to NHW must give exactly the per-frame grayscale
+    results."""
+    imgs = jnp.asarray(_img(rng, (3, 21, 3)))
+    res = edge_detect(imgs, layout="NHW", backend="xla")
+    assert res.magnitude.shape == (3, 21, 3) and res.layout == "NHW"
+    for i in range(3):
+        single = edge_detect(imgs[i], layout="HW", backend="xla")
+        np.testing.assert_array_equal(
+            np.asarray(res.magnitude[i]), np.asarray(single.magnitude)
+        )
+    # and the default (no override) reads the same array as one RGB frame
+    rgb = edge_detect(imgs, backend="xla")
+    assert rgb.layout == "HWC" and rgb.magnitude.shape == (3, 21)
+
+
 # ---------------------------------------------------------------------------
 # Config resolution and threading
 # ---------------------------------------------------------------------------

@@ -34,6 +34,21 @@ def test_axis_never_reused():
     assert spec == P("model")
 
 
+def test_image_axes_in_merged_table():
+    """The merged default table resolves image logical axes (the primary
+    workload) next to LM ones; the retired LM-only axes are gone."""
+    rules = get_rules("serve")
+    spec = logical_to_spec(("batch", "height", "width"), MESH, (64, 32, 32))
+    # no row/col on the LM mesh: batch -> (pod, data), height -> model fallback
+    assert spec == P(("pod", "data"), "model")
+    for dead in ("seq", "expert_cap", "ssm_state", "conv_dim", "image_rows"):
+        assert dead not in rules
+        with pytest.raises(KeyError):
+            logical_to_spec((dead,), MESH)
+    image_only = get_rules("image")
+    assert set(image_only) == {"batch", "height", "width", "channel"}
+
+
 def test_train_rules_fsdp():
     rules = get_rules("train")
     spec = logical_to_spec(("embed", "mlp"), MESH, (64, 32), rules=rules)

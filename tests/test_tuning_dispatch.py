@@ -64,7 +64,7 @@ def test_autotune_cache_roundtrip(tmp_path, rng):
 
     # The JSON on disk round-trips through a fresh cache object.
     raw = json.load(open(path))
-    assert any(k.endswith("/32x48") for k in raw if not k.startswith("__"))
+    assert any(k.endswith("/32x48/1/1x1x1") for k in raw if not k.startswith("__"))
     reloaded = tuning.TuningCache(path)
     key = tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 32, 48)
     assert reloaded.lookup(key) == (bh, bw)
@@ -106,8 +106,8 @@ def test_cache_ignores_corrupt_file(tmp_path):
 
 def test_cache_v1_migration(tmp_path):
     """v1 cache files (no padding/layout key segments) must migrate through
-    the chain to the reflect/gray slot of the v3 (operator-named) key space
-    and be rewritten as schema v3 on save."""
+    the chain to the reflect/gray single-device slot of the current key
+    space and be rewritten as the current schema on save."""
     path = tmp_path / "v1.json"
     v1_key = "pallas-interpret/float32/5x5/v2/64x512"
     path.write_text(json.dumps({
@@ -116,9 +116,10 @@ def test_cache_v1_migration(tmp_path):
         "garbage-key": {"block_h": 1, "block_w": 1, "us": 1.0},
     }))
     cache = tuning.TuningCache(str(path))
-    # v1 tunings land in the reflect/gray slot of the v3 key space...
+    # v1 tunings land in the reflect/gray single-device slot...
     key = tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 64, 512)
     assert key.padding == "reflect" and key.layout == "gray"
+    assert key.devices == 1 and key.mesh == "1x1x1"
     assert cache.lookup(key) == (16, 128)
     # ...and do NOT shadow other padding/layout slots.
     assert cache.lookup(
@@ -129,8 +130,8 @@ def test_cache_v1_migration(tmp_path):
     assert len(cache) == 1
     cache.save()
     raw = json.load(open(path))
-    assert raw["__meta__"]["version"] == tuning.TuningCache.VERSION == 3
-    assert "pallas-interpret/float32/sobel5/v2/reflect/gray/64x512" in raw
+    assert raw["__meta__"]["version"] == tuning.TuningCache.VERSION == 4
+    assert "pallas-interpret/float32/sobel5/v2/reflect/gray/64x512/1/1x1x1" in raw
 
 
 def test_cache_v1_files_without_meta(tmp_path):
@@ -148,7 +149,8 @@ def test_cache_v1_files_without_meta(tmp_path):
 def test_cache_v2_to_v3_migration(tmp_path, rng):
     """A v2 JSON cache on disk loads cleanly, old entries resolve for
     operator="sobel5" (the SxS size segment maps onto the Sobel operator of
-    that size), dispatch consults them, and re-save writes schema v3."""
+    that size), dispatch consults them, and re-save writes the current
+    schema."""
     path = tmp_path / "v2.json"
     path.write_text(json.dumps({
         "__meta__": {"version": 2},
@@ -179,12 +181,69 @@ def test_cache_v2_to_v3_migration(tmp_path, rng):
     img = _img(rng, (1, 32, 48))
     out = dispatch.sobel(img, backend="pallas-interpret", tuning_cache=cache)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(core_sobel(img)))
-    # Re-save writes v3.
+    # Re-save writes the current schema.
     cache.save()
     raw = json.load(open(path))
-    assert raw["__meta__"]["version"] == 3
-    assert "pallas-interpret/float32/sobel5/v2/reflect/gray/32x48" in raw
+    assert raw["__meta__"]["version"] == 4
+    assert "pallas-interpret/float32/sobel5/v2/reflect/gray/32x48/1/1x1x1" in raw
     assert not any("5x5" in k for k in raw if not k.startswith("__"))
+
+
+def test_cache_v3_to_v4_migration(tmp_path):
+    """v3 files (operator-named, no device/mesh segments) land in the
+    single-device ``1/1x1x1`` slot of the v4 key space — and do not shadow
+    sharded slots for the same workload."""
+    path = tmp_path / "v3.json"
+    path.write_text(json.dumps({
+        "__meta__": {"version": 3},
+        "pallas-interpret/float32/scharr3/separable/edge/rgb/720x1280":
+            {"block_h": 16, "block_w": 64, "us": 7.0},
+        "not/enough/segments": {"block_h": 1, "block_w": 1, "us": 1.0},
+    }))
+    cache = tuning.TuningCache(str(path))
+    base = dict(backend="pallas-interpret", dtype="float32", operator="scharr3",
+                variant="separable", h=720, w=1280, padding="edge", layout="rgb")
+    assert cache.lookup(tuning.TuneKey(**base)) == (16, 64)
+    assert cache.lookup(
+        tuning.TuneKey(**base, devices=8, mesh="2x2x2")
+    ) is None
+    assert len(cache) == 1
+    cache.save()
+    raw = json.load(open(path))
+    assert raw["__meta__"]["version"] == 4
+    assert ("pallas-interpret/float32/scharr3/separable/edge/rgb/720x1280/1/1x1x1"
+            in raw)
+
+
+def test_key_distinguishes_mesh(tmp_path):
+    """Same workload, different device count / mesh shape -> different
+    tuning slots (schema v4: under spatial sharding the kernel tiles the
+    halo-extended local block, so a 1x2x2 tuning must not collide with the
+    single-device entry), and dispatch passes the mesh through."""
+    cache = tuning.TuningCache(str(tmp_path / "c.json"))
+    base = dict(backend="pallas-interpret", dtype="float32", operator="sobel5",
+                variant="v2", h=128, w=256)
+    cache.record(tuning.TuneKey(**base), 8, 32, 1.0)
+    cache.record(tuning.TuneKey(**base, devices=4, mesh="1x2x2"), 16, 64, 2.0)
+    cache.record(tuning.TuneKey(**base, devices=4, mesh="4x1x1"), 32, 128, 3.0)
+    assert cache.lookup(tuning.TuneKey(**base)) == (8, 32)
+    assert cache.lookup(tuning.TuneKey(**base, devices=4, mesh="1x2x2")) == (16, 64)
+    assert cache.lookup(tuning.TuneKey(**base, devices=4, mesh="4x1x1")) == (32, 128)
+    assert cache.lookup(tuning.TuneKey(**base, devices=8, mesh="2x2x2")) is None
+    # choose_block_shape consults the mesh-specific slot...
+    got = dispatch.choose_block_shape(
+        128, 256, backend="pallas-interpret", cache=cache,
+        devices=4, mesh="1x2x2",
+    )
+    assert got == (16, 64, "tuned")
+    # ...and autotune records into it.
+    bh, bw = tuning.autotune(24, 32, shapes=[(8, 16)], iters=1, cache=cache,
+                             save=False, devices=4, mesh="1x2x2")
+    assert (bh, bw) == (8, 16)
+    assert cache.lookup(
+        tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 24, 32,
+                       devices=4, mesh="1x2x2")
+    ) == (8, 16)
 
 
 def test_key_distinguishes_padding_and_layout(tmp_path):
