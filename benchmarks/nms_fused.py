@@ -1,0 +1,115 @@
+"""Fused NMS vs two-pass: the cost of thin edge maps.
+
+Series per case, all producing the NMS-thinned magnitude of an RGB u8
+frame (the detector-serving workload behind ``serve --edges``):
+
+  * ``fused``    — ONE launch on the host's fast backend: gray -> Sobel ->
+    NMS inside a single program (``EdgeConfig(nms=True)``; the Pallas
+    megakernel on TPU, one fully-fused XLA program on CPU). The thin map is
+    the only whole-image write.
+  * ``two-pass`` — the pre-PR-5 composition on the same backend compute,
+    but split at the pipeline seam: stage 1 emits magnitude + per-direction
+    components (D+1 whole-image HBM writes), stage 2 is a separately-jitted
+    XLA NMS over them. This is exactly what fusion removes: the
+    materialized intermediate and its re-read. The NMS ring at the image
+    border is approximated by edge-padding the magnitude (a baseline, not a
+    parity path — the fused stage extends the true boundary rule instead).
+  * ``pallas``   — the fused Pallas kernel row on CPU hosts (interpreter:
+    correctness-level trajectory signal, same caveat as table2's ``fused``
+    rows; on TPU hosts this IS the ``fused`` row and is not duplicated).
+
+Hysteresis is excluded on purpose: it is an identical post-gather XLA stage
+in every composition, so it would only add noise to the fused-vs-two-pass
+ratio this suite exists to track.
+
+Timing uses the shared ``repro.kernels.tuning.measure_us`` harness.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import EdgeConfig, edge_detect
+from repro.core import nms
+from repro.core.filters import get_operator
+from repro.kernels.edge import default_block_shape
+from repro.kernels.tuning import measure_us
+
+CASES = [1024, 2048]
+SMOKE_CASES = [128]
+_OPERATOR = "sobel5"
+
+
+def _fast_backend() -> str:
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pallas_backend() -> str:
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
+
+
+def _nms_stage(mag: jnp.ndarray, comps: jnp.ndarray) -> jnp.ndarray:
+    """Stage 2 of the two-pass baseline: XLA NMS over materialized
+    magnitude + components (edge-padded 1-px ring)."""
+    ctuple = tuple(
+        jax.lax.index_in_dim(comps, d, axis=-3, keepdims=False)
+        for d in range(comps.shape[-3])
+    )
+    mag_ext = jnp.pad(
+        mag, [(0, 0)] * (mag.ndim - 2) + [(1, 1), (1, 1)], mode="edge"
+    )
+    return nms.nms_thin(mag_ext, nms.nms_sector(ctuple))
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    fast = _fast_backend()
+    pallas = _pallas_backend()
+    for n in SMOKE_CASES if smoke else CASES:
+        img = jnp.asarray(rng.integers(0, 256, (n, n, 3)).astype(np.uint8))
+        bh, bw = default_block_shape(n, n, get_operator(_OPERATOR).size,
+                                     channels=3)
+        base = EdgeConfig(operator=_OPERATOR, normalize=False,
+                          block_h=bh, block_w=bw)
+
+        fused = jax.jit(lambda x: edge_detect(
+            x, base.replace(nms=True, backend=fast)).magnitude)
+        stage1 = jax.jit(lambda x: edge_detect(
+            x, base.replace(with_components=True, backend=fast)))
+        stage2 = jax.jit(_nms_stage)
+
+        def two_pass(x):
+            r = stage1(x)  # comps + mag materialize between the two jits
+            return stage2(r.magnitude, r.components)
+
+        series = [
+            ("fused", fused, fast),
+            ("two-pass", two_pass, fast),
+        ]
+        if pallas != fast:
+            pallas_fused = jax.jit(lambda x: edge_detect(
+                x, base.replace(nms=True, backend=pallas)).magnitude)
+            series.append(("pallas", pallas_fused, pallas))
+
+        us = {path: measure_us(fn, img, iters=3) for path, fn, _ in series}
+        for path, _fn, backend in series:
+            rows.append(
+                {
+                    "name": f"nms/{_OPERATOR}/{n}x{n}/{path}",
+                    "us_per_call": us[path],
+                    "backend": backend,
+                    "variant": "v2",
+                    "derived": (
+                        f"MPS={n * n / us[path]:.1f};"
+                        f"speedup_vs_two_pass={us['two-pass'] / us[path]:.2f};"
+                        f"path={path}"
+                    ),
+                    "config": {"operator": _OPERATOR, "n": n, "nms": True,
+                               "input": "rgb-u8"},
+                }
+            )
+    return rows

@@ -130,6 +130,7 @@ def main() -> None:
     from benchmarks import (
         fig6_blocksweep,
         fig7_ssim,
+        nms_fused,
         roofline_lm,
         roofline_sobel,
         shard_scaling,
@@ -140,6 +141,7 @@ def main() -> None:
     suites = [
         ("table1", table1_variants),
         ("table2", table2_throughput),
+        ("nms", nms_fused),
         ("fig6", fig6_blocksweep),
         ("fig7", fig7_ssim),
         ("shard", shard_scaling),

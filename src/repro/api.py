@@ -9,6 +9,8 @@ One call::
     result.orientation    # present when with_orientation=True
     result.components     # (..., D, H, W) when with_components=True
     result.peak           # (...,) per-image max when with_max/normalize
+    result.thin           # NMS-thinned magnitude when nms=True
+    result.edges          # (..., H, W) bool edge map when hysteresis=True
 
 :class:`EdgeConfig` is one frozen dataclass — operator (any name in the
 ``repro.core.filters`` registry), directions, variant, padding, backend,
@@ -93,10 +95,22 @@ class EdgeConfig:
                   over the image mesh ``(data, row, col)`` with halo
                   exchange between spatial neighbors; None = single device.
                   Sharded outputs are bit-exact with single-device ones.
+      nms:        direction-aware non-maximum suppression: ``magnitude``
+                  (and ``thin``) become the thinned edge map — suppressed
+                  pixels are exactly 0. Fused into the Pallas megakernel
+                  (the halo grows by one ring); bit-exact with the XLA
+                  reference (``repro.core.nms``) on every backend/mesh.
+      hysteresis: double-threshold + connected-edge linking on the thin map
+                  (implies ``nms``); sets ``EdgeResult.edges`` (bool).
+                  Linking is global, so it always runs post-gather in XLA.
+      low, high:  hysteresis thresholds as *fractions of the per-image
+                  magnitude peak* (scale-free across operators/inputs);
+                  None = 0.10 / 0.20 (``repro.core.nms.DEFAULT_LOW/HIGH``).
       with_components:  also return per-direction gradients ``(..., D, H, W)``.
       with_orientation: also return gradient orientation ``atan2(G_y, G_x)``.
       with_max:         also return the per-image peak of the unnormalized
-                        magnitude (free on the fused Pallas path).
+                        (un-thinned) magnitude (free on the fused Pallas
+                        path).
     """
 
     operator: str = "sobel5"
@@ -109,6 +123,10 @@ class EdgeConfig:
     block_h: Optional[int] = None
     block_w: Optional[int] = None
     shard: Optional[ShardConfig] = None
+    nms: bool = False
+    hysteresis: bool = False
+    low: Optional[float] = None
+    high: Optional[float] = None
     with_components: bool = False
     with_orientation: bool = False
     with_max: bool = False
@@ -119,14 +137,45 @@ class EdgeConfig:
     def resolved(self) -> "EdgeConfig":
         """Fill ``auto``/0 fields from the operator spec and validate.
 
-        Idempotent; raises for unknown operators, unsupported directions, or
-        unknown variants. The resolved config is what gets threaded through
-        dispatch -> kernels (and recorded in :class:`EdgeResult`).
+        Idempotent; raises for unknown operators, unsupported directions,
+        unknown variants, or malformed hysteresis thresholds. Requesting
+        ``hysteresis`` auto-enables ``nms`` (linking operates on the thin
+        map) and pins concrete ``low``/``high`` fractions. The resolved
+        config is what gets threaded through dispatch -> kernels (and
+        recorded in :class:`EdgeResult`).
         """
+        from repro.core import nms as _nms
+
+        low, high = self.low, self.high
+        if not self.hysteresis and (low is not None or high is not None):
+            if (low, high) == (_nms.DEFAULT_LOW, _nms.DEFAULT_HIGH):
+                # A resolved hysteresis config pinned the defaults; toggling
+                # hysteresis off (e.g. edge_detect(x, cfg, hysteresis=False)
+                # to reuse a detector config for magnitude) clears them.
+                low = high = None
+            else:
+                raise ValueError(
+                    "low/high are hysteresis thresholds; set hysteresis=True "
+                    "(nms alone never thresholds) or leave them unset"
+                )
+        if self.hysteresis:
+            low = _nms.DEFAULT_LOW if low is None else low
+            high = _nms.DEFAULT_HIGH if high is None else high
+        for name, v in (("low", low), ("high", high)):
+            if v is not None and not 0.0 <= v <= 1.0:
+                raise ValueError(
+                    f"{name}={v} must be a fraction of the magnitude peak "
+                    f"in [0, 1]"
+                )
+        if low is not None and high is not None and low > high:
+            raise ValueError(f"low={low} must not exceed high={high}")
         spec = get_operator(self.operator, self.params)
         return self.replace(
             directions=spec.resolve_directions(self.directions),
             variant=spec.resolve_variant(self.variant),
+            nms=self.nms or self.hysteresis,
+            low=low,
+            high=high,
         )
 
     @property
@@ -144,27 +193,35 @@ class EdgeResult:
     """Structured output of :func:`edge_detect`.
 
     ``magnitude`` is always present; the optional fields mirror the
-    ``with_*`` output selection of :class:`EdgeConfig`. ``layout`` is the
-    detected (or overridden) input layout; ``config`` is the fully resolved
-    :class:`EdgeConfig` that produced the result.
+    ``with_*``/``nms``/``hysteresis`` output selection of
+    :class:`EdgeConfig`. When ``config.nms`` is set, ``magnitude`` *is* the
+    NMS-thinned map (the fused kernel emits it in one pass) and ``thin``
+    aliases it; ``peak`` stays the per-image max of the un-thinned
+    magnitude either way. ``layout`` is the detected (or overridden) input
+    layout; ``config`` is the fully resolved :class:`EdgeConfig` that
+    produced the result.
     """
 
     magnitude: jnp.ndarray                     # (..., H, W) f32
     components: Optional[jnp.ndarray] = None   # (..., D, H, W) f32
     orientation: Optional[jnp.ndarray] = None  # (..., H, W) f32, radians
     peak: Optional[jnp.ndarray] = None         # (...,) f32 per-image max
+    thin: Optional[jnp.ndarray] = None         # (..., H, W) f32, nms=True
+    edges: Optional[jnp.ndarray] = None        # (..., H, W) bool, hysteresis
     layout: str = "HW"
     config: Optional[EdgeConfig] = None
 
     def tree_flatten(self):
-        leaves = (self.magnitude, self.components, self.orientation, self.peak)
+        leaves = (self.magnitude, self.components, self.orientation,
+                  self.peak, self.thin, self.edges)
         return leaves, (self.layout, self.config)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         layout, config = aux
-        magnitude, components, orientation, peak = leaves
-        return cls(magnitude, components, orientation, peak, layout, config)
+        magnitude, components, orientation, peak, thin, edges = leaves
+        return cls(magnitude, components, orientation, peak, thin, edges,
+                   layout, config)
 
 
 def edge_detect(

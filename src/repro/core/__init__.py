@@ -20,6 +20,13 @@ from repro.core.filters import (  # noqa: F401
     ky,
     ky_factors,
 )
+from repro.core.nms import (  # noqa: F401
+    hysteresis,
+    nms_sector,
+    nms_thin,
+    resolve_thresholds,
+    thin_map,
+)
 from repro.core.pipeline import edge_detect, make_sharded_edge_fn, rgb_to_gray  # noqa: F401
 from repro.core.sobel import VARIANTS, magnitude, sobel, sobel_components  # noqa: F401
 from repro.core.ssim import ssim  # noqa: F401

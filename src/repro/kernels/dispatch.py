@@ -16,9 +16,12 @@ layout/H/W), then a conservative default.
 :func:`edge` is the engine under the ``repro.api`` facade: it takes the
 *resolved* :class:`~repro.api.EdgeConfig` verbatim, routes to a backend,
 and assembles the structured :class:`~repro.api.EdgeResult` (magnitude,
-optional per-direction components / orientation / per-image peak). All
-backends are mathematically identical; for integer-weight taps the outputs
-are bit-exact across backends (see ``repro.core.sobel.magnitude`` and
+optional per-direction components / orientation / per-image peak, and —
+with ``nms``/``hysteresis`` — the thin map and binary edge map; NMS runs
+fused in the kernel, hysteresis always post-gather in XLA since linking is
+global). All backends are mathematically identical; for integer-weight
+taps the outputs are bit-exact across backends (see
+``repro.core.sobel.magnitude``, ``repro.core.nms`` and
 ``repro.kernels.tiling.luma``).
 
 When the config carries a :class:`~repro.sharding.halo.ShardConfig` (or an
@@ -127,22 +130,37 @@ def _kernel_dtype_name(x: jnp.ndarray) -> str:
 # The engine
 # ---------------------------------------------------------------------------
 
-def _backend_compute(config, backend, *, rgb, need_comps, block_h, block_w):
-    """The backend compute: ``(B, h, w[, 3]) -> (magnitude, stacked
-    components | None)``.
+def _backend_compute(
+    config, backend, *, rgb, need_comps, need_raw, block_h, block_w
+):
+    """The backend compute: ``(B, h, w[, 3]) -> (primary, stacked
+    components | None, raw magnitude | None)``.
+
+    ``primary`` is the magnitude — or the NMS thin magnitude when
+    ``config.nms``. ``need_raw`` additionally returns the un-thinned
+    magnitude in NMS mode (the peak source; ``None`` whenever ``primary``
+    already is the magnitude).
 
     Both engine branches run this same closure — single-device directly,
     sharded per-shard under ``shard_map`` — which is what makes
     sharded-vs-single bit-exactness hold per backend by construction. (The
-    single-device magnitude+peak case bypasses it for the fused ``with_max``
-    kernel; the sharded path computes its peak from the cropped magnitude
-    instead, an exact max either way.)
+    single-device magnitude+peak cases bypass it for the fused ``with_max``
+    kernel; the sharded path computes its peak from the cropped raw
+    magnitude instead, an exact max either way.)
     """
     if backend == "xla":
+        from repro.core import nms
         from repro.core.pipeline import rgb_to_gray
 
         def run(xl):
             gray = rgb_to_gray(xl) if rgb else xl.astype(jnp.float32)
+            if config.nms:
+                thin, ctuple, raw = nms.thin_map(
+                    gray, config.spec, variant=config.variant,
+                    directions=config.directions, padding=config.padding,
+                )
+                stacked = jnp.stack(ctuple, axis=-3) if need_comps else None
+                return thin, stacked, (raw if need_raw else None)
             ctuple = core_components(
                 gray,
                 operator=config.operator,
@@ -152,7 +170,7 @@ def _backend_compute(config, backend, *, rgb, need_comps, block_h, block_w):
                 padding=config.padding,
             )
             mag = rss_magnitude(ctuple)
-            return mag, (jnp.stack(ctuple, axis=-3) if need_comps else None)
+            return mag, (jnp.stack(ctuple, axis=-3) if need_comps else None), None
 
         return run
 
@@ -164,14 +182,24 @@ def _backend_compute(config, backend, *, rgb, need_comps, block_h, block_w):
     )
 
     def run(xl):
+        if config.nms:
+            outs = ekern.edge_pallas(
+                xl, out_nms=True, out_components=need_comps,
+                out_mag=need_raw, **kw,
+            )
+            outs = list(outs) if isinstance(outs, tuple) else [outs]
+            thin = outs.pop(0)
+            stacked = outs.pop(0) if need_comps else None
+            raw = outs.pop(0) if need_raw else None
+            return thin, stacked, raw
         if need_comps:
             stacked = ekern.edge_pallas(xl, out_components=True, **kw)
             ctuple = tuple(
                 jax.lax.index_in_dim(stacked, d, axis=1, keepdims=False)
                 for d in range(config.directions)
             )
-            return rss_magnitude(ctuple), stacked
-        return ekern.edge_pallas(xl, **kw), None
+            return rss_magnitude(ctuple), stacked, None
+        return ekern.edge_pallas(xl, **kw), None, None
 
     return run
 
@@ -185,7 +213,11 @@ def _edge_sharded(
     from repro.sharding import halo
 
     spec = config.spec
-    r = spec.radius
+    # NMS reads a 1-px magnitude neighborhood on top of the operator
+    # stencil, so the device-level halo grows to radius + 1, exactly like
+    # the kernel's in-VMEM window (hysteresis, being a global fixpoint,
+    # runs post-gather in :func:`edge` instead).
+    r = spec.radius + (1 if config.nms else 0)
     d, rr, cc = mesh.shape["data"], mesh.shape["row"], mesh.shape["col"]
     sh, _hp = halo.shard_geometry(h, rr, r)
     sw, _wp = halo.shard_geometry(w, cc, r)
@@ -205,7 +237,7 @@ def _edge_sharded(
         )
     run = _backend_compute(
         config, backend, rgb=rgb, need_comps=need_comps,
-        block_h=bh, block_w=bw,
+        need_raw=config.nms and need_peak, block_h=bh, block_w=bw,
     )
     mag, comps, peak = halo.sharded_edge(
         x, mesh, radius=r, padding=config.padding, compute=run,
@@ -254,7 +286,8 @@ def edge(
         x = x.reshape((-1, h, w))
 
     need_comps = config.with_components or config.with_orientation
-    need_peak = config.normalize or config.with_max
+    # Hysteresis thresholds are fractions of the per-image magnitude peak.
+    need_peak = config.normalize or config.with_max or config.hysteresis
 
     if mesh is None and config.shard is not None:
         from repro.sharding import halo
@@ -279,26 +312,51 @@ def edge(
                 block_h=config.block_h, block_w=config.block_w,
                 cache=tuning_cache,
             )
-        if backend != "xla" and need_peak and not need_comps:
-            # Fused Pallas fast path: the kernel emits per-block maxima, so
-            # normalization needs no second whole-image reduction read.
-            mag, bmax = ekern.edge_pallas(
-                x, with_max=True,
+        if backend != "xla" and need_peak:
+            # Fused Pallas fast path: the kernel emits per-block maxima of
+            # the (un-thinned) magnitude alongside whatever else the call
+            # needs — thin map, components — so normalization and the
+            # hysteresis thresholds need no second whole-image reduction
+            # read. Max-of-block-maxes == max over the image (exact).
+            kw = dict(
                 operator=config.operator, variant=config.variant,
                 params=config.params, directions=config.directions,
                 padding=config.padding, block_h=bh, block_w=bw, rgb=rgb,
                 interpret=(backend == "pallas-interpret"),
             )
-            # Max-of-block-maxes == max over the image (exact).
-            peak = jnp.max(bmax, axis=(-2, -1), keepdims=True)
+            if config.nms:
+                outs = list(ekern.edge_pallas(
+                    x, out_nms=True, out_components=need_comps,
+                    with_max=True, **kw,
+                ))
+                mag = outs.pop(0)  # thin
+                comps = outs.pop(0) if need_comps else None
+            elif need_comps:
+                stacked, bmax0 = ekern.edge_pallas(
+                    x, out_components=True, with_max=True, **kw
+                )
+                outs = [bmax0]
+                comps = stacked
+                ctuple = tuple(
+                    jax.lax.index_in_dim(stacked, d, axis=1, keepdims=False)
+                    for d in range(config.directions)
+                )
+                mag = rss_magnitude(ctuple)
+            else:
+                mag, bmax0 = ekern.edge_pallas(x, with_max=True, **kw)
+                outs = [bmax0]
+            peak = jnp.max(outs[-1], axis=(-2, -1), keepdims=True)
         else:
             run = _backend_compute(
                 config, backend, rgb=rgb, need_comps=need_comps,
-                block_h=bh, block_w=bw,
+                need_raw=config.nms and need_peak, block_h=bh, block_w=bw,
             )
-            mag, comps = run(x)
+            mag, comps, raw = run(x)
             if need_peak:
-                peak = jnp.max(mag, axis=(-2, -1), keepdims=True)
+                peak = jnp.max(
+                    raw if raw is not None else mag, axis=(-2, -1),
+                    keepdims=True,
+                )
 
     orientation = None
     if config.with_orientation:
@@ -307,6 +365,18 @@ def edge(
         g_x = jax.lax.index_in_dim(comps, 0, axis=1, keepdims=False)
         g_y = jax.lax.index_in_dim(comps, 1, axis=1, keepdims=False)
         orientation = jnp.arctan2(g_y, g_x)
+
+    edges = None
+    if config.hysteresis:
+        from repro.core import nms
+
+        # Post-gather by design: edge linking is a global fixpoint (a chain
+        # may cross every tile/shard), so it runs on the assembled thin map
+        # — identical inputs on every backend and mesh, hence identical
+        # edges. Thresholds scale with the raw-magnitude peak and apply to
+        # the *unnormalized* thin map (scale-invariant either way).
+        low, high = nms.resolve_thresholds(peak, config.low, config.high)
+        edges = nms.hysteresis(mag, low, high)
 
     if config.normalize:
         # The rescale expression matches the legacy pipeline op-for-op.
@@ -321,6 +391,8 @@ def edge(
         if config.with_components else None,
         orientation=unbatch(orientation) if config.with_orientation else None,
         peak=peak.reshape(batch_shape) if config.with_max else None,
+        thin=unbatch(mag) if config.nms else None,
+        edges=unbatch(edges) if config.hysteresis else None,
         layout=layout,
         config=config,
     )

@@ -25,6 +25,20 @@ gray or RGB frame in (BT.601 luma per-tile in VMEM), in-kernel boundary
 rule, multi-directional magnitude out — optionally per-direction gradient
 components (``out_components``) and a per-block max (``with_max``) for
 one-pass normalization.
+
+``out_nms`` appends the direction-aware non-maximum suppression stage
+(``repro.core.nms``) to the same pass: the halo window grows from
+``radius`` to ``radius + 1`` (NMS needs a 1-px magnitude neighborhood, so
+the existing clamped-window machinery extends rather than a new pipeline
+stage), the component ladder runs on the ``(block + 2)``-sized inner tile,
+and the kernel emits the *thin* magnitude — plus, on demand, the center
+components (``out_components``), the un-thinned center magnitude
+(``out_mag``, the peak source for the sharded path) and the per-block max
+of the un-thinned magnitude (``with_max``, so normalization and the
+hysteresis thresholds need no second whole-image read). The sector/
+suppress math is imported from ``repro.core.nms`` verbatim — comparisons
+and selects only — so the thin map is bit-identical to the XLA reference
+(``core.nms.thin_map``) by construction.
 """
 from __future__ import annotations
 
@@ -36,6 +50,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.filters import OperatorSpec, SobelParams, get_operator
+from repro.core.nms import nms_sector, nms_thin
 from repro.core.sobel import magnitude, spec_components
 from repro.kernels import tuning
 from repro.kernels.tiling import (
@@ -111,11 +126,45 @@ def kernel_dtype(x: jnp.ndarray) -> jnp.ndarray:
 def _kernel(
     x_ref, *o_refs,
     spec, variant, directions, bh, bw, h, w, padding, rgb, out_components,
-    with_max,
+    out_nms, out_mag, with_max,
 ):
     k = pl.program_id(1)
     j = pl.program_id(2)
     x = luma(x_ref[0]) if rgb else x_ref[0].astype(jnp.float32)
+
+    def block_max(mag):
+        """Masked per-block max of the (un-thinned) center magnitude."""
+        masked = jnp.where(
+            valid_mask(k, j, h, w, bh, bw), mag, jnp.float32(0.0)
+        )
+        return jnp.max(masked)
+
+    if out_nms:
+        # NMS needs a 1-px magnitude neighborhood: grow the halo to r + 1,
+        # run the ladder on the (bh + 2, bw + 2) inner tile, suppress down
+        # to the (bh, bw) output block (core.nms math, shared with XLA).
+        y = extend_tile(
+            x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=spec.radius + 1,
+            padding=padding,
+        )
+        comps_ext = spec_components(y, spec, bh + 2, bw + 2, variant, directions)
+        mag_ext = magnitude(comps_ext)
+        comps = tuple(
+            jax.lax.slice(g, (1, 1), (1 + bh, 1 + bw)) for g in comps_ext
+        )
+        o = 0
+        o_refs[o][0] = nms_thin(mag_ext, nms_sector(comps))
+        if out_components:
+            o += 1
+            o_refs[o][0] = jnp.stack(comps, axis=0)  # (directions, bh, bw)
+        mag = jax.lax.slice(mag_ext, (1, 1), (1 + bh, 1 + bw))
+        if out_mag:
+            o += 1
+            o_refs[o][0] = mag
+        if with_max:
+            o_refs[o + 1][0, k, j] = block_max(mag)
+        return
+
     y = extend_tile(
         x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=spec.radius,
         padding=padding,
@@ -123,14 +172,16 @@ def _kernel(
     comps = spec_components(y, spec, bh, bw, variant, directions)
     if out_components:
         o_refs[0][0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
+        if with_max:
+            # Per-block maxima ride along with the components, so callers
+            # needing components AND the peak pay no second whole-image
+            # reduction read (dispatch's fused normalization fast path).
+            o_refs[1][0, k, j] = block_max(magnitude(comps))
         return
     mag = magnitude(comps)
     o_refs[0][0] = mag
     if with_max:
-        masked = jnp.where(
-            valid_mask(k, j, h, w, bh, bw), mag, jnp.float32(0.0)
-        )
-        o_refs[1][0, k, j] = jnp.max(masked)
+        o_refs[1][0, k, j] = block_max(mag)
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +200,8 @@ def _kernel(
         "block_w",
         "rgb",
         "out_components",
+        "out_nms",
+        "out_mag",
         "with_max",
         "interpret",
     ),
@@ -165,20 +218,36 @@ def edge_pallas(
     block_w: "int | None" = None,
     rgb: bool = False,
     out_components: bool = False,
+    out_nms: bool = False,
+    out_mag: bool = False,
     with_max: bool = False,
     interpret: bool = False,
 ):
     """Fused megakernel on the raw batch — any registered operator, any (H, W).
 
     ``x``: ``(N, H, W)`` grayscale (u8 or f32), or ``(N, H, W, 3)`` RGB when
-    ``rgb`` (BT.601 luma applied per-tile in VMEM). Returns ``(N, H, W)``
-    float32 magnitude; with ``with_max`` also a ``(N, gh, gw)`` per-block max
-    (gh/gw = grid dims) for one-pass normalization; with ``out_components``
-    instead returns ``(N, directions, H, W)`` gradients.
+    ``rgb`` (BT.601 luma applied per-tile in VMEM).
+
+    Outputs, in order (a bare array when only one):
+
+      * primary ``(N, H, W)`` float32 — the magnitude, or the NMS thin
+        magnitude when ``out_nms``, or (without ``out_nms``) the
+        ``(N, directions, H, W)`` component stack when ``out_components``.
+      * ``out_components`` with ``out_nms``: the ``(N, directions, H, W)``
+        center components alongside the thin map.
+      * ``out_mag`` (``out_nms`` only): the un-thinned ``(N, H, W)``
+        magnitude — the peak source for the sharded engine, which cannot
+        use the SMEM block maxima (its local valid mask differs).
+      * ``with_max``: a ``(N, gh, gw)`` per-block max (gh/gw = grid dims) of
+        the un-thinned magnitude, for one-pass normalization — available in
+        every mode, including alongside ``out_components``.
 
     ``variant``/``directions`` must be valid for the operator (resolve via
     the spec first; see ``repro.api`` / ``repro.kernels.dispatch``).
     """
+    if out_mag and not out_nms:
+        raise ValueError("out_mag only applies with out_nms (the magnitude "
+                         "is already the primary output otherwise)")
     spec: OperatorSpec = get_operator(operator, params)
     variant = spec.resolve_variant(variant)
     directions = spec.resolve_directions(directions)
@@ -195,30 +264,44 @@ def edge_pallas(
         align = ALIGN_INTERPRET
     else:
         align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
+    # NMS compares the magnitude against a 1-px neighborhood, so its input
+    # window carries one extra ring on top of the operator halo.
+    r_in = spec.radius + (1 if out_nms else 0)
     in_spec = window_spec(
-        h, w, bh, bw, spec.radius, align=align, channels=3 if rgb else None
+        h, w, bh, bw, r_in, align=align, channels=3 if rgb else None
     )
 
-    if out_components:
-        out_specs = [
-            pl.BlockSpec((1, directions, bh, bw), lambda i, k, j: (i, 0, k, j))
-        ]
-        out_shape = [jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)]
+    plane = pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))
+    plane_shape = jax.ShapeDtypeStruct((n, h, w), jnp.float32)
+    comps_spec = pl.BlockSpec(
+        (1, directions, bh, bw), lambda i, k, j: (i, 0, k, j)
+    )
+    comps_shape = jax.ShapeDtypeStruct((n, directions, h, w), jnp.float32)
+
+    if out_nms:
+        out_specs, out_shape = [plane], [plane_shape]
+        if out_components:
+            out_specs.append(comps_spec)
+            out_shape.append(comps_shape)
+        if out_mag:
+            out_specs.append(plane)
+            out_shape.append(plane_shape)
+    elif out_components:
+        out_specs, out_shape = [comps_spec], [comps_shape]
     else:
-        out_specs = [pl.BlockSpec((1, bh, bw), lambda i, k, j: (i, k, j))]
-        out_shape = [jax.ShapeDtypeStruct((n, h, w), jnp.float32)]
-        if with_max:
-            # One whole-(gh, gw) SMEM block per image; each grid step stores
-            # its scalar block max — cheap, and legal under Mosaic's block
-            # alignment rules (dims equal to the array dims).
-            out_specs.append(
-                pl.BlockSpec(
-                    (1, gh, gw),
-                    lambda i, k, j: (i, 0, 0),
-                    memory_space=pltpu.SMEM,
-                )
+        out_specs, out_shape = [plane], [plane_shape]
+    if with_max:
+        # One whole-(gh, gw) SMEM block per image; each grid step stores
+        # its scalar block max — cheap, and legal under Mosaic's block
+        # alignment rules (dims equal to the array dims).
+        out_specs.append(
+            pl.BlockSpec(
+                (1, gh, gw),
+                lambda i, k, j: (i, 0, 0),
+                memory_space=pltpu.SMEM,
             )
-            out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
+        )
+        out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
 
     kernel = functools.partial(
         _kernel,
@@ -232,6 +315,8 @@ def edge_pallas(
         padding=padding,
         rgb=rgb,
         out_components=out_components,
+        out_nms=out_nms,
+        out_mag=out_mag,
         with_max=with_max,
     )
     out = pl.pallas_call(
@@ -242,6 +327,6 @@ def edge_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(x)
-    if out_components or not with_max:
+    if len(out) == 1:
         return out[0]
     return tuple(out)

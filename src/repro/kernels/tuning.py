@@ -35,6 +35,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -141,16 +142,56 @@ class TuningCache:
         self._entries: Dict[str, Dict] = {}
         self.load()
 
+    @staticmethod
+    def _valid_entry(value) -> bool:
+        """A usable cache entry: a dict with positive-int-able block dims."""
+        if not isinstance(value, dict):
+            return False
+        try:
+            return int(value["block_h"]) > 0 and int(value["block_w"]) > 0
+        except (KeyError, TypeError, ValueError):
+            return False
+
     def load(self) -> "TuningCache":
+        """Load (and migrate) the cache file; never raises.
+
+        A tuning cache is an optional accelerant, so a bad file must not
+        take ``edge_detect`` down: unreadable/truncated JSON, a non-dict
+        payload, an unknown *future* schema version (a newer deployment's
+        file on a shared path), and individually corrupted entries are all
+        skipped with a warning rather than raised.
+        """
         self._entries = {}
         try:
             with open(self.path) as f:
                 raw = json.load(f)
-        except (FileNotFoundError, json.JSONDecodeError):
+        except FileNotFoundError:
+            return self
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            warnings.warn(
+                f"ignoring unreadable tuning cache {self.path}: {e}",
+                RuntimeWarning, stacklevel=2,
+            )
             return self
         if not isinstance(raw, dict):
+            warnings.warn(
+                f"ignoring tuning cache {self.path}: expected a JSON object, "
+                f"got {type(raw).__name__}",
+                RuntimeWarning, stacklevel=2,
+            )
             return self
-        version = raw.get("__meta__", {}).get("version", 1)
+        meta = raw.get("__meta__")
+        version = meta.get("version", 1) if isinstance(meta, dict) else 1
+        if not isinstance(version, int) or version > self.VERSION:
+            # A future schema's key layout is unknowable here — dropping the
+            # entries (tunings re-measure on demand) beats misreading them.
+            warnings.warn(
+                f"ignoring tuning cache {self.path}: schema version "
+                f"{version!r} is newer than supported ({self.VERSION}); "
+                f"run with a matching build or delete the file",
+                RuntimeWarning, stacklevel=2,
+            )
+            return self
         entries = {k: v for k, v in raw.items() if not k.startswith("__")}
         if version < self.VERSION:
             migrate = {1: _migrate_v1_key, 2: _migrate_v2_key}.get(
@@ -162,7 +203,15 @@ class TuningCache:
                 if mk is not None:
                     migrated[mk] = v
             entries = migrated
-        self._entries = entries
+        bad = [k for k, v in entries.items() if not self._valid_entry(v)]
+        if bad:
+            warnings.warn(
+                f"skipping {len(bad)} corrupted tuning cache entr"
+                f"{'y' if len(bad) == 1 else 'ies'} in {self.path} "
+                f"(e.g. {bad[0]!r})",
+                RuntimeWarning, stacklevel=2,
+            )
+        self._entries = {k: v for k, v in entries.items() if k not in set(bad)}
         return self
 
     def save(self) -> None:
@@ -178,6 +227,13 @@ class TuningCache:
     def lookup(self, key: TuneKey) -> Optional[Tuple[int, int]]:
         e = self._entries.get(key.to_str())
         if not e:
+            return None
+        if not self._valid_entry(e):  # belt-and-braces: entries set post-load
+            warnings.warn(
+                f"skipping corrupted tuning cache entry {key.to_str()!r} "
+                f"in {self.path}",
+                RuntimeWarning, stacklevel=2,
+            )
             return None
         return int(e["block_h"]), int(e["block_w"])
 

@@ -7,7 +7,10 @@ Image architectures (``sobel-hd``): frame-serving loop over synthetic camera
 traffic through the ``repro.api`` facade — the arch's ``EdgeConfig``
 (operator / directions / variant / backend / block overrides) is threaded
 verbatim into :func:`repro.api.edge_detect`; reports megapixels/second and
-per-batch latency percentiles (the paper's Table 2 metric).
+per-batch latency percentiles (the paper's Table 2 metric). ``--edges``
+switches the traffic to Canny-grade binary edge maps — fused NMS in the
+kernel pass plus post-gather hysteresis linking — and reports the edge
+density of the final batch alongside the latency numbers.
 
 Multi-device serving: ``--shard DxRxC`` (or the arch's ``sobel_shard``)
 spreads every request over the image mesh — D-way batch parallelism plus an
@@ -45,7 +48,12 @@ def serve_image(cfg, args) -> None:
     from repro.runtime.elastic import make_image_mesh, plan_image_mesh, reshard
     from repro.sharding.partition import layout_logical_axes
 
-    edge_cfg = cfg.edge_config(with_max=True).resolved()
+    overrides = dict(with_max=True)
+    if args.edges:
+        # Detector traffic: fused NMS in the kernel pass, hysteresis linking
+        # post-gather — requests return binary edge maps, not magnitude.
+        overrides.update(nms=True, hysteresis=True)
+    edge_cfg = cfg.edge_config(**overrides).resolved()
     shard_spec = args.shard if args.shard is not None else cfg.sobel_shard
     shard = ShardConfig.parse(shard_spec) if shard_spec else None
     devices = list(jax.devices())
@@ -59,6 +67,7 @@ def serve_image(cfg, args) -> None:
         f"variant={edge_cfg.variant} directions={edge_cfg.directions} "
         f"backend={edge_cfg.backend} {cfg.image_h}x{cfg.image_w} "
         f"devices={len(devices)} shard={shard_spec or 'none'}"
+        f"{' mode=edges (NMS+hysteresis)' if args.edges else ''}"
     )
 
     def build_step(devs):
@@ -120,6 +129,11 @@ def serve_image(cfg, args) -> None:
         return
     mps = px_total / 1e6 / (sum(lat_ms) / 1e3)
     tag = " (served through reshard)" if resharded else ""
+    if args.edges:
+        # Observability for detector traffic: the edge-pixel density of the
+        # last batch (a blank-camera or threshold misconfiguration shows up
+        # here as 0.0 / ~1.0).
+        tag += f"; edge density={float(jnp.mean(out.edges)):.3f}"
     print(
         f"{args.requests} requests x {args.slots} frames, {wall:.2f}s -> "
         f"{mps:.1f} MPS; latency p50={_percentile(lat_ms, 50):.1f}ms "
@@ -157,6 +171,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--edges", action="store_true",
+                    help="image archs: serve binary edge maps (fused NMS + "
+                         "hysteresis) instead of magnitude")
     ap.add_argument("--shard", default=None,
                     help="image mesh 'DxRxC' (data x row x col) or 'auto'; "
                          "default: the arch's sobel_shard")
@@ -169,6 +186,12 @@ def main() -> None:
     if cfg.family == "image":
         serve_image(cfg, args)
         return
+    for flag, on in (("--edges", args.edges), ("--shard", args.shard)):
+        if on:
+            raise SystemExit(
+                f"{flag} applies to image (detector) serving; arch "
+                f"{cfg.name!r} is family {cfg.family!r}"
+            )
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit(f"{cfg.family} serving needs frontend inputs; use examples/")
     serve_lm(cfg, args)

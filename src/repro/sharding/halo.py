@@ -231,16 +231,20 @@ def sharded_edge(
     Args:
       x: ``(B, H, W)`` grayscale or ``(B, H, W, 3)`` RGB batch (u8/f32).
       mesh: image mesh with axes ``("data", "row", "col")``.
-      radius: operator halo radius (``OperatorSpec.radius``).
+      radius: device-level halo radius — ``OperatorSpec.radius``, plus one
+        when the per-shard compute appends the NMS stage (its magnitude
+        neighborhood needs the extra ring; see ``kernels.dispatch``).
       padding: boundary rule — also governs halo fixup at global edges.
       compute: per-shard single-device engine: takes the halo-extended local
-        block ``(B_loc, h_ext, w_ext[, 3])``, returns ``(magnitude,
-        components-or-None)`` with components shaped ``(B_loc, D, h_ext,
-        w_ext)``.
+        block ``(B_loc, h_ext, w_ext[, 3])``, returns ``(primary,
+        components-or-None, raw-magnitude-or-None)`` with components shaped
+        ``(B_loc, D, h_ext, w_ext)``. ``primary`` is the magnitude — or the
+        NMS thin map, in which case the third element carries the un-thinned
+        magnitude as the peak source (``None`` = reduce the primary).
       need_comps / need_peak: which extras to assemble.
 
     Returns:
-      ``(magnitude (B, H, W), components (B, D, H, W) | None,
+      ``(primary (B, H, W), components (B, D, H, W) | None,
       peak (B,) | None)`` — the peak is the exact per-image max of the
       unnormalized magnitude over valid pixels.
     """
@@ -279,7 +283,7 @@ def sharded_edge(
         ext = halo_exchange(
             ext, radius, padding, axis=2, axis_name="col", parts=cc, n_global=w
         )
-        mag, comps = compute(ext)
+        mag, comps, raw = compute(ext)
         nb = mag.shape[0]
         mag = jax.lax.slice(mag, (0, t, l), (nb, t + sh, l + sw))
         out = [mag]
@@ -290,11 +294,14 @@ def sharded_edge(
             )
             out.append(comps)
         if need_peak:
+            src = mag
+            if raw is not None:  # NMS mode: peak of the un-thinned magnitude
+                src = jax.lax.slice(raw, (0, t, l), (nb, t + sh, l + sw))
             gr = jax.lax.axis_index("row") * sh + jnp.arange(sh) < h
             gc = jax.lax.axis_index("col") * sw + jnp.arange(sw) < w
             valid = gr[:, None] & gc[None, :]
             # magnitude >= 0, so masking invalid cells to 0 is exact
-            peak = jnp.max(jnp.where(valid, mag, jnp.float32(0.0)), axis=(1, 2))
+            peak = jnp.max(jnp.where(valid, src, jnp.float32(0.0)), axis=(1, 2))
             out.append(jax.lax.pmax(peak, ("row", "col")))
         return tuple(out)
 

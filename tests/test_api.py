@@ -305,3 +305,81 @@ def test_shim_keeps_gray_contract_on_trailing_3(rng):
         warnings.simplefilter("ignore", DeprecationWarning)
         out = legacy_sobel(img, backend="xla")
     assert out.shape == (2, 21, 3)
+
+
+# ---------------------------------------------------------------------------
+# Fused with_max fast path (per-block maxima alongside components)
+# ---------------------------------------------------------------------------
+
+def test_pallas_peak_rides_with_components(rng, monkeypatch):
+    """normalize + with_orientation on a Pallas backend must use ONE fused
+    kernel launch that emits block maxima alongside the components — no
+    second whole-image reduction read of the magnitude (the historical
+    `need_peak and not need_comps` gate)."""
+    from repro.kernels import edge as ekern
+
+    calls = []
+    real = ekern.edge_pallas
+
+    def spy(x, **kw):
+        calls.append(kw)
+        return real(x, **kw)
+
+    monkeypatch.setattr(ekern, "edge_pallas", spy)
+    img = jnp.asarray(_img(rng, (2, 21, 17)))
+    res = edge_detect(img, EdgeConfig(normalize=True, with_orientation=True,
+                                      with_max=True), **_PALLAS)
+    assert len(calls) == 1, calls
+    assert calls[0].get("out_components") and calls[0].get("with_max")
+    ref = edge_detect(img, EdgeConfig(normalize=True, with_orientation=True,
+                                      with_max=True), backend="xla")
+    for f in ("magnitude", "orientation", "peak"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, f)), np.asarray(getattr(ref, f)))
+
+
+def test_nms_single_fused_launch(rng, monkeypatch):
+    """nms + normalize on Pallas is one kernel launch (thin + block maxima);
+    hysteresis adds only the post-gather XLA linking, no extra launch."""
+    from repro.kernels import edge as ekern
+
+    calls = []
+    real = ekern.edge_pallas
+
+    def spy(x, **kw):
+        calls.append(kw)
+        return real(x, **kw)
+
+    monkeypatch.setattr(ekern, "edge_pallas", spy)
+    img = jnp.asarray(_img(rng, (1, 19, 23)))
+    edge_detect(img, EdgeConfig(hysteresis=True), **_PALLAS)
+    assert len(calls) == 1, calls
+    assert calls[0].get("out_nms") and calls[0].get("with_max")
+
+
+# ---------------------------------------------------------------------------
+# EdgeConfig nms/hysteresis resolution + EdgeResult new fields
+# ---------------------------------------------------------------------------
+
+def test_hysteresis_implies_nms_and_pins_thresholds():
+    cfg = EdgeConfig(hysteresis=True).resolved()
+    assert cfg.nms and cfg.low is not None and cfg.high is not None
+    # resolved() is idempotent on the new fields too
+    assert cfg.resolved() == cfg
+    # nms alone leaves thresholds unset (they are hysteresis-only)
+    assert EdgeConfig(nms=True).resolved().low is None
+
+
+def test_edge_result_pytree_roundtrip_with_edges(rng):
+    img = jnp.asarray(_img(rng, (2, 17, 13)))
+    res = edge_detect(img, EdgeConfig(hysteresis=True, with_max=True),
+                      backend="xla")
+    leaves, treedef = jax.tree_util.tree_flatten(res)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert np.array_equal(np.asarray(back.edges), np.asarray(res.edges))
+    assert np.array_equal(np.asarray(back.thin), np.asarray(res.thin))
+    assert back.config == res.config
+    assert res.edges.dtype == jnp.bool_
+    # thin aliases magnitude in nms mode
+    np.testing.assert_array_equal(np.asarray(res.thin),
+                                  np.asarray(res.magnitude))

@@ -1,0 +1,86 @@
+"""Blank/constant-frame audit: every entry point must stay NaN/Inf-free.
+
+An all-zero or constant frame has zero gradient everywhere, so the
+per-image peak is 0 — the worst case for the normalization rescale
+(``255 / peak``) and for the peak-fraction hysteresis thresholds. The
+facade guards the former with ``maximum(peak, 1e-8)`` and the latter with
+strict ``>`` thresholding; these regression tests pin that the guards hold
+on every backend for the facade, the legacy shims
+(``core.pipeline.edge_detect``, ``ops.edge_pipeline``,
+``dispatch.edge_detect``) and the serve traffic path's config.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import EdgeConfig, edge_detect
+
+_FRAMES = {
+    "zero-f32": np.zeros((2, 24, 20), np.float32),
+    "zero-u8": np.zeros((2, 24, 20), np.uint8),
+    "const-f32": np.full((2, 24, 20), 7.5, np.float32),
+    "const-u8": np.full((2, 24, 20), 255, np.uint8),
+    "zero-rgb-u8": np.zeros((2, 24, 20, 3), np.uint8),
+    "const-rgb-u8": np.full((2, 24, 20, 3), 128, np.uint8),
+}
+_BACKENDS = ("xla", "pallas-interpret")
+
+
+def _finite(a):
+    return np.isfinite(np.asarray(a)).all()
+
+
+@pytest.mark.parametrize("name", sorted(_FRAMES))
+@pytest.mark.parametrize("backend", _BACKENDS)
+def test_facade_blank_frames(name, backend):
+    x = _FRAMES[name]
+    res = edge_detect(x, EdgeConfig(
+        backend=backend, block_h=8, block_w=16, nms=True, hysteresis=True,
+        with_max=True, with_components=True, with_orientation=True))
+    for f in ("magnitude", "components", "orientation", "thin"):
+        assert _finite(getattr(res, f)), (name, backend, f)
+        assert np.all(np.asarray(getattr(res, f)) == 0.0), (name, backend, f)
+    assert np.all(np.asarray(res.peak) == 0.0), (name, backend)
+    # strict-> thresholding: a flat frame has no edges, not all-edges
+    assert not np.asarray(res.edges).any(), (name, backend)
+
+
+@pytest.mark.parametrize("name", sorted(_FRAMES))
+@pytest.mark.parametrize("backend", _BACKENDS)
+def test_legacy_shims_blank_frames(name, backend):
+    from repro.core.pipeline import edge_detect as legacy_pipeline
+    from repro.kernels.dispatch import edge_detect as legacy_dispatch
+    from repro.kernels.ops import edge_pipeline as legacy_ops
+
+    x = _FRAMES[name]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = legacy_pipeline(x, backend=backend, block_h=8, block_w=16)
+        assert _finite(out) and np.all(np.asarray(out) == 0.0), name
+        out = legacy_dispatch(x, backend=backend, block_h=8, block_w=16)
+        assert _finite(out) and np.all(np.asarray(out) == 0.0), name
+        if backend != "xla":  # ops.edge_pipeline is Pallas-only by contract
+            out = legacy_ops(x, block_h=8, block_w=16, interpret=True)
+            assert _finite(out) and np.all(np.asarray(out) == 0.0), name
+
+
+@pytest.mark.parametrize("edges", [False, True])
+def test_serve_traffic_path_blank_frames(edges):
+    """The exact EdgeConfig the serve loop builds (normalize + with_max,
+    optionally the --edges NMS/hysteresis mode) on an all-black camera."""
+    import jax
+
+    from repro.configs import get_config
+
+    cfg = get_config("sobel-hd", smoke=True)
+    overrides = dict(with_max=True)
+    if edges:
+        overrides.update(nms=True, hysteresis=True)
+    edge_cfg = cfg.edge_config(**overrides).resolved()
+    frames = np.zeros((2, cfg.image_h, cfg.image_w, 3), np.uint8)
+    res = jax.jit(lambda f: edge_detect(f, edge_cfg))(frames)
+    assert _finite(res.magnitude) and np.all(np.asarray(res.magnitude) == 0.0)
+    assert np.all(np.asarray(res.peak) == 0.0)
+    if edges:
+        assert not np.asarray(res.edges).any()

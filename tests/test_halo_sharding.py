@@ -40,7 +40,8 @@ rng = np.random.default_rng(0)
 x = rng.integers(0, 256, (3, 67, 45)).astype(np.float32)   # ragged H/W
 
 def assert_same(out, ref, what):
-    for f in ("magnitude", "components", "orientation", "peak"):
+    for f in ("magnitude", "components", "orientation", "peak", "thin",
+              "edges"):
         a, b = getattr(out, f), getattr(ref, f)
         assert (a is None) == (b is None), (what, f)
         if a is not None:
@@ -79,7 +80,24 @@ out = jax.jit(lambda f: edge_detect(f, cfg, mesh=mesh))(jnp.asarray(xrgb))
 assert_same(out, ref, "rgb-jit-mesh")
 print("RGB_JIT_OK")
 
-# 4) Spatial shard too small for the halo -> actionable error.
+# 4) Edge maps: fused NMS + post-gather hysteresis — the device-level halo
+#    grows to radius+1 and linking runs on the gathered thin map, so sharded
+#    thin/edges must be bit-identical to single-device for both backends.
+nmsfull = dict(nms=True, hysteresis=True, with_max=True,
+               with_components=True, with_orientation=True)
+for backend in ("xla", "pallas-interpret"):
+    for padding in ("reflect", "edge", "zero"):
+        ref = edge_detect(x, EdgeConfig(backend=backend, padding=padding,
+                                        **nmsfull))
+        for shard in (ShardConfig(data=8),
+                      ShardConfig(data=2, rows=2, cols=2),
+                      ShardConfig(data=1, rows=4, cols=2)):
+            out = edge_detect(x, EdgeConfig(backend=backend, padding=padding,
+                                            shard=shard, **nmsfull))
+            assert_same(out, ref, ("nms", backend, padding, shard))
+print("NMS_SHARDED_OK")
+
+# 5) Spatial shard too small for the halo -> actionable error.
 tiny = rng.integers(0, 256, (1, 8, 8)).astype(np.float32)
 try:
     edge_detect(tiny, EdgeConfig(operator="sobel7", backend="xla",
@@ -97,7 +115,7 @@ print("VALIDATION_OK")
 def test_sharded_bit_exact_8_devices():
     out = _run(BIT_EXACT)
     for marker in ("OPERATORS_OK", "PALLAS_SHARDED_OK", "RGB_JIT_OK",
-                   "VALIDATION_OK"):
+                   "NMS_SHARDED_OK", "VALIDATION_OK"):
         assert marker in out, out
 
 

@@ -1,0 +1,348 @@
+"""NMS + hysteresis output stage: pure-NumPy golden cases, reference
+properties, and the Pallas-vs-XLA bit-exactness battery.
+
+No optional deps (runs without hypothesis); the generative property
+versions live in ``test_nms_properties.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.api import EdgeConfig, edge_detect
+from repro.core import nms
+from repro.core.filters import get_operator, list_operators
+
+_PALLAS = dict(backend="pallas-interpret", block_h=8, block_w=16)
+
+
+# ---------------------------------------------------------------------------
+# Pure-NumPy mirror of the reference semantics (independent implementation:
+# python loops + explicit neighbor arithmetic, no shared code with
+# repro.core.nms)
+# ---------------------------------------------------------------------------
+
+_NEIGHBORS = {0: (0, 1), 1: (1, 0), 2: (1, 1), 3: (1, -1)}
+
+
+def np_sector(comps):
+    comps = [np.asarray(c, np.float32) for c in comps]
+    if len(comps) == 4:
+        mags = np.stack([np.abs(c) for c in comps])
+        return np.argmax(mags, axis=0).astype(np.int32)  # first max wins
+    gx, gy = comps
+    ax, ay = np.abs(gx), np.abs(gy)
+    t = np.float32(np.tan(np.pi / 8))
+    out = np.full(gx.shape, -1, np.int32)
+    out[ay <= t * ax] = 0
+    out[(out < 0) & (ax <= t * ay)] = 1
+    diag = out < 0
+    same = (gx >= 0) == (gy >= 0)
+    out[diag & same] = 2
+    out[diag & ~same] = 3
+    return out
+
+
+def np_nms(mag_ext, sector):
+    """Loop-based suppression on the (H+2, W+2) extended magnitude."""
+    h, w = sector.shape
+    thin = np.zeros((h, w), np.float32)
+    for r in range(h):
+        for c in range(w):
+            dr, dc = _NEIGHBORS[int(sector[r, c])]
+            v = mag_ext[1 + r, 1 + c]
+            if v >= mag_ext[1 + r - dr, 1 + c - dc] and \
+               v >= mag_ext[1 + r + dr, 1 + c + dc]:
+                thin[r, c] = v
+    return thin
+
+
+def np_hysteresis(thin, low, high):
+    """BFS edge linking — the textbook algorithm, loops and a worklist."""
+    strong = thin > high
+    weak = thin > low
+    edges = strong.copy()
+    stack = list(zip(*np.nonzero(strong)))
+    h, w = thin.shape
+    while stack:
+        r, c = stack.pop()
+        for dr in (-1, 0, 1):
+            for dc in (-1, 0, 1):
+                rr, cc = r + dr, c + dc
+                if 0 <= rr < h and 0 <= cc < w and weak[rr, cc] \
+                        and not edges[rr, cc]:
+                    edges[rr, cc] = True
+                    stack.append((rr, cc))
+    return edges
+
+
+def _reference(img, operator="sobel5", directions=0, padding="reflect"):
+    """repro.core.nms reference on one grayscale image -> (thin, mag)."""
+    spec = get_operator(operator)
+    thin, _comps, mag = nms.thin_map(
+        np.asarray(img, np.float32)[None],
+        spec,
+        variant=spec.resolve_variant("auto"),
+        directions=spec.resolve_directions(directions),
+        padding=padding,
+    )
+    return np.asarray(thin[0]), np.asarray(mag[0])
+
+
+# ---------------------------------------------------------------------------
+# Unit-level equivalence: jax sector/suppress/link vs the NumPy mirror
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("directions", [2, 4])
+def test_sector_and_thin_match_numpy_mirror(directions, rng):
+    for _ in range(3):
+        comps = tuple(
+            rng.normal(size=(9, 13)).astype(np.float32)
+            for _ in range(directions)
+        )
+        mag_ext = np.abs(rng.normal(size=(11, 15))).astype(np.float32)
+        sector = np.asarray(nms.nms_sector(comps))
+        np.testing.assert_array_equal(sector, np_sector(comps))
+        thin = np.asarray(nms.nms_thin(mag_ext, sector))
+        np.testing.assert_array_equal(thin, np_nms(mag_ext, sector))
+
+
+def test_sector_ties_and_zeros(rng):
+    """Degenerate inputs stay in range and deterministic: all-zero
+    components snap to sector 0 (first-max / horizontal-quantized)."""
+    z = np.zeros((4, 5), np.float32)
+    assert np.all(np.asarray(nms.nms_sector((z, z, z, z))) == 0)
+    assert np.all(np.asarray(nms.nms_sector((z, z))) == 0)
+    comps = tuple(rng.normal(size=(6, 7)).astype(np.float32) for _ in range(4))
+    s = np.asarray(nms.nms_sector(comps))
+    assert s.min() >= 0 and s.max() <= 3
+
+
+def test_hysteresis_matches_numpy_bfs(rng):
+    """The while_loop dilate-to-fixpoint == the textbook BFS linking."""
+    for _ in range(3):
+        thin = np.abs(rng.normal(size=(16, 18))).astype(np.float32)
+        thin[thin < 0.4] = 0.0  # sparse-ish, multiple components
+        low, high = np.float32(0.5), np.float32(1.2)
+        edges = np.asarray(nms.hysteresis(thin, low, high))
+        np.testing.assert_array_equal(edges, np_hysteresis(thin, low, high))
+
+
+# ---------------------------------------------------------------------------
+# Golden cases (hand-checked thin maps)
+# ---------------------------------------------------------------------------
+
+def test_golden_vertical_step():
+    """A 0|100 vertical step at column 6, sobel5 2-dir: |G_x| per row is
+    16*(100, 300, 300, 100) across columns 4..7, so NMS keeps exactly the
+    two tied 4800-columns flanking the step and zeroes everything else."""
+    x = np.zeros((8, 12), np.float32)
+    x[:, 6:] = 100.0
+    thin, mag = _reference(x, directions=2)
+    expect = np.zeros((8, 12), np.float32)
+    expect[:, 5:7] = 4800.0
+    np.testing.assert_array_equal(thin, expect)
+    assert mag[0, 4] == 1600.0 and mag[0, 7] == 1600.0  # suppressed flanks
+
+
+def test_golden_horizontal_step():
+    """Transpose symmetry: the same step rotated 90 degrees thins to the
+    transposed map (sector 1 instead of 0)."""
+    x = np.zeros((12, 8), np.float32)
+    x[6:, :] = 100.0
+    thin, _ = _reference(x, directions=2)
+    expect = np.zeros((12, 8), np.float32)
+    expect[5:7, :] = 4800.0
+    np.testing.assert_array_equal(thin, expect)
+
+
+def test_golden_ramp_plateau_kept():
+    """A constant-gradient ramp has no local maxima to suppress: every
+    interior pixel ties with its sector neighbors and is kept (thin == mag).
+    Reflect padding flattens the ramp at the left/right border columns, so
+    only those may differ."""
+    x = np.tile(np.arange(12, dtype=np.float32) * 10.0, (8, 1))
+    thin, mag = _reference(x, directions=2)
+    np.testing.assert_array_equal(thin[:, 3:-3], mag[:, 3:-3])
+    assert np.all(mag[:, 3:-3] > 0)
+
+
+@pytest.mark.parametrize("directions", [2, 4])
+def test_golden_diagonal_band(directions):
+    """0|100 edge along the main diagonal: the kept set is a thin band
+    hugging the diagonal — every kept interior pixel lies within 1 px of it,
+    and every interior diagonal pixel's immediate neighborhood has a keeper
+    (the edge survives thinning)."""
+    n = 12
+    x = np.where(np.add.outer(-np.arange(n), np.arange(n)) > 0, 100.0, 0.0
+                 ).astype(np.float32)
+    thin, mag = _reference(x, directions=directions)
+    kept = thin > 0
+    interior = slice(3, n - 3)
+    rr, cc = np.nonzero(kept[interior, interior])
+    assert rr.size > 0
+    assert np.all(np.abs(rr - cc) <= 1)
+    for i in range(4, n - 4):
+        assert kept[i - 1:i + 2, i - 1:i + 2].any(), i
+
+
+# ---------------------------------------------------------------------------
+# Reference properties (fixed seeds; generative twins in
+# test_nms_properties.py)
+# ---------------------------------------------------------------------------
+
+def _rand_img(rng, shape=(2, 23, 19)):
+    return rng.integers(0, 256, shape).astype(np.float32)
+
+
+def test_thin_is_mag_or_zero(rng):
+    x = _rand_img(rng)
+    thin = np.asarray(edge_detect(x, EdgeConfig(
+        backend="xla", nms=True, normalize=False)).magnitude)
+    mag = np.asarray(edge_detect(x, EdgeConfig(
+        backend="xla", normalize=False)).magnitude)
+    assert np.all((thin == 0) | (thin == mag))
+    assert (thin > 0).any() and (thin == 0).any()
+
+
+def test_nms_idempotent(rng):
+    """Re-suppressing the thin map (same sectors, zero ring) is a no-op."""
+    x = _rand_img(rng)
+    spec = get_operator("sobel5")
+    thin, comps, _mag = nms.thin_map(x, spec, variant="v2", directions=4)
+    sector = nms.nms_sector(comps)
+    thin_np = np.asarray(thin)
+    thin_ext = np.pad(thin_np, [(0, 0), (1, 1), (1, 1)])
+    again = np.asarray(nms.nms_thin(thin_ext, sector))
+    np.testing.assert_array_equal(again, thin_np)
+
+
+def test_edges_subset_of_weak_and_superset_of_strong(rng):
+    x = _rand_img(rng)
+    res = edge_detect(x, EdgeConfig(backend="xla", hysteresis=True,
+                                    with_max=True, normalize=False))
+    cfg = res.config
+    peak = np.asarray(res.peak)[:, None, None]
+    thin = np.asarray(res.magnitude)
+    edges = np.asarray(res.edges)
+    weak = thin > cfg.low * peak
+    strong = thin > cfg.high * peak
+    assert np.all(~edges | weak)      # edges subset weak subset (mag >= low)
+    assert np.all(~strong | edges)    # strong subset edges
+    mag = np.asarray(edge_detect(x, EdgeConfig(
+        backend="xla", normalize=False)).magnitude)
+    assert np.all(mag[edges] >= cfg.low * np.broadcast_to(peak, mag.shape)[edges])
+
+
+def test_hysteresis_monotone_in_low(rng):
+    """Lowering `low` (fixed `high`) can only grow the edge set."""
+    x = _rand_img(rng)
+    lows = (0.02, 0.05, 0.10, 0.18)
+    maps = [
+        np.asarray(edge_detect(x, EdgeConfig(
+            backend="xla", hysteresis=True, low=lo, high=0.2)).edges)
+        for lo in lows
+    ]
+    for wider, narrower in zip(maps, maps[1:]):
+        assert np.all(narrower <= wider)  # subset as low rises
+
+
+def test_threshold_validation():
+    with pytest.raises(ValueError, match="must not exceed"):
+        EdgeConfig(hysteresis=True, low=0.5, high=0.2).resolved()
+    with pytest.raises(ValueError, match="fraction"):
+        EdgeConfig(hysteresis=True, low=-0.1).resolved()
+    with pytest.raises(ValueError, match="fraction"):
+        EdgeConfig(hysteresis=True, high=1.5).resolved()
+    cfg = EdgeConfig(hysteresis=True).resolved()
+    assert cfg.nms and cfg.low == nms.DEFAULT_LOW and cfg.high == nms.DEFAULT_HIGH
+
+
+# ---------------------------------------------------------------------------
+# Pallas fused NMS == XLA reference, bit-exact (the PR's core contract)
+# ---------------------------------------------------------------------------
+
+def _assert_same(a, b, what):
+    for f in ("magnitude", "components", "orientation", "peak", "thin",
+              "edges"):
+        va, vb = getattr(a, f), getattr(b, f)
+        assert (va is None) == (vb is None), (what, f)
+        if va is not None:
+            assert np.array_equal(np.asarray(va), np.asarray(vb)), (what, f)
+
+
+@pytest.mark.parametrize("operator", list_operators())
+@pytest.mark.parametrize("padding", ["reflect", "edge", "zero"])
+def test_fused_nms_bit_exact_operators_paddings(operator, padding, rng):
+    x = rng.integers(0, 256, (2, 21, 17)).astype(np.float32)  # ragged
+    cfg = dict(operator=operator, padding=padding, nms=True, hysteresis=True,
+               with_max=True, normalize=False)
+    ref = edge_detect(x, EdgeConfig(backend="xla", **cfg))
+    out = edge_detect(x, EdgeConfig(**_PALLAS, **cfg))
+    _assert_same(out, ref, (operator, padding))
+
+
+@pytest.mark.parametrize(
+    "shape,dtype",
+    [((2, 33, 41), np.float32), ((1, 16, 16), np.uint8),
+     ((2, 26, 31, 3), np.uint8), ((1, 19, 23, 3), np.float32)],
+)
+def test_fused_nms_bit_exact_layouts_ragged(shape, dtype, rng):
+    """Gray/RGB x u8/f32 x ragged shapes, with every output selected."""
+    x = rng.integers(0, 256, shape).astype(dtype)
+    cfg = dict(nms=True, hysteresis=True, with_max=True,
+               with_components=True, with_orientation=True)
+    ref = edge_detect(x, EdgeConfig(backend="xla", **cfg))
+    out = edge_detect(x, EdgeConfig(**_PALLAS, **cfg))
+    _assert_same(out, ref, (shape, dtype))
+
+
+def test_nms_peak_is_unthinned_peak(rng):
+    """`peak` (and hence normalization + thresholds) always refers to the
+    raw magnitude — identical with and without NMS, on both backends."""
+    x = rng.integers(0, 256, (2, 20, 27)).astype(np.float32)
+    raw = edge_detect(x, EdgeConfig(backend="xla", with_max=True))
+    for backend_kw in (dict(backend="xla"), _PALLAS):
+        thinned = edge_detect(x, EdgeConfig(nms=True, with_max=True,
+                                            **backend_kw))
+        np.testing.assert_array_equal(np.asarray(thinned.peak),
+                                      np.asarray(raw.peak))
+
+
+def test_nms_under_jit(rng):
+    import jax
+
+    x = rng.integers(0, 256, (3, 17, 21)).astype(np.float32)
+    cfg = EdgeConfig(backend="xla", hysteresis=True, with_max=True)
+    eager = edge_detect(x, cfg)
+    jitted = jax.jit(lambda f: edge_detect(f, cfg))(x)
+    _assert_same(jitted, eager, "jit")
+
+
+def test_thresholds_require_hysteresis():
+    """Custom low/high without hysteresis would be silently dead config —
+    reject; but a resolved detector config toggled back to magnitude-only
+    (its pinned *defaults* riding along) must resolve cleanly."""
+    with pytest.raises(ValueError, match="hysteresis"):
+        EdgeConfig(nms=True, low=0.3, high=0.6).resolved()
+    with pytest.raises(ValueError, match="hysteresis"):
+        EdgeConfig(low=0.3).resolved()
+    base = EdgeConfig(hysteresis=True).resolved()
+    off = base.replace(hysteresis=False).resolved()
+    assert off.low is None and off.high is None and not off.hysteresis
+    # the facade's documented overrides path works end to end
+    x = np.zeros((8, 9), np.float32)
+    res = edge_detect(x, base, hysteresis=False)
+    assert res.edges is None and res.thin is not None
+
+
+@pytest.mark.parametrize("argv_extra", [["--edges"], ["--shard", "2x2x2"]])
+def test_serve_rejects_image_flags_on_lm_arch(monkeypatch, argv_extra):
+    """--edges/--shard are image-family serving knobs; an LM arch must
+    error, not silently serve unsharded token traffic."""
+    import sys
+
+    from repro.launch.serve import main
+
+    monkeypatch.setattr(sys, "argv",
+                        ["serve", "--arch", "olmo-1b", "--smoke"] + argv_extra)
+    with pytest.raises(SystemExit, match="image"):
+        main()

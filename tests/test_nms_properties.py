@@ -1,0 +1,82 @@
+"""Generative properties of the NMS/hysteresis reference (hypothesis)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional [test] extra; module skips without it
+from hypothesis import given, settings, strategies as st
+
+from repro.api import EdgeConfig, edge_detect
+from repro.core import nms
+from repro.core.filters import get_operator
+
+_SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def imgs(min_side=8, max_side=24):
+    return st.integers(0, 2**32 - 1).flatmap(
+        lambda seed: st.tuples(
+            st.integers(min_side, max_side), st.integers(min_side, max_side)
+        ).map(
+            lambda hw: np.random.default_rng(seed)
+            .integers(0, 256, (1,) + hw)
+            .astype(np.float32)
+        )
+    )
+
+
+@settings(**_SETTINGS)
+@given(imgs(), st.integers(0, 1))
+def test_nms_idempotent(x, four):
+    """Re-suppressing the thin map with the same sector map is a no-op:
+    a kept pixel dominates its neighbors' magnitudes, hence also their
+    (smaller-or-equal) thin values; suppressed pixels are 0 and stay 0."""
+    spec = get_operator("sobel5")
+    thin, comps, _ = nms.thin_map(
+        x, spec, variant="v2", directions=4 if four else 2)
+    sector = nms.nms_sector(comps)
+    thin_np = np.asarray(thin)
+    again = np.asarray(
+        nms.nms_thin(np.pad(thin_np, [(0, 0), (1, 1), (1, 1)]), sector)
+    )
+    np.testing.assert_array_equal(again, thin_np)
+
+
+@settings(**_SETTINGS)
+@given(imgs(), st.floats(0.0, 0.5), st.floats(0.0, 0.5))
+def test_edges_subset_of_low_threshold(x, lo, extra):
+    """edges ⊆ (mag >= low): every hysteresis edge pixel clears the low
+    threshold of the *raw* magnitude (thin values are raw values)."""
+    hi = min(1.0, lo + extra)
+    res = edge_detect(x, EdgeConfig(backend="xla", hysteresis=True,
+                                    low=lo, high=hi, with_max=True,
+                                    normalize=False))
+    mag = np.asarray(edge_detect(x, EdgeConfig(
+        backend="xla", normalize=False)).magnitude)
+    edges = np.asarray(res.edges)
+    low_abs = lo * np.asarray(res.peak)[:, None, None]
+    assert np.all(mag[edges] >= np.broadcast_to(low_abs, mag.shape)[edges])
+
+
+@settings(**_SETTINGS)
+@given(imgs(), st.floats(0.0, 0.3), st.floats(0.0, 0.3), st.floats(0.3, 0.6))
+def test_hysteresis_monotone_in_low(x, lo_a, lo_b, hi):
+    """With `high` fixed, the edge set is antitone in `low`."""
+    lo1, lo2 = sorted((lo_a, lo_b))
+    wide = np.asarray(edge_detect(x, EdgeConfig(
+        backend="xla", hysteresis=True, low=lo1, high=hi)).edges)
+    narrow = np.asarray(edge_detect(x, EdgeConfig(
+        backend="xla", hysteresis=True, low=lo2, high=hi)).edges)
+    assert np.all(narrow <= wide)
+
+
+@settings(**_SETTINGS)
+@given(imgs())
+def test_edges_between_strong_and_weak(x):
+    res = edge_detect(x, EdgeConfig(backend="xla", hysteresis=True,
+                                    with_max=True, normalize=False))
+    thin = np.asarray(res.magnitude)
+    peak = np.asarray(res.peak)[:, None, None]
+    edges = np.asarray(res.edges)
+    strong = thin > res.config.high * peak
+    weak = thin > res.config.low * peak
+    assert np.all(strong <= edges) and np.all(edges <= weak)

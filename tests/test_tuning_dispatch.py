@@ -100,7 +100,82 @@ def test_choose_block_shape_priority(tmp_path):
 def test_cache_ignores_corrupt_file(tmp_path):
     path = tmp_path / "bad.json"
     path.write_text("{not json")
-    cache = tuning.TuningCache(str(path))
+    with pytest.warns(RuntimeWarning, match="unreadable tuning cache"):
+        cache = tuning.TuningCache(str(path))
+    assert len(cache) == 0
+
+
+def _v4_payload(**entries):
+    payload = {"__meta__": {"version": tuning.TuningCache.VERSION}}
+    payload.update(entries)
+    return payload
+
+
+_V4_KEY = "pallas-interpret/float32/sobel5/v2/reflect/gray/64x64/1/1x1x1"
+
+
+def test_cache_from_the_future_skips_and_warns(tmp_path):
+    """A v5 file (newer deployment, shared cache path) must not raise — and
+    must not be misread either: its entries are dropped with a warning, and
+    dispatch falls back to the default block shape."""
+    path = tmp_path / "v5.json"
+    path.write_text(json.dumps({
+        "__meta__": {"version": tuning.TuningCache.VERSION + 1},
+        # plausible future key layout + value schema drift
+        "pallas-tpu/float32/sobel5/v2/reflect/gray/64x64/1/1x1x1/extra":
+            {"block": [32, 128], "us": 1.0},
+        _V4_KEY: {"block_h": 8, "block_w": 32, "us": 1.0},
+    }))
+    with pytest.warns(RuntimeWarning, match="newer than supported"):
+        cache = tuning.TuningCache(str(path))
+    assert len(cache) == 0
+    bh, bw, src = dispatch.choose_block_shape(
+        64, 64, backend="pallas-interpret", cache=cache
+    )
+    assert src == "default" and bh > 0 and bw > 0
+
+
+def test_cache_truncated_json_skips_and_warns(tmp_path):
+    """A mid-write-truncated file (crash during a non-atomic copy) loads as
+    empty with a warning instead of raising mid-edge_detect."""
+    path = tmp_path / "trunc.json"
+    full = json.dumps(_v4_payload(**{
+        _V4_KEY: {"block_h": 8, "block_w": 32, "us": 1.0}}))
+    path.write_text(full[: len(full) // 2])
+    with pytest.warns(RuntimeWarning, match="unreadable tuning cache"):
+        cache = tuning.TuningCache(str(path))
+    assert len(cache) == 0
+    assert cache.lookup(tuning.TuneKey(
+        "pallas-interpret", "float32", "sobel5", "v2", 64, 64)) is None
+
+
+def test_cache_corrupted_entries_skipped_individually(tmp_path):
+    """One bad entry (wrong value shape / non-numeric blocks) must not sink
+    the healthy ones."""
+    good_key = _V4_KEY
+    bad_keys = {
+        "pallas-interpret/float32/sobel5/v2/reflect/gray/32x32/1/1x1x1":
+            {"block": "8x32"},                      # missing block_h/block_w
+        "pallas-interpret/float32/sobel5/v2/reflect/gray/16x16/1/1x1x1":
+            {"block_h": "eight", "block_w": 32},    # non-numeric
+        "pallas-interpret/float32/sobel5/v2/reflect/gray/8x8/1/1x1x1":
+            [8, 32],                                # not a dict
+    }
+    path = tmp_path / "mixed.json"
+    path.write_text(json.dumps(_v4_payload(
+        **{good_key: {"block_h": 8, "block_w": 32, "us": 1.0}}, **bad_keys)))
+    with pytest.warns(RuntimeWarning, match="corrupted tuning cache"):
+        cache = tuning.TuningCache(str(path))
+    assert len(cache) == 1
+    assert cache.lookup(tuning.TuneKey(
+        "pallas-interpret", "float32", "sobel5", "v2", 64, 64)) == (8, 32)
+
+
+def test_cache_non_object_payload_skips_and_warns(tmp_path):
+    path = tmp_path / "list.json"
+    path.write_text("[1, 2, 3]")
+    with pytest.warns(RuntimeWarning, match="expected a JSON object"):
+        cache = tuning.TuningCache(str(path))
     assert len(cache) == 0
 
 
