@@ -134,6 +134,7 @@ def main() -> None:
         roofline_lm,
         roofline_sobel,
         shard_scaling,
+        streaming,
         table1_variants,
         table2_throughput,
     )
@@ -144,6 +145,7 @@ def main() -> None:
         ("nms", nms_fused),
         ("fig6", fig6_blocksweep),
         ("fig7", fig7_ssim),
+        ("streaming", streaming),
         ("shard", shard_scaling),
         ("roofline_sobel", roofline_sobel),
         ("roofline_lm", roofline_lm),

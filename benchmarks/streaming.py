@@ -1,0 +1,126 @@
+"""Streaming engine latency: per-frame p50/p99 under stream traffic.
+
+Serving is a latency discipline, not a throughput one, so this suite
+reports *percentile* rows — ``us_per_call`` is the per-step engine compute
+latency at that percentile (transfer excluded; the engine times it
+separately). Series per case, all detector traffic (fused NMS +
+hysteresis) over ``S`` concurrent same-resolution streams:
+
+  * ``stateless`` — the pre-engine baseline: one jitted ``edge_detect``
+    per frame batch, no carried state. What every frame cost before PR 6.
+  * ``static``    — the delta-skip best case: motionless cameras, every
+    tile unchanged after frame 1, steps served from cache (the engine
+    short-circuits the kernel launch outright).
+  * ``moving``    — a translating feature per stream: the masked-grid path
+    with a real mix of skipped and recomputed tiles.
+
+The first two steps of every series are excluded (jit compile of the cold
+state group and the masked/cached specialization). Rows carry the
+steady-state skip rate in ``derived`` so the CI gate also pins the
+delta-skip machinery itself: a broken change test shows up as skip=0 and a
+blown ``static`` percentile long before anyone reads a profile.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.api import EdgeConfig, edge_detect
+from repro.configs import get_config
+from repro.data.synthetic import video_frame
+from repro.serve import StreamEngine, StreamRequest
+
+# (image side, concurrent streams, frames per stream)
+CASES = [(1024, 4, 24)]
+SMOKE_CASES = [(128, 3, 12)]
+_WARM = 2  # steps paying jit compile, excluded from percentiles
+
+
+def _fast_backend() -> str:
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def _source(cfg_model, sid: int, frames: int, motion: float):
+    def frame(i):
+        if i >= frames:
+            return None
+        return video_frame(cfg_model, stream=sid, step=i, motion=motion)
+    return frame
+
+
+def _engine_samples(cfg_model, edge_cfg, streams, frames, motion):
+    """(steady-state per-step compute µs, stream-0 stats) for one traffic mix."""
+    eng = StreamEngine(edge_cfg, max_streams=streams)
+    for sid in range(streams):
+        eng.submit(StreamRequest(
+            sid=sid, frames=_source(cfg_model, sid, frames, motion), fps=30.0
+        ))
+    stats = eng.run()
+    st = stats[0]  # same-shape streams ride one group: shared step latency
+    warm = min(_WARM, max(0, st.frames - 1))
+    return [x * 1e3 for x in st.compute_ms[warm:]], st
+
+
+def _stateless_samples(cfg_model, edge_cfg, streams, frames):
+    """Per-call µs for the no-state baseline on the same frame batches."""
+    fn = jax.jit(lambda x: edge_detect(x, edge_cfg))
+    samples = []
+    for i in range(frames):
+        batch = np.stack([
+            video_frame(cfg_model, stream=sid, step=i, motion=2.0)
+            for sid in range(streams)
+        ])
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(batch))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return samples[min(_WARM, max(0, frames - 1)):]
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    rows = []
+    backend = _fast_backend()
+    for n, streams, frames in SMOKE_CASES if smoke else CASES:
+        cfg_model = get_config("sobel-hd", smoke=True).replace(
+            image_h=n, image_w=n
+        )
+        # Pin a 4x4 tile grid: the XLA default block covers the whole
+        # frame, which would turn the per-tile change test into an
+        # all-or-nothing one and hide partial skips on the moving series.
+        edge_cfg = EdgeConfig(nms=True, hysteresis=True, backend=backend,
+                              block_h=n // 4, block_w=n // 4)
+
+        stateless = _stateless_samples(cfg_model, edge_cfg, streams, frames)
+        static_us, static_st = _engine_samples(
+            cfg_model, edge_cfg, streams, frames, motion=0.0)
+        moving_us, moving_st = _engine_samples(
+            cfg_model, edge_cfg, streams, frames, motion=4.0)
+
+        series = [
+            ("stateless", stateless, ""),
+            ("static", static_us,
+             f"skip={static_st.skip_rate:.2f};cached={static_st.cached_steps};"),
+            ("moving", moving_us,
+             f"skip={moving_st.skip_rate:.2f};cached={moving_st.cached_steps};"),
+        ]
+        for path, samples, extra in series:
+            for q in (50, 99):
+                us = float(np.percentile(np.asarray(samples), q))
+                rows.append(
+                    {
+                        "name": f"streaming/{n}x{n}/{path}/p{q}",
+                        "us_per_call": us,
+                        "backend": backend,
+                        "variant": "v2",
+                        "derived": (
+                            f"fps_equiv={1e6 / us:.1f};{extra}"
+                            f"streams={streams};path={path}"
+                        ),
+                        "config": {"n": n, "streams": streams,
+                                   "frames": frames, "nms": True,
+                                   "hysteresis": True},
+                    }
+                )
+    return rows

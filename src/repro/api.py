@@ -45,7 +45,9 @@ __all__ = [
     "EdgeConfig",
     "EdgeResult",
     "ShardConfig",
+    "StreamState",
     "edge_detect",
+    "edge_detect_stream",
     "detect_layout",
     "LAYOUTS",
 ]
@@ -106,6 +108,18 @@ class EdgeConfig:
       low, high:  hysteresis thresholds as *fractions of the per-image
                   magnitude peak* (scale-free across operators/inputs);
                   None = 0.10 / 0.20 (``repro.core.nms.DEFAULT_LOW/HIGH``).
+      temporal:   temporal hysteresis for video streams (implies
+                  ``hysteresis``): edges detected in recent frames seed the
+                  current frame's linking wherever the current thin map is
+                  at least weak, so detections persist instead of
+                  flickering. Streaming-only — carried per-stream state, so
+                  plain :func:`edge_detect` rejects it; use
+                  :func:`edge_detect_stream` / ``repro.serve.streams``.
+      decay:      per-frame geometric decay of the temporal seed strength
+                  in [0, 1]: a past edge keeps seeding while
+                  ``decay^age > TEMPORAL_FLOOR`` (``repro.core.nms``).
+                  ``decay=0`` makes streaming output bit-identical to
+                  stateless per-frame detection (the tested contract).
       with_components:  also return per-direction gradients ``(..., D, H, W)``.
       with_orientation: also return gradient orientation ``atan2(G_y, G_x)``.
       with_max:         also return the per-image peak of the unnormalized
@@ -127,6 +141,8 @@ class EdgeConfig:
     hysteresis: bool = False
     low: Optional[float] = None
     high: Optional[float] = None
+    temporal: bool = False
+    decay: float = 0.0
     with_components: bool = False
     with_orientation: bool = False
     with_max: bool = False
@@ -146,8 +162,19 @@ class EdgeConfig:
         """
         from repro.core import nms as _nms
 
+        if not 0.0 <= self.decay <= 1.0:
+            raise ValueError(
+                f"decay={self.decay} must be a per-frame attenuation in [0, 1]"
+            )
+        if self.decay and not self.temporal:
+            raise ValueError(
+                "decay is the temporal-hysteresis attenuation; set "
+                "temporal=True (stateless calls carry no seed state) or "
+                "leave it 0"
+            )
+        hysteresis = self.hysteresis or self.temporal
         low, high = self.low, self.high
-        if not self.hysteresis and (low is not None or high is not None):
+        if not hysteresis and (low is not None or high is not None):
             if (low, high) == (_nms.DEFAULT_LOW, _nms.DEFAULT_HIGH):
                 # A resolved hysteresis config pinned the defaults; toggling
                 # hysteresis off (e.g. edge_detect(x, cfg, hysteresis=False)
@@ -158,7 +185,7 @@ class EdgeConfig:
                     "low/high are hysteresis thresholds; set hysteresis=True "
                     "(nms alone never thresholds) or leave them unset"
                 )
-        if self.hysteresis:
+        if hysteresis:
             low = _nms.DEFAULT_LOW if low is None else low
             high = _nms.DEFAULT_HIGH if high is None else high
         for name, v in (("low", low), ("high", high)):
@@ -173,7 +200,8 @@ class EdgeConfig:
         return self.replace(
             directions=spec.resolve_directions(self.directions),
             variant=spec.resolve_variant(self.variant),
-            nms=self.nms or self.hysteresis,
+            nms=self.nms or hysteresis,
+            hysteresis=hysteresis,
             low=low,
             high=high,
         )
@@ -208,20 +236,105 @@ class EdgeResult:
     peak: Optional[jnp.ndarray] = None         # (...,) f32 per-image max
     thin: Optional[jnp.ndarray] = None         # (..., H, W) f32, nms=True
     edges: Optional[jnp.ndarray] = None        # (..., H, W) bool, hysteresis
+    skipped: Optional[jnp.ndarray] = None      # (...,) i32 delta-skipped tiles
     layout: str = "HW"
     config: Optional[EdgeConfig] = None
 
     def tree_flatten(self):
         leaves = (self.magnitude, self.components, self.orientation,
-                  self.peak, self.thin, self.edges)
+                  self.peak, self.thin, self.edges, self.skipped)
         return leaves, (self.layout, self.config)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         layout, config = aux
-        magnitude, components, orientation, peak, thin, edges = leaves
+        (magnitude, components, orientation, peak, thin, edges,
+         skipped) = leaves
         return cls(magnitude, components, orientation, peak, thin, edges,
-                   layout, config)
+                   skipped, layout, config)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    """Per-stream temporal state carried between frames of one video stream.
+
+    The leaves cache exactly what the delta-skip and temporal-hysteresis
+    machinery needs from frame ``t - 1`` (all batched ``(B, ...)`` — one
+    slice per stream when the engine batches same-resolution streams):
+
+      * ``frame``   — the previous input frames in kernel dtype (u8 stays
+        u8), the reference for the exact per-tile change test.
+      * ``primary`` — the previous *un-normalized* primary map (the NMS
+        thin magnitude when ``nms``, else the magnitude): the splice source
+        for delta-skipped tiles.
+      * ``bmax``    — the previous per-block maxima ``(B, gh, gw)``: cached
+        SMEM output of the fused kernel, spliced per-tile so the global
+        peak (normalization + hysteresis thresholds) stays exact.
+      * ``seed``    — the temporal seed-strength map (``config.temporal``;
+        ``None`` otherwise): 1.0 at last frame's edges, geometrically
+        decayed elsewhere (``repro.core.nms.update_seed_strength``).
+
+    ``block`` (static aux) pins the ``(block_h, block_w)`` delta-tile grid
+    so every frame of a stream tiles identically — a mid-stream tuning
+    change cannot silently misalign the cached ``bmax``/mask grids.
+    ``initialized`` is ``False`` for the zero state :func:`init` returns;
+    the first frame then recomputes every tile regardless of the (zero)
+    ``frame`` cache.
+    """
+
+    frame: Optional[jnp.ndarray]
+    primary: Optional[jnp.ndarray]
+    bmax: Optional[jnp.ndarray]
+    seed: Optional[jnp.ndarray]
+    block: Tuple[int, int] = (0, 0)
+    initialized: bool = False
+
+    def tree_flatten(self):
+        return ((self.frame, self.primary, self.bmax, self.seed),
+                (self.block, self.initialized))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        block, initialized = aux
+        frame, primary, bmax, seed = leaves
+        return cls(frame, primary, bmax, seed, block, initialized)
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        """(gh, gw) delta-tile grid of the cached ``bmax``."""
+        return self.bmax.shape[-2], self.bmax.shape[-1]
+
+    @property
+    def tiles(self) -> int:
+        """Total delta tiles per frame (the denominator for skip rates)."""
+        gh, gw = self.grid
+        return gh * gw
+
+    @classmethod
+    def init(cls, batch, h, w, config: "EdgeConfig", *, rgb: bool = False,
+             dtype=jnp.uint8) -> "StreamState":
+        """Zero state for ``batch`` streams of ``(h, w)`` frames.
+
+        The first :func:`edge_detect_stream` call on it recomputes every
+        tile (``initialized=False`` forces an all-changed mask), filling
+        the caches; callers never need to special-case frame 0.
+        """
+        from repro.kernels import dispatch
+
+        config = config.resolved()
+        bh, bw = dispatch.stream_block_shape(h, w, config, rgb=rgb)
+        gh, gw = -(-h // bh), -(-w // bw)
+        shape = (batch, h, w, 3) if rgb else (batch, h, w)
+        return cls(
+            frame=jnp.zeros(shape, dtype),
+            primary=jnp.zeros((batch, h, w), jnp.float32),
+            bmax=jnp.zeros((batch, gh, gw), jnp.float32),
+            seed=(jnp.zeros((batch, h, w), jnp.float32)
+                  if config.temporal else None),
+            block=(bh, bw),
+            initialized=False,
+        )
 
 
 def edge_detect(
@@ -259,3 +372,45 @@ def edge_detect(
     images = jnp.asarray(images)
     layout = layout or detect_layout(images.shape)
     return dispatch.edge(images, cfg, layout=layout, mesh=mesh)
+
+
+def edge_detect_stream(
+    frames,
+    config: Optional[EdgeConfig] = None,
+    state: Optional[StreamState] = None,
+    *,
+    layout: Optional[str] = None,
+    **overrides,
+) -> Tuple[EdgeResult, StreamState]:
+    """One frame step of the stateful streaming pipeline.
+
+    ``frames`` is ONE frame per stream — ``HW`` / ``HWC`` for a single
+    stream or ``NHW`` / ``NHWC`` for a batch of same-resolution streams
+    (no video-stack ``T`` axis: time is the successive calls). ``state``
+    is the previous call's :class:`StreamState` (``None`` = cold start).
+
+    Returns ``(result, new_state)``. On top of the stateless pipeline the
+    streaming path adds:
+
+      * **Delta-skip tiles** — a per-tile exact change test against
+        ``state.frame``; unchanged tiles splice the cached thin map and
+        per-block maxima instead of recomputing (``result.skipped`` counts
+        them per stream). Output is bit-identical to full recompute.
+      * **Temporal hysteresis** — with ``config.temporal``, recent frames'
+        edges seed this frame's linking (decayed by ``config.decay``), so
+        detections persist instead of flickering. ``decay=0`` is
+        bit-identical to stateless per-frame :func:`edge_detect`.
+
+    The call is fully traceable (``jax.jit`` over ``(frames, state)`` with
+    the config static); ``repro.serve.streams.StreamEngine`` is the
+    slot/admission scheduler that drives it for many concurrent streams.
+    """
+    from repro.kernels import dispatch
+
+    cfg = (config or EdgeConfig())
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cfg = cfg.resolved()
+    frames = jnp.asarray(frames)
+    layout = layout or detect_layout(frames.shape)
+    return dispatch.edge_stream(frames, cfg, state, layout=layout)

@@ -51,16 +51,24 @@ from repro.core.sobel import magnitude, spec_components
 __all__ = [
     "DEFAULT_LOW",
     "DEFAULT_HIGH",
+    "TEMPORAL_FLOOR",
     "nms_sector",
     "nms_thin",
     "thin_map",
     "resolve_thresholds",
     "hysteresis",
+    "temporal_seeds",
+    "update_seed_strength",
 ]
 
 # Auto double-threshold defaults: fractions of the per-image magnitude peak.
 DEFAULT_LOW = 0.10
 DEFAULT_HIGH = 0.20
+
+# Temporal hysteresis: a past edge keeps seeding while its decayed strength
+# stays strictly above this floor, i.e. for floor(log(TEMPORAL_FLOOR) /
+# log(decay)) frames after it was last detected (0 frames when decay == 0).
+TEMPORAL_FLOOR = 0.5
 
 # tan(pi/8): the sector boundary of the classical quantized-orientation NMS
 # (gradient within 22.5 degrees of an axis snaps to that axis).
@@ -210,6 +218,7 @@ def hysteresis(
     thin: jnp.ndarray,
     low: jnp.ndarray,
     high: jnp.ndarray,
+    seed: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Double-threshold + iterative-until-fixpoint edge linking.
 
@@ -221,12 +230,23 @@ def hysteresis(
     result is the exact connected-component answer, independent of tiling
     or sharding. Returns a bool edge map.
 
+    ``seed`` (optional bool map, broadcastable) adds extra strong seeds —
+    the temporal-hysteresis hook: pixels that were edges in recent frames
+    (see :func:`temporal_seeds`) seed this frame's linking, but only where
+    the current frame is at least weak, so a seed can never resurrect a
+    pixel with no present-day evidence. ``seed=None`` and an all-``False``
+    seed produce bit-identical results (``strong | (False & weak) ==
+    strong``), which is what makes ``decay=0`` streaming exactly equal to
+    stateless per-frame detection.
+
     Runs in pure XLA on the gathered thin map — linking is global (a chain
     may cross every shard), which is why this stage stays post-gather even
     when the NMS ran fused in the kernel (DESIGN.md §7).
     """
     weak = thin > low
     strong = (thin > high) & weak  # guard against low > high configs
+    if seed is not None:
+        strong = strong | (seed & weak)
 
     def cond(state):
         return state[1]
@@ -238,3 +258,36 @@ def hysteresis(
 
     edges, _ = jax.lax.while_loop(cond, body, (strong, jnp.bool_(True)))
     return edges
+
+
+def temporal_seeds(
+    strength: jnp.ndarray, decay: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decay the per-pixel temporal seed strength by one frame.
+
+    ``strength``: ``(..., H, W)`` float32 — 1.0 where the previous frame
+    detected an edge, geometrically decayed where it did not (see
+    :func:`update_seed_strength`). Returns ``(seed, decayed)``:
+
+      * ``seed``    — bool map of pixels still strong enough
+        (``decayed > TEMPORAL_FLOOR``) to seed this frame's linking.
+      * ``decayed`` — ``strength * decay``, the strength the update step
+        folds this frame's edges into.
+
+    ``decay=0`` zeroes the strength before the strict-``>`` floor test, so
+    no seed ever fires and streaming collapses to stateless detection.
+    """
+    decayed = strength * jnp.float32(decay)
+    return decayed > jnp.float32(TEMPORAL_FLOOR), decayed
+
+
+def update_seed_strength(
+    decayed: jnp.ndarray, edges: jnp.ndarray
+) -> jnp.ndarray:
+    """Fold this frame's edges into the decayed strength map.
+
+    A re-detected pixel snaps back to full strength 1.0 (its persistence
+    age resets); everything else keeps its decayed value until it falls
+    through :data:`TEMPORAL_FLOOR` and stops seeding.
+    """
+    return jnp.maximum(edges.astype(jnp.float32), decayed)

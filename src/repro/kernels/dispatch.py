@@ -49,15 +49,25 @@ from repro.core.sobel import magnitude as rss_magnitude
 from repro.core.sobel import sobel_components as core_components
 from repro.kernels import edge as ekern
 from repro.kernels import tuning
+from repro.kernels.tiling import (
+    ALIGN_INTERPRET,
+    ALIGN_TPU_GRAY,
+    ALIGN_TPU_RGB,
+    window_shape,
+)
 
 if TYPE_CHECKING:  # no runtime import: repro.api imports this module
-    from repro.api import EdgeConfig, EdgeResult
+    from repro.api import EdgeConfig, EdgeResult, StreamState
 
 __all__ = [
     "BACKENDS",
     "resolve_backend",
     "choose_block_shape",
+    "stream_block_shape",
     "edge",
+    "stream_delta",
+    "edge_stream",
+    "edge_stream_cached",
     "sobel",
     "edge_detect",
 ]
@@ -270,6 +280,12 @@ def edge(
     from repro.api import EdgeResult, detect_layout
 
     config = config.resolved()
+    if config.temporal:
+        raise ValueError(
+            "temporal hysteresis carries per-stream state; use "
+            "repro.api.edge_detect_stream (or drop temporal for stateless "
+            "calls)"
+        )
     images = jnp.asarray(images)
     layout = layout or detect_layout(images.shape)
     rgb = layout.endswith("C")
@@ -395,6 +411,347 @@ def edge(
         edges=unbatch(edges) if config.hysteresis else None,
         layout=layout,
         config=config,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The streaming engine: per-frame delta-skip + temporal hysteresis
+# ---------------------------------------------------------------------------
+
+def stream_block_shape(
+    h: int,
+    w: int,
+    config: "EdgeConfig",
+    *,
+    rgb: bool = False,
+    dtype: str = "float32",
+    tuning_cache: Optional[tuning.TuningCache] = None,
+) -> Tuple[int, int]:
+    """The (block_h, block_w) delta-tile grid for a stream of (h, w) frames.
+
+    On the Pallas backends this IS the kernel tile (mask entries map 1:1 to
+    grid steps); on XLA it only sets the change-test/splice granularity.
+    Explicit config overrides win everywhere so a stream's grid is
+    reproducible; otherwise Pallas consults the tuning cache and XLA takes
+    the kernel's default geometry.
+    """
+    if config.block_h and config.block_w:
+        return config.block_h, config.block_w
+    backend = resolve_backend(config.backend)
+    if backend == "xla":
+        spec = get_operator(config.operator, config.params)
+        return ekern.default_block_shape(
+            h, w, spec.size, channels=3 if rgb else None
+        )
+    bh, bw, _src = choose_block_shape(
+        h, w, operator=config.operator, variant=config.variant,
+        dtype=dtype, backend=backend, padding=config.padding,
+        layout="rgb" if rgb else "gray", block_h=config.block_h,
+        block_w=config.block_w, cache=tuning_cache,
+    )
+    return bh, bw
+
+
+def _stream_align(backend: str, rgb: bool) -> Tuple[int, int]:
+    if backend == "pallas-tpu":
+        return ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
+    return ALIGN_INTERPRET
+
+
+def _block_reduce_max(x: jnp.ndarray, bh: int, bw: int) -> jnp.ndarray:
+    """(B, H, W) -> (B, gh, gw) per-tile max (ragged tails are partial
+    windows). Identical values to the kernel's masked SMEM maxima because
+    the magnitude is non-negative and max is exact."""
+    b, h, w = x.shape
+    gh, gw = -(-h // bh), -(-w // bw)
+    return jax.lax.reduce_window(
+        x, jnp.float32(0.0), jax.lax.max,
+        (1, bh, bw), (1, bh, bw),
+        ((0, 0), (0, gh * bh - h), (0, gw * bw - w)),
+    )
+
+
+def _window_reach(n: int, b: int, g: int, t: int, r: int) -> Tuple[int, int]:
+    """(up, down) reach, in whole blocks, of any tile's input window along
+    one axis of length ``n`` tiled by ``b`` into ``g`` blocks, with clamped
+    window extent ``t`` and stencil radius ``r``.
+
+    Covers all three window regimes of ``tiling.window_origin``: interior
+    (up ``r``, down ``t - b - r``), clamped at 0 (down up to ``t - b``) and
+    clamped at ``n - t`` (up up to ``t - s`` where ``s`` is the ragged
+    extent of the last block). Over-reach only costs recompute of an
+    unchanged tile — never correctness — so the bounds round up.
+    """
+    if g <= 1:
+        return 0, 0
+    s = n - (g - 1) * b
+    up = max(-(-r // b), -(-(t - s) // b))
+    down = -(-(t - b) // b)
+    return max(0, up), max(0, down)
+
+
+def _dilate_blocks(
+    changed: jnp.ndarray, reach_h: Tuple[int, int], reach_w: Tuple[int, int]
+) -> jnp.ndarray:
+    """OR-dilate the (B, gh, gw) change map so every tile whose input
+    window can see a changed block is marked for recompute."""
+    (uh, dh), (uw, dw) = reach_h, reach_w
+    if uh == dh == uw == dw == 0:
+        return changed
+    y = jax.lax.reduce_window(
+        changed.astype(jnp.int32), 0, jax.lax.max,
+        (1, uh + dh + 1, uw + dw + 1), (1, 1, 1),
+        ((0, 0), (uh, dh), (uw, dw)),
+    )
+    return y > 0
+
+
+def stream_delta(
+    x: jnp.ndarray,
+    state: "StreamState",
+    config: "EdgeConfig",
+    *,
+    rgb: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tile change test of ``x`` against the cached previous frame.
+
+    ``x``: ``(B, H, W[, 3])`` in kernel dtype (u8 compares are exact; so
+    are f32 bit compares). Returns ``(changed, skipped)``: a ``(B, gh,
+    gw)`` bool recompute mask — per-tile *input-window* change, i.e. the
+    raw per-block diff OR-dilated by the window reach so halo reads are
+    honored — and the ``(B,)`` int32 count of skippable tiles. An
+    uninitialized state marks every tile changed (the caches are zeros,
+    not frame -1). Fully traceable; the serve engine also calls it alone
+    to host-check for the all-static fast path.
+    """
+    bh, bw = state.block
+    h, w = (x.shape[-3], x.shape[-2]) if rgb else (x.shape[-2], x.shape[-1])
+    b = x.shape[0]
+    gh, gw = -(-h // bh), -(-w // bw)
+    if not state.initialized:
+        changed = jnp.ones((b, gh, gw), bool)
+    else:
+        diff = x != state.frame
+        if rgb:
+            diff = diff.any(axis=-1)
+        blocks = _block_reduce_max(diff.astype(jnp.float32), bh, bw) > 0
+        config = config.resolved()
+        r_in = config.spec.radius + (1 if config.nms else 0)
+        backend = resolve_backend(config.backend)
+        th, tw = window_shape(
+            h, w, bh, bw, r_in, align=_stream_align(backend, rgb)
+        )
+        changed = _dilate_blocks(
+            blocks,
+            _window_reach(h, bh, gh, th, r_in),
+            _window_reach(w, bw, gw, tw, r_in),
+        )
+    skipped = jnp.int32(gh * gw) - jnp.sum(
+        changed.astype(jnp.int32), axis=(-2, -1)
+    )
+    return changed, skipped
+
+
+def _stream_epilogue(
+    x, config, state, primary, bmax, skipped, *, batch_shape, layout
+):
+    """Shared tail of the streaming paths: peak from the (spliced) block
+    maxima, plain or temporal hysteresis, normalization, result + next
+    state. Runs every frame — even a fully-spliced one — because the
+    temporal seed strength decays per frame and normalization/linking are
+    cheap XLA stages on the assembled map."""
+    from repro.api import EdgeResult, StreamState
+    from repro.core import nms
+
+    need_peak = config.normalize or config.with_max or config.hysteresis
+    peak = None
+    if need_peak:
+        peak = jnp.max(bmax, axis=(-2, -1), keepdims=True)  # (B, 1, 1)
+
+    edges = None
+    new_seed = None
+    if config.hysteresis:
+        low, high = nms.resolve_thresholds(peak, config.low, config.high)
+        if config.temporal:
+            seeds, decayed = nms.temporal_seeds(state.seed, config.decay)
+            edges = nms.hysteresis(primary, low, high, seed=seeds)
+            new_seed = nms.update_seed_strength(decayed, edges)
+        else:
+            edges = nms.hysteresis(primary, low, high)
+
+    mag = primary
+    if config.normalize:
+        mag = mag * (255.0 / jnp.maximum(peak, 1e-8))
+
+    new_state = StreamState(
+        frame=x, primary=primary, bmax=bmax, seed=new_seed,
+        block=state.block, initialized=True,
+    )
+
+    def unbatch(a):
+        return a.reshape(batch_shape + a.shape[-2:])
+
+    result = EdgeResult(
+        magnitude=unbatch(mag),
+        peak=peak.reshape(batch_shape) if config.with_max else None,
+        thin=unbatch(mag) if config.nms else None,
+        edges=unbatch(edges) if config.hysteresis else None,
+        skipped=skipped.reshape(batch_shape),
+        layout=layout,
+        config=config,
+    )
+    return result, new_state
+
+
+def _check_stream_config(config: "EdgeConfig") -> None:
+    if config.shard is not None:
+        raise ValueError(
+            "streaming is single-device per stream group for now; drop "
+            "config.shard (batch parallelism comes from grouping streams)"
+        )
+    if config.with_components or config.with_orientation:
+        raise ValueError(
+            "streaming caches the primary map only; with_components/"
+            "with_orientation are not supported on the stream path"
+        )
+
+
+def edge_stream(
+    images: jnp.ndarray,
+    config: "EdgeConfig",
+    state: Optional["StreamState"] = None,
+    *,
+    layout: Optional[str] = None,
+    changed: Optional[jnp.ndarray] = None,
+    tuning_cache: Optional[tuning.TuningCache] = None,
+) -> tuple:
+    """One streaming frame step: delta-skip compute + temporal epilogue.
+
+    ``images``: one frame per stream — ``HW``/``HWC`` or a same-resolution
+    batch ``NHW``/``NHWC`` (time is the successive calls, so video-stack
+    layouts are rejected). ``state`` is the previous step's
+    :class:`~repro.api.StreamState` (``None`` = cold start: every tile
+    recomputes and the caches fill). ``changed`` lets a caller that
+    already ran :func:`stream_delta` (the serve engine's all-static host
+    check) pass the mask in instead of recomputing it.
+
+    Backend split:
+
+      * Pallas backends run the masked-grid megakernel
+        (``kernels.edge.edge_stream_pallas``): flagged tiles recompute,
+        the rest branch to a cached-tile splice.
+      * XLA recomputes the frame and splices per-tile with a select — the
+        mask is accounting there (XLA fuses the whole frame; its real
+        delta win is the engine's whole-frame short-circuit onto
+        :func:`edge_stream_cached`).
+
+    Either way the output is bit-identical to stateless full recompute
+    (unchanged input windows reproduce identical arithmetic), which the
+    streaming test battery pins.
+
+    Returns ``(EdgeResult, StreamState)``; ``result.skipped`` counts the
+    delta-skipped tiles per stream.
+    """
+    from repro.api import StreamState, detect_layout
+
+    config = config.resolved()
+    _check_stream_config(config)
+    images = jnp.asarray(images)
+    layout = layout or detect_layout(images.shape)
+    if "T" in layout or layout.count("N") > 1:
+        raise ValueError(
+            f"streaming takes one frame per stream per call, not a video "
+            f"stack (layout {layout!r}); iterate frames through the state"
+        )
+    rgb = layout.endswith("C")
+    backend = resolve_backend(config.backend)
+
+    x = ekern.kernel_dtype(images)
+    if rgb:
+        batch_shape = x.shape[:-3]
+        h, w = x.shape[-3], x.shape[-2]
+        x = x.reshape((-1, h, w, 3))
+    else:
+        batch_shape = x.shape[:-2]
+        h, w = x.shape[-2], x.shape[-1]
+        x = x.reshape((-1, h, w))
+
+    if state is None:
+        state = StreamState.init(
+            x.shape[0], h, w, config, rgb=rgb, dtype=x.dtype
+        )
+    bh, bw = state.block
+    if state.frame.shape != x.shape:
+        raise ValueError(
+            f"stream state was built for frames {state.frame.shape}, got "
+            f"{x.shape}; streams of different shape need their own state"
+        )
+
+    if changed is None:
+        changed, skipped = stream_delta(x, state, config, rgb=rgb)
+    else:
+        gh, gw = state.grid
+        skipped = jnp.int32(gh * gw) - jnp.sum(
+            changed.astype(jnp.int32), axis=(-2, -1)
+        )
+
+    if backend == "xla":
+        run = _backend_compute(
+            config, backend, rgb=rgb, need_comps=False,
+            need_raw=config.nms, block_h=None, block_w=None,
+        )
+        fresh, _comps, raw = run(x)
+        fresh_bmax = _block_reduce_max(raw if raw is not None else fresh,
+                                       bh, bw)
+        pixel_mask = jnp.repeat(
+            jnp.repeat(changed, bh, axis=-2), bw, axis=-1
+        )[:, :h, :w]
+        primary = jnp.where(pixel_mask, fresh, state.primary)
+        bmax = jnp.where(changed, fresh_bmax, state.bmax)
+    else:
+        primary, bmax = ekern.edge_stream_pallas(
+            x, state.primary, state.bmax, changed.astype(jnp.int32),
+            operator=config.operator, variant=config.variant,
+            params=config.params, directions=config.directions,
+            padding=config.padding, block_h=bh, block_w=bw, rgb=rgb,
+            out_nms=config.nms, interpret=(backend == "pallas-interpret"),
+        )
+
+    return _stream_epilogue(
+        x, config, state, primary, bmax, skipped,
+        batch_shape=batch_shape, layout=layout,
+    )
+
+
+def edge_stream_cached(
+    config: "EdgeConfig",
+    state: "StreamState",
+    *,
+    layout: str = "NHW",
+) -> tuple:
+    """The all-static fast path: a frame step with no frame compute.
+
+    When the serve engine's host-side check of :func:`stream_delta` shows
+    zero changed tiles across the whole group, the kernel launch (and even
+    the frame's HBM read) is skipped outright — the cached primary map and
+    block maxima ARE this frame's outputs. Only the epilogue runs, because
+    it still must: the temporal seed strength decays every frame (edges
+    can disappear on a static scene as their seeds expire) and
+    normalization/linking read the cached values. Bit-identical to
+    :func:`edge_stream` on the same static frame.
+    """
+    config = config.resolved()
+    _check_stream_config(config)
+    if not state.initialized:
+        raise ValueError(
+            "edge_stream_cached needs an initialized state (run at least "
+            "one edge_stream step first)"
+        )
+    batch_shape = () if layout in ("HW", "HWC") else state.primary.shape[:1]
+    skipped = jnp.full(state.primary.shape[0], state.tiles, jnp.int32)
+    return _stream_epilogue(
+        state.frame, config, state, state.primary, state.bmax, skipped,
+        batch_shape=batch_shape, layout=layout,
     )
 
 

@@ -12,6 +12,12 @@ switches the traffic to Canny-grade binary edge maps — fused NMS in the
 kernel pass plus post-gather hysteresis linking — and reports the edge
 density of the final batch alongside the latency numbers.
 
+Streaming video: ``--streams N --fps F`` switches image archs to the
+continuous-batching stream engine (``repro.serve.streams``) — N synthetic
+camera streams with per-stream temporal state and delta-skip tiles;
+``--decay`` enables temporal hysteresis seeding. Reports per-stream p50/p99
+with host→device transfer and engine compute timed separately.
+
 Multi-device serving: ``--shard DxRxC`` (or the arch's ``sobel_shard``)
 spreads every request over the image mesh — D-way batch parallelism plus an
 RxC spatial grid with halo exchange (``repro.sharding.halo``). The loop is
@@ -98,6 +104,7 @@ def serve_image(cfg, args) -> None:
     warm(step, mesh, req=0)
 
     lat_ms = []
+    xfer_ms = []
     px_total = 0
     resharded = False
     t_all = time.perf_counter()
@@ -112,10 +119,14 @@ def serve_image(cfg, args) -> None:
             mesh, step = build_step(devices)
             warm(step, mesh, req=req)  # recompile excluded from the window
             resharded = True
-        frames = jnp.asarray(
-            image_batch(cfg, batch=args.slots, step=req)["images"]
-        )
-        frames = place(frames, mesh)
+        host = image_batch(cfg, batch=args.slots, step=req)["images"]
+        # Transfer and compute are timed separately: the device placement is
+        # block_until_ready'd on its own, so the compute percentiles measure
+        # the kernel, not the host->device copy it used to silently absorb.
+        t_x = time.perf_counter()
+        frames = place(jnp.asarray(host), mesh)
+        jax.block_until_ready(frames)
+        xfer_ms.append((time.perf_counter() - t_x) * 1e3)
         t0 = time.perf_counter()
         out = step(frames)
         jax.block_until_ready(out)
@@ -136,9 +147,75 @@ def serve_image(cfg, args) -> None:
         tag += f"; edge density={float(jnp.mean(out.edges)):.3f}"
     print(
         f"{args.requests} requests x {args.slots} frames, {wall:.2f}s -> "
-        f"{mps:.1f} MPS; latency p50={_percentile(lat_ms, 50):.1f}ms "
-        f"p95={_percentile(lat_ms, 95):.1f}ms{tag}"
+        f"{mps:.1f} MPS; compute p50={_percentile(lat_ms, 50):.1f}ms "
+        f"p95={_percentile(lat_ms, 95):.1f}ms; transfer "
+        f"p50={_percentile(xfer_ms, 50):.1f}ms "
+        f"p95={_percentile(xfer_ms, 95):.1f}ms{tag}"
     )
+
+
+def serve_streams(cfg, args) -> None:
+    """Streaming video serving: N concurrent camera streams, fps-paced.
+
+    Each stream is a synthetic camera (``data.synthetic.video_frame``)
+    pushing ``--requests`` frames at ``--fps``; the
+    :class:`~repro.serve.StreamEngine` batches same-resolution streams,
+    delta-skips unchanged tiles against each stream's cached state, and
+    (with ``--decay > 0``) carries temporal hysteresis seeds across frames.
+    Reports per-stream p50/p99 with transfer and compute split, plus the
+    delta-skip rate and fully-cached step count.
+    """
+    from repro.data.synthetic import video_frame
+    from repro.serve import StreamEngine, StreamRequest
+
+    overrides = dict(with_max=True, nms=True, hysteresis=True)
+    if args.decay > 0:
+        overrides.update(temporal=True, decay=args.decay)
+    edge_cfg = cfg.edge_config(**overrides).resolved()
+    print(
+        f"streaming {cfg.name}: operator={edge_cfg.operator} "
+        f"variant={edge_cfg.variant} backend={edge_cfg.backend} "
+        f"{cfg.image_h}x{cfg.image_w} streams={args.streams} "
+        f"slots={args.slots} fps={args.fps} frames/stream={args.requests} "
+        f"motion={args.motion}"
+        f"{f' temporal decay={args.decay}' if args.decay > 0 else ''}"
+    )
+
+    def source(sid):
+        def frame(i):
+            if i >= args.requests:
+                return None
+            return video_frame(cfg, stream=sid, step=i, motion=args.motion)
+        return frame
+
+    engine = StreamEngine(edge_cfg, max_streams=args.slots)
+    for sid in range(args.streams):
+        engine.submit(StreamRequest(sid=sid, frames=source(sid), fps=args.fps))
+    t0 = time.perf_counter()
+    stats = engine.run()
+    wall = time.perf_counter() - t0
+
+    frames_total = 0
+    for sid in sorted(stats):
+        st = stats[sid]
+        frames_total += st.frames
+        # The first couple of samples per stream pay jit compile (cold state
+        # group, then the masked/cached specialization); exclude them from
+        # the steady-state percentiles, same policy as serve_image's warm().
+        warm = min(2, max(0, st.frames - 1))
+        comp = st.compute_ms[warm:] or st.compute_ms
+        xfer = st.transfer_ms[warm:] or st.transfer_ms
+        print(
+            f"  stream {sid}: {st.frames} frames, skip={st.skip_rate:.0%} "
+            f"cached={st.cached_steps}; compute "
+            f"p50={_percentile(comp, 50):.2f}ms p99={_percentile(comp, 99):.2f}ms; "
+            f"transfer p50={_percentile(xfer, 50):.2f}ms "
+            f"p99={_percentile(xfer, 99):.2f}ms "
+            f"(budget {st.budget_ms:.1f}ms)"
+        )
+    fps_served = frames_total / wall if wall > 0 else 0.0
+    print(f"{len(stats)} streams x {args.requests} frames in {wall:.2f}s "
+          f"-> {fps_served:.1f} frames/s aggregate")
 
 
 def serve_lm(cfg, args) -> None:
@@ -171,6 +248,18 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--streams", type=int, default=0, metavar="N",
+                    help="image archs: serve N concurrent video streams "
+                         "through the streaming engine (per-stream temporal "
+                         "state + delta-skip); --requests = frames per stream")
+    ap.add_argument("--fps", type=float, default=30.0,
+                    help="per-stream frame rate budget (with --streams)")
+    ap.add_argument("--decay", type=float, default=0.0,
+                    help="temporal hysteresis seed decay in [0,1); 0 = "
+                         "stateless per-frame detection (with --streams)")
+    ap.add_argument("--motion", type=float, default=2.0,
+                    help="synthetic camera motion in px/frame; 0 = static "
+                         "streams, the delta-skip best case (with --streams)")
     ap.add_argument("--edges", action="store_true",
                     help="image archs: serve binary edge maps (fused NMS + "
                          "hysteresis) instead of magnitude")
@@ -184,9 +273,13 @@ def main() -> None:
 
     cfg = get_config(args.arch, smoke=args.smoke).replace(dtype="float32")
     if cfg.family == "image":
-        serve_image(cfg, args)
+        if args.streams > 0:
+            serve_streams(cfg, args)
+        else:
+            serve_image(cfg, args)
         return
-    for flag, on in (("--edges", args.edges), ("--shard", args.shard)):
+    for flag, on in (("--edges", args.edges), ("--shard", args.shard),
+                     ("--streams", args.streams)):
         if on:
             raise SystemExit(
                 f"{flag} applies to image (detector) serving; arch "

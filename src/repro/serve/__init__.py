@@ -1,2 +1,7 @@
 from repro.serve.engine import Engine, Request  # noqa: F401
 from repro.serve.paged import PagedKVCache  # noqa: F401
+from repro.serve.streams import (  # noqa: F401
+    StreamEngine,
+    StreamRequest,
+    StreamStats,
+)
