@@ -216,7 +216,7 @@ def _backend_compute(
 
 def _edge_sharded(
     x, config, backend, mesh, *, rgb, h, w, need_comps, need_peak,
-    tuning_cache,
+    tuning_cache, chaos=None,
 ):
     """Sharded engine body: returns ``(mag, comps|None, peak (B,1,1)|None)``
     bit-exact with the single-device branch."""
@@ -251,7 +251,7 @@ def _edge_sharded(
     )
     mag, comps, peak = halo.sharded_edge(
         x, mesh, radius=r, padding=config.padding, compute=run,
-        rgb=rgb, need_comps=need_comps, need_peak=need_peak,
+        rgb=rgb, need_comps=need_comps, need_peak=need_peak, chaos=chaos,
     )
     if need_peak:
         peak = peak[:, None, None]
@@ -265,6 +265,7 @@ def edge(
     layout: Optional[str] = None,
     tuning_cache: Optional[tuning.TuningCache] = None,
     mesh=None,
+    chaos=None,
 ) -> "EdgeResult":
     """Run one resolved :class:`~repro.api.EdgeConfig` end to end.
 
@@ -275,10 +276,15 @@ def edge(
     layout (the facade auto-detects it; see ``repro.api.detect_layout``).
     ``mesh`` (a concrete image mesh with axes ``data``/``row``/``col``)
     overrides ``config.shard`` — the serve loop passes the surviving-device
-    mesh here after an elastic reshard.
+    mesh here after an elastic reshard. ``chaos`` (a
+    ``repro.runtime.chaos.FaultPlan``) fires the ``"dispatch.edge"``
+    injection site on entry — host-side Python, so under ``jax.jit`` it
+    fires at trace time; per-request injection lives in the serve guard.
     """
     from repro.api import EdgeResult, detect_layout
 
+    if chaos is not None:
+        chaos.fire("dispatch.edge")
     config = config.resolved()
     if config.temporal:
         raise ValueError(
@@ -316,7 +322,7 @@ def edge(
         mag, comps, peak = _edge_sharded(
             x, config, backend, mesh, rgb=rgb, h=h, w=w,
             need_comps=need_comps, need_peak=need_peak,
-            tuning_cache=tuning_cache,
+            tuning_cache=tuning_cache, chaos=chaos,
         )
     else:
         bh = bw = None

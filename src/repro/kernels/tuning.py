@@ -31,6 +31,7 @@ committed, diffed, and shipped with a deployment image.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -85,6 +86,28 @@ class TuneKey:
             f"/{self.padding}/{self.layout}/{self.h}x{self.w}"
             f"/{self.devices}/{self.mesh}"
         )
+
+
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """Advisory exclusive lock on ``path`` (created on demand).
+
+    ``flock`` attaches to the open file description, so every locker —
+    process or thread — opens its own handle and they serialize. On
+    platforms without ``fcntl`` this degrades to no lock: saves stay
+    atomic (temp + rename), they just lose merge-with-peers.
+    """
+    try:
+        import fcntl
+    except ImportError:  # pragma: no cover — non-POSIX best effort
+        yield
+        return
+    with open(path, "a") as lk:
+        fcntl.flock(lk, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lk, fcntl.LOCK_UN)
 
 
 # v1/v2 key size segments ("5x5") -> operator registry names.
@@ -215,14 +238,36 @@ class TuningCache:
         return self
 
     def save(self) -> None:
+        """Atomically persist the cache, merging concurrent writers.
+
+        The write itself was always torn-file-proof (write-temp +
+        ``os.replace``), but two serving processes doing read-modify-write
+        could still lose each other's tunings — last replace wins. Under an
+        advisory lock on a ``.lock`` sidecar (``flock`` binds to the open
+        file description, so concurrent threads serialize too), the saver
+        re-reads the file and merges entry-by-entry: a key present on both
+        sides keeps the *faster* measured tuning, so the cache only ever
+        improves regardless of writer interleaving. The merge result also
+        replaces the in-memory view, so a saver sees its peers' entries.
+        """
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
-        payload = {"__meta__": {"version": self.VERSION}}
-        payload.update(dict(sorted(self._entries.items())))
-        tmp = f"{self.path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
-        os.replace(tmp, self.path)
+        with _file_lock(f"{self.path}.lock"):
+            on_disk = dict(TuningCache(self.path)._entries)
+            for k, v in self._entries.items():
+                cur = on_disk.get(k)
+                if cur is None or not self._valid_entry(cur) or (
+                    float(v.get("us", float("inf")))
+                    <= float(cur.get("us", float("inf")))
+                ):
+                    on_disk[k] = v
+            self._entries = on_disk
+            payload = {"__meta__": {"version": self.VERSION}}
+            payload.update(dict(sorted(self._entries.items())))
+            tmp = f"{self.path}.tmp.{os.getpid()}.{id(self)}"
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            os.replace(tmp, self.path)
 
     def lookup(self, key: TuneKey) -> Optional[Tuple[int, int]]:
         e = self._entries.get(key.to_str())

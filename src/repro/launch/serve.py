@@ -21,9 +21,21 @@ with host→device transfer and engine compute timed separately.
 Multi-device serving: ``--shard DxRxC`` (or the arch's ``sobel_shard``)
 spreads every request over the image mesh — D-way batch parallelism plus an
 RxC spatial grid with halo exchange (``repro.sharding.halo``). The loop is
-elastic: ``--simulate-loss-at N`` drops half the devices before request N,
-replans the mesh via ``runtime.elastic.plan_image_mesh`` (the spatial grid
-survives, the data axis shrinks), re-jits, and keeps serving.
+elastic: any device-loss event replans the mesh via
+``runtime.elastic.plan_image_mesh`` (the spatial grid survives, the data
+axis shrinks), re-jits, and keeps serving. ``--simulate-loss-at N`` is
+retained as sugar for the chaos plan entry ``loss@N``.
+
+Fault drills: ``--chaos PLAN`` threads a deterministic
+``repro.runtime.chaos.FaultPlan`` through the loop (DSL in that module's
+docstring) — injected step failures walk the ``serve/guard.py`` ladder
+(bounded retry → permanent bit-exact pallas→xla fallback), device-loss
+events trigger elastic replans, per-device/per-stream stragglers are
+detected by ``StepMonitor`` and excluded by ``StragglerPolicy``, corrupted
+stream frames are quarantined, and overloaded streams shed. Every mode
+prints a ``health:`` line accounting 100% of submitted work (served /
+retried / degraded / shed / quarantined); under ``--chaos`` an unaccounted
+frame is a hard error (non-zero exit) — the CI chaos lane's invariant.
 
 Latency methodology: compile iterations (the initial warm-up and the
 re-warm after a reshard) are excluded from the percentile window, and every
@@ -45,39 +57,77 @@ def _percentile(xs, q):
     return float(np.percentile(np.asarray(xs), q))
 
 
+def _parse_chaos(args):
+    """The merged FaultPlan for this run (``--chaos`` + legacy sugar)."""
+    from repro.runtime.chaos import DeviceLoss, FaultPlan
+
+    plan = FaultPlan.parse(args.chaos) if args.chaos else None
+    if args.simulate_loss_at:
+        # Legacy flag == the special case ``loss@N`` (drop half, keep >= 1).
+        base = plan or FaultPlan()
+        plan = FaultPlan(
+            base.faults + (DeviceLoss(step=args.simulate_loss_at),),
+            seed=base.seed,
+        )
+    return plan
+
+
 def serve_image(cfg, args) -> None:
-    """Edge-detection serving: one request = one batch of frames."""
+    """Edge-detection serving: one request = one batch of frames.
+
+    Each request runs under the degradation ladder (``serve/guard.py``):
+    retries with backoff, then a permanent bit-exact xla fallback. A
+    ``--chaos`` plan can shrink the device population mid-run (elastic
+    mesh replan + re-jit, generalizing ``--simulate-loss-at``) and
+    straggle individual devices (``slow@dK:MS``) — straggling devices are
+    flagged by ``StepMonitor`` and, after repeated strikes, excluded from
+    the mesh entirely (another replan), so the fleet heals itself.
+    """
     import jax.numpy as jnp
 
     from repro.api import ShardConfig, edge_detect
     from repro.data.synthetic import image_batch
+    from repro.kernels.dispatch import resolve_backend
     from repro.runtime.elastic import make_image_mesh, plan_image_mesh, reshard
+    from repro.runtime.monitor import StepMonitor
+    from repro.runtime.stragglers import StragglerPolicy
+    from repro.serve.guard import GuardPolicy, Health, StepGuard
     from repro.sharding.partition import layout_logical_axes
 
+    chaos = _parse_chaos(args)
     overrides = dict(with_max=True)
     if args.edges:
         # Detector traffic: fused NMS in the kernel pass, hysteresis linking
         # post-gather — requests return binary edge maps, not magnitude.
         overrides.update(nms=True, hysteresis=True)
     edge_cfg = cfg.edge_config(**overrides).resolved()
+    backend = resolve_backend(edge_cfg.backend)
+    fb_cfg = edge_cfg.replace(backend="xla") if backend != "xla" else None
     shard_spec = args.shard if args.shard is not None else cfg.sobel_shard
     shard = ShardConfig.parse(shard_spec) if shard_spec else None
-    devices = list(jax.devices())
+    all_devices = list(jax.devices())
+    pop = list(range(len(all_devices)))  # surviving device ids, d<i> tags
     if shard is not None:
         # Strict at startup: a spec that does not fit the machine is a
         # config error, not something to silently downgrade. The clamping
         # path below is reserved for elastic *loss* of devices mid-run.
-        shard.resolve(len(devices))
+        shard.resolve(len(pop))
     print(
         f"serving {cfg.name}: operator={edge_cfg.operator} "
         f"variant={edge_cfg.variant} directions={edge_cfg.directions} "
         f"backend={edge_cfg.backend} {cfg.image_h}x{cfg.image_w} "
-        f"devices={len(devices)} shard={shard_spec or 'none'}"
+        f"devices={len(pop)} shard={shard_spec or 'none'}"
         f"{' mode=edges (NMS+hysteresis)' if args.edges else ''}"
+        f"{f' chaos={args.chaos!r}' if args.chaos else ''}"
     )
 
+    health = Health(backend=backend)
+    monitor = StepMonitor(window=8)
+    straggler_policy = StragglerPolicy()
+    fns = {}  # current jitted steps; guard closures read through this
+
     def build_step(devs):
-        """(mesh, jitted step) for the current device population."""
+        """(Re)build mesh + jitted steps for the current device population."""
         if shard is None:
             mesh = None
         else:
@@ -86,7 +136,28 @@ def serve_image(cfg, args) -> None:
             )
             mesh = make_image_mesh(devs, rows=r, cols=c, data=d)
             print(f"image mesh: data={d} row={r} col={c} on {d * r * c} device(s)")
-        return mesh, jax.jit(lambda frames: edge_detect(frames, edge_cfg, mesh=mesh))
+        fns["primary"] = jax.jit(
+            lambda frames: edge_detect(frames, edge_cfg, mesh=mesh)
+        )
+        if fb_cfg is not None:
+            fns["fallback"] = jax.jit(
+                lambda frames: edge_detect(frames, fb_cfg, mesh=mesh)
+            )
+        return mesh
+
+    def _run(which, frames):
+        out = fns[which](frames)
+        jax.block_until_ready(out)
+        return out
+
+    guard = StepGuard(
+        lambda frames: _run("primary", frames),
+        fallback=(lambda frames: _run("fallback", frames))
+        if fb_cfg is not None else None,
+        policy=GuardPolicy(),
+        chaos=chaos,
+        seed=chaos.seed if chaos is not None else 0,
+    )
 
     def place(frames, mesh):
         if mesh is None:
@@ -95,30 +166,36 @@ def serve_image(cfg, args) -> None:
         return reshard(frames, layout_logical_axes(layout), mesh, frames,
                        rules="image")
 
-    def warm(step, mesh, req):
-        """Pay compile outside the latency window."""
+    def warm(mesh, req):
+        """Pay compile outside the latency window (ladder applies here too:
+        a persistent kernel failure degrades during warm-up, not mid-SLA)."""
         frames = jnp.asarray(image_batch(cfg, batch=args.slots, step=req)["images"])
-        jax.block_until_ready(step(place(frames, mesh)))
+        guard(place(frames, mesh))
 
-    mesh, step = build_step(devices)
-    warm(step, mesh, req=0)
+    def replan(keep, why):
+        nonlocal mesh, pop
+        survivors = pop[:keep]
+        print(f"{why}: {len(pop)} -> {len(survivors)} devices; "
+              f"replanning mesh and resharding")
+        pop = survivors
+        mesh = build_step([all_devices[i] for i in pop])
+        health.replans += 1
+        return mesh
+
+    mesh = build_step([all_devices[i] for i in pop])
+    warm(mesh, req=0)
 
     lat_ms = []
     xfer_ms = []
     px_total = 0
-    resharded = False
+    excluded = set()
     t_all = time.perf_counter()
     for req in range(args.requests):
-        if args.simulate_loss_at and req == args.simulate_loss_at:
-            survivors = devices[: max(1, len(devices) // 2)]
-            print(
-                f"simulated device loss: {len(devices)} -> {len(survivors)} "
-                f"devices; replanning mesh and resharding"
-            )
-            devices = survivors
-            mesh, step = build_step(devices)
-            warm(step, mesh, req=req)  # recompile excluded from the window
-            resharded = True
+        if chaos is not None:
+            loss = chaos.device_loss(req)
+            if loss is not None:
+                replan(loss.survivors(len(pop)), "device loss")
+                warm(mesh, req=req)  # recompile excluded from the window
         host = image_batch(cfg, batch=args.slots, step=req)["images"]
         # Transfer and compute are timed separately: the device placement is
         # block_until_ready'd on its own, so the compute percentiles measure
@@ -128,10 +205,37 @@ def serve_image(cfg, args) -> None:
         jax.block_until_ready(frames)
         xfer_ms.append((time.perf_counter() - t_x) * 1e3)
         t0 = time.perf_counter()
-        out = step(frames)
-        jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
-        lat_ms.append(dt * 1e3)
+        health.submitted += 1
+        out, kind, attempts = guard(frames)
+        base_s = time.perf_counter() - t0
+        health.record(kind)
+        health.retries += attempts
+        health.degraded = guard.degraded
+        if guard.degraded and fb_cfg is not None:
+            health.backend = "xla"
+        # Injected device stragglers: the slowest device gates the batch
+        # (one wall-clock sleep), but the monitor sees each device's own
+        # time so detection blames the right one.
+        lag = 0.0
+        if chaos is not None:
+            delays = [chaos.delay_s(f"d{i}", req) for i in pop]
+            lag = max(delays)
+            if lag > 0:
+                time.sleep(lag)
+            for i, own in zip(pop, delays):
+                monitor.record(f"d{i}", base_s + own)
+            for h in monitor.stragglers():
+                if h not in health.stragglers:
+                    health.stragglers.append(h)
+            for host_tag in straggler_policy.step(monitor)["exclude"]:
+                if host_tag in excluded or len(pop) <= 1:
+                    continue
+                excluded.add(host_tag)
+                health.excluded.append(host_tag)
+                pop = [i for i in pop if f"d{i}" != host_tag]
+                replan(len(pop), f"excluding straggler {host_tag}")
+                warm(mesh, req=req)
+        lat_ms.append(base_s * 1e3 + lag * 1e3)
         px_total += frames.shape[0] * cfg.image_h * cfg.image_w
     wall = time.perf_counter() - t_all
     if not lat_ms:  # --requests 0: nothing but the warm-up ran
@@ -139,7 +243,7 @@ def serve_image(cfg, args) -> None:
               f"use --requests >= 1 for steady-state numbers)")
         return
     mps = px_total / 1e6 / (sum(lat_ms) / 1e3)
-    tag = " (served through reshard)" if resharded else ""
+    tag = " (served through reshard)" if health.replans else ""
     if args.edges:
         # Observability for detector traffic: the edge-pixel density of the
         # last batch (a blank-camera or threshold misconfiguration shows up
@@ -152,6 +256,11 @@ def serve_image(cfg, args) -> None:
         f"p50={_percentile(xfer_ms, 50):.1f}ms "
         f"p95={_percentile(xfer_ms, 95):.1f}ms{tag}"
     )
+    print(health.summary())
+    if chaos is not None and health.unaccounted:
+        raise SystemExit(
+            f"chaos run left {health.unaccounted} request(s) unaccounted"
+        )
 
 
 def serve_streams(cfg, args) -> None:
@@ -163,11 +272,15 @@ def serve_streams(cfg, args) -> None:
     delta-skips unchanged tiles against each stream's cached state, and
     (with ``--decay > 0``) carries temporal hysteresis seeds across frames.
     Reports per-stream p50/p99 with transfer and compute split, plus the
-    delta-skip rate and fully-cached step count.
+    delta-skip rate and fully-cached step count. Under ``--chaos`` every
+    fault kind applies (stream stragglers are ``slow@s<sid>:MS``, frame
+    corruption ``corrupt@<sid>:<frame>``); the run ends with the engine's
+    health ledger and fails hard if any submitted frame went unaccounted.
     """
     from repro.data.synthetic import video_frame
     from repro.serve import StreamEngine, StreamRequest
 
+    chaos = _parse_chaos(args)
     overrides = dict(with_max=True, nms=True, hysteresis=True)
     if args.decay > 0:
         overrides.update(temporal=True, decay=args.decay)
@@ -179,6 +292,7 @@ def serve_streams(cfg, args) -> None:
         f"slots={args.slots} fps={args.fps} frames/stream={args.requests} "
         f"motion={args.motion}"
         f"{f' temporal decay={args.decay}' if args.decay > 0 else ''}"
+        f"{f' chaos={args.chaos!r}' if args.chaos else ''}"
     )
 
     def source(sid):
@@ -188,7 +302,7 @@ def serve_streams(cfg, args) -> None:
             return video_frame(cfg, stream=sid, step=i, motion=args.motion)
         return frame
 
-    engine = StreamEngine(edge_cfg, max_streams=args.slots)
+    engine = StreamEngine(edge_cfg, max_streams=args.slots, chaos=chaos)
     for sid in range(args.streams):
         engine.submit(StreamRequest(sid=sid, frames=source(sid), fps=args.fps))
     t0 = time.perf_counter()
@@ -205,9 +319,11 @@ def serve_streams(cfg, args) -> None:
         warm = min(2, max(0, st.frames - 1))
         comp = st.compute_ms[warm:] or st.compute_ms
         xfer = st.transfer_ms[warm:] or st.transfer_ms
+        drops = (f" shed={st.shed} quarantined={st.quarantined}"
+                 if st.shed or st.quarantined else "")
         print(
             f"  stream {sid}: {st.frames} frames, skip={st.skip_rate:.0%} "
-            f"cached={st.cached_steps}; compute "
+            f"cached={st.cached_steps};{drops} compute "
             f"p50={_percentile(comp, 50):.2f}ms p99={_percentile(comp, 99):.2f}ms; "
             f"transfer p50={_percentile(xfer, 50):.2f}ms "
             f"p99={_percentile(xfer, 99):.2f}ms "
@@ -216,6 +332,11 @@ def serve_streams(cfg, args) -> None:
     fps_served = frames_total / wall if wall > 0 else 0.0
     print(f"{len(stats)} streams x {args.requests} frames in {wall:.2f}s "
           f"-> {fps_served:.1f} frames/s aggregate")
+    print(engine.health.summary())
+    if chaos is not None and engine.health.unaccounted:
+        raise SystemExit(
+            f"chaos run left {engine.health.unaccounted} frame(s) unaccounted"
+        )
 
 
 def serve_lm(cfg, args) -> None:
@@ -268,7 +389,13 @@ def main() -> None:
                          "default: the arch's sobel_shard")
     ap.add_argument("--simulate-loss-at", type=int, default=0, metavar="N",
                     help="before request N, drop half the devices and "
-                         "reshard (elastic serving drill)")
+                         "reshard (sugar for the chaos plan entry 'loss@N')")
+    ap.add_argument("--chaos", default=None, metavar="PLAN",
+                    help="deterministic fault-injection plan (DSL in "
+                         "repro/runtime/chaos.py), e.g. "
+                         "'loss@4;fail@step:1x2;slow@s1:40;corrupt@0:3=nan'; "
+                         "the run prints a health ledger and exits non-zero "
+                         "if any submitted frame goes unaccounted")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke).replace(dtype="float32")
@@ -279,7 +406,7 @@ def main() -> None:
             serve_image(cfg, args)
         return
     for flag, on in (("--edges", args.edges), ("--shard", args.shard),
-                     ("--streams", args.streams)):
+                     ("--streams", args.streams), ("--chaos", args.chaos)):
         if on:
             raise SystemExit(
                 f"{flag} applies to image (detector) serving; arch "

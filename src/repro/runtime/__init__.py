@@ -1,3 +1,11 @@
+from repro.runtime.chaos import (  # noqa: F401
+    CorruptFrame,
+    DeviceLoss,
+    FaultPlan,
+    InjectedFault,
+    StepFail,
+    Straggler,
+)
 from repro.runtime.elastic import make_mesh, plan_mesh, reshard  # noqa: F401
 from repro.runtime.fault import FaultPolicy, FaultTolerantRunner, StepFailure  # noqa: F401
 from repro.runtime.monitor import StepMonitor  # noqa: F401

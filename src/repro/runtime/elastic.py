@@ -25,8 +25,6 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.sharding.partition import shardings_for_tree
-
 __all__ = [
     "plan_mesh",
     "make_mesh",
@@ -106,5 +104,10 @@ def reshard(
     explicit dict); the default merged table resolves both LM and image
     logical axes.
     """
+    # Deferred: sharding.halo imports this module for the image-mesh
+    # planner, so a module-level import here would make ``import
+    # repro.runtime`` order-dependent (a cycle through sharding.partition).
+    from repro.sharding.partition import shardings_for_tree
+
     shardings = shardings_for_tree(axes_tree, new_mesh, shape_tree, rules=rules)
     return jax.tree.map(jax.device_put, state, shardings)

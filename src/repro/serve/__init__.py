@@ -1,4 +1,12 @@
 from repro.serve.engine import Engine, Request  # noqa: F401
+from repro.serve.guard import (  # noqa: F401
+    GuardPolicy,
+    Health,
+    Outcome,
+    Shedder,
+    StepGuard,
+    quarantine_reason,
+)
 from repro.serve.paged import PagedKVCache  # noqa: F401
 from repro.serve.streams import (  # noqa: F401
     StreamEngine,

@@ -29,6 +29,25 @@ state is temporal edge state instead of a KV cache:
 Batched streams share their group's step latency — a reported per-stream
 percentile is the latency of the batch the frame rode in, which is the
 number a deadline cares about.
+
+**Fault tolerance.** Every group serve runs under the degradation ladder
+(:mod:`repro.serve.guard`): bounded retry with backoff, then a permanent
+bit-exact pallas→xla backend fallback. Every pulled frame is screened —
+corrupted frames (NaN/Inf, changed dtype/shape mid-stream) are quarantined
+per-stream instead of poisoning their batch group, and a stream that keeps
+blowing its latency budget sheds its oldest pending frame (hysteresis via
+:class:`~repro.serve.guard.Shedder`). A :class:`~repro.runtime.monitor
+.StepMonitor` + :class:`~repro.runtime.stragglers.StragglerPolicy` watch
+per-stream step times; a straggling stream is excluded into a solo batch
+group after repeated strikes so it stops dragging its neighbors. The
+engine's :class:`~repro.serve.guard.Health` ledger accounts every
+submitted frame as exactly one of served / retried / degraded / shed /
+quarantined, and a :class:`~repro.runtime.chaos.FaultPlan` injects all of
+the above deterministically for tests and ``serve.py --chaos``.
+
+A stream whose *source iterator raises* mid-run is retired with the error
+recorded in ``health.errors`` — one broken camera never takes down the
+engine (frames it already served stay served and accounted).
 """
 from __future__ import annotations
 
@@ -44,6 +63,17 @@ import numpy as np
 from repro.api import EdgeConfig, StreamState, detect_layout
 from repro.kernels import dispatch
 from repro.kernels.edge import kernel_dtype
+from repro.runtime.chaos import FaultPlan
+from repro.runtime.monitor import StepMonitor
+from repro.runtime.stragglers import StragglerPolicy
+from repro.serve.guard import (
+    GuardPolicy,
+    Health,
+    Outcome,
+    Shedder,
+    StepGuard,
+    quarantine_reason,
+)
 
 __all__ = ["StreamRequest", "StreamStats", "StreamEngine"]
 
@@ -86,12 +116,21 @@ class StreamRequest:
 
 @dataclasses.dataclass
 class StreamStats:
-    """Per-stream serving record (returned by ``StreamEngine.run``)."""
+    """Per-stream serving record (returned by ``StreamEngine.run``).
+
+    ``frames`` counts frames actually served (on any ladder rung);
+    ``submitted`` counts every frame pulled from the source, so
+    ``submitted == frames + shed + quarantined`` always holds — the
+    per-stream slice of the engine's health invariant.
+    """
 
     sid: int
     fps: float
     shape: tuple = ()
     frames: int = 0
+    submitted: int = 0
+    shed: int = 0                    # dropped under latency pressure
+    quarantined: int = 0             # dropped as corrupt (NaN/dtype/shape)
     tiles_per_frame: int = 0
     skipped_tiles: int = 0
     cached_steps: int = 0            # steps served with no kernel launch
@@ -121,13 +160,20 @@ class _Slot:
     state: Optional[StreamState]
     stats: StreamStats
     next_due: float
+    shedder: Shedder
     pending: Optional[np.ndarray] = None   # next frame, pulled at admit
+    pending_idx: int = -1                  # source index of ``pending``
+    frame_idx: int = 0                     # source frames pulled so far
+    dtype: Optional[np.dtype] = None       # pinned by the first good frame
     layout: str = "HW"
+    solo: bool = False                     # excluded straggler: own group
 
-    @property
     def group_key(self) -> tuple:
-        return (self.pending.shape, str(self.pending.dtype),
-                self.state is None or not self.state.initialized)
+        key = (self.pending.shape, str(self.pending.dtype),
+               self.state is None or not self.state.initialized)
+        # An excluded straggler is batched alone so its injected/organic
+        # slowness drags only itself, not its former groupmates.
+        return key + (("solo", self.req.sid),) if self.solo else key
 
 
 class StreamEngine:
@@ -139,12 +185,22 @@ class StreamEngine:
     each stream's outputs (host copies of magnitude/edges + skip counts)
     on its stats record — for tests and small runs, not production.
 
+    ``chaos`` threads a :class:`~repro.runtime.chaos.FaultPlan` through the
+    serving loop (site ``"step"`` per group serve, ``"fallback"`` on the
+    degraded backend, plus frame corruption, per-stream straggler delay,
+    and device-loss events keyed on the engine step). ``guard`` tunes the
+    degradation ladder; ``fallback=False`` disables the pallas→xla rung
+    (it is automatically absent when the configured backend already
+    resolves to xla). ``engine.health`` / ``engine.outcomes`` carry the
+    run's accounting.
+
     Usage::
 
         eng = StreamEngine(EdgeConfig(temporal=True, decay=0.9))
         eng.submit(StreamRequest(sid=0, frames=camera0, fps=30))
         eng.submit(StreamRequest(sid=1, frames=camera1, fps=15))
         stats = eng.run()          # drive until every stream is exhausted
+        print(eng.health.summary())
     """
 
     def __init__(
@@ -153,16 +209,48 @@ class StreamEngine:
         *,
         max_streams: int = 8,
         collect: bool = False,
+        chaos: Optional[FaultPlan] = None,
+        guard: Optional[GuardPolicy] = None,
+        fallback: bool = True,
+        monitor: Optional[StepMonitor] = None,
+        stragglers: Optional[StragglerPolicy] = None,
     ):
         self.config = (config or EdgeConfig()).resolved()
         if max_streams < 1:
             raise ValueError(f"max_streams={max_streams} must be >= 1")
         self.max_streams = max_streams
         self.collect = collect
+        self.chaos = chaos
+        self.guard_policy = guard or GuardPolicy()
         self.slots: List[Optional[_Slot]] = [None] * max_streams
         self.queue: collections.deque = collections.deque()
         self.finished: List[StreamStats] = []
         self.clock = 0.0
+        self.engine_step = 0
+        backend = dispatch.resolve_backend(self.config.backend)
+        self._fb_config = (
+            self.config.replace(backend="xla")
+            if fallback and backend != "xla" else None
+        )
+        self.health = Health(backend=backend)
+        self.outcomes: List[Outcome] = []
+        self.monitor = monitor or StepMonitor(window=8)
+        self.straggler_policy = stragglers or StragglerPolicy()
+        self._excluded: set = set()
+        self._make_jits()
+        self._guard = StepGuard(
+            lambda *a: self._exec_group(self.config, *a),
+            fallback=(
+                (lambda *a: self._exec_group(self._fb_config, *a))
+                if self._fb_config is not None else None
+            ),
+            policy=self.guard_policy,
+            chaos=chaos,
+            seed=chaos.seed if chaos is not None else 0,
+        )
+
+    def _make_jits(self) -> None:
+        """(Re)build the jitted step functions — fresh after device loss."""
         self._jit_delta = jax.jit(
             dispatch.stream_delta, static_argnames=("rgb",)
         )
@@ -187,25 +275,87 @@ class StreamEngine:
     def active(self) -> List[int]:
         return [s.req.sid for s in self.slots if s is not None]
 
+    # -- frame intake: corruption screen + quarantine + shedding -------------
+    def _pull(self, slot: _Slot) -> Optional[np.ndarray]:
+        """Next *servable* frame for ``slot`` (None = stream over).
+
+        Every frame pulled from the source counts as submitted; the ones
+        that never reach a batch are terminally accounted right here —
+        corrupted frames are quarantined against the stream's pinned
+        shape/dtype contract (plus the intrinsic NaN/Inf and invalid-dtype
+        checks), and while the stream's :class:`Shedder` says it is behind
+        budget, the oldest pending frame is shed to let it catch up.
+        """
+        sid = slot.req.sid
+        while True:
+            try:
+                frame = next(slot.it, None)
+            except Exception as err:  # noqa: BLE001 — isolate broken sources
+                self.health.errors.append(
+                    f"stream {sid}: source raised {type(err).__name__}: {err}"
+                )
+                return None
+            if frame is None:
+                return None
+            idx = slot.frame_idx
+            slot.frame_idx += 1
+            self.health.submitted += 1
+            slot.stats.submitted += 1
+            frame = np.asarray(frame)
+            if self.chaos is not None:
+                mode = self.chaos.corruption(sid, idx)
+                if mode is not None:
+                    frame = self.chaos.corrupt(frame, mode)
+            reason = quarantine_reason(
+                frame,
+                shape=slot.stats.shape or None,
+                dtype=slot.dtype,
+            )
+            if reason is not None:
+                self._account("quarantined", slot, idx, detail=reason)
+                slot.stats.quarantined += 1
+                continue
+            if slot.shedder.shedding:
+                self._account("shed", slot, idx, detail="latency budget")
+                slot.stats.shed += 1
+                slot.shedder.shed_one()
+                continue
+            slot.pending_idx = idx
+            return frame
+
+    def _account(self, kind: str, slot: _Slot, idx: int, *,
+                 detail: str = "", attempts: int = 0,
+                 latency_ms: float = 0.0) -> None:
+        self.health.record(kind)
+        self.outcomes.append(Outcome(
+            kind=kind, step=self.engine_step, stream=slot.req.sid,
+            frame=idx, attempts=attempts, latency_ms=latency_ms,
+            backend=self.health.backend if kind not in ("shed", "quarantined")
+            else None,
+            detail=detail,
+        ))
+
     # -- internals -----------------------------------------------------------
     def _admit(self) -> None:
         for i in range(self.max_streams):
             if self.slots[i] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            it = req.frame_iter()
-            first = next(it, None)
-            stats = StreamStats(sid=req.sid, fps=req.fps)
-            if first is None:                      # empty stream: trivially done
-                self.finished.append(stats)
-                continue
-            first = np.asarray(first)
-            stats.shape = first.shape
-            self.slots[i] = _Slot(
-                req=req, it=it, state=None, stats=stats,
-                next_due=self.clock, pending=first,
-                layout="N" + detect_layout(first.shape),
+            slot = _Slot(
+                req=req, it=req.frame_iter(), state=None,
+                stats=StreamStats(sid=req.sid, fps=req.fps),
+                next_due=self.clock,
+                shedder=Shedder(shed_after=self.guard_policy.shed_after),
             )
+            first = self._pull(slot)
+            if first is None:          # empty / all-quarantined: trivially done
+                self.finished.append(slot.stats)
+                continue
+            slot.pending = first
+            slot.stats.shape = first.shape   # pins the stream's contract
+            slot.dtype = first.dtype
+            slot.layout = "N" + detect_layout(first.shape)
+            self.slots[i] = slot
 
     def _retire(self, i: int) -> None:
         self.finished.append(self.slots[i].stats)
@@ -217,45 +367,64 @@ class StreamEngine:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return bool(self.queue)
+        if self.chaos is not None:
+            loss = self.chaos.device_loss(self.engine_step)
+            if loss is not None:
+                # Single-host streaming: recovery is a re-jit on the
+                # surviving population (the mesh replan analog lives in the
+                # sharded serve loop, launch/serve.py).
+                self._make_jits()
+                self.health.replans += 1
         self.clock = min(self.slots[i].next_due for i in active)
         due = [i for i in active
                if self.slots[i].next_due <= self.clock + 1e-9]
         groups: Dict[tuple, List[int]] = collections.defaultdict(list)
         for i in due:
-            groups[self.slots[i].group_key].append(i)
+            groups[self.slots[i].group_key()].append(i)
         for members in groups.values():
             self._serve_group(members)
+        self._police_stragglers()
+        self.engine_step += 1
         for i in due:
             slot = self.slots[i]
             if slot is None:
                 continue                            # retired in this step
             slot.next_due += 1.0 / slot.req.fps
-            slot.pending = next(slot.it, None)
+            slot.pending = self._pull(slot)
             if slot.pending is None:
                 self._retire(i)
-            elif slot.pending.shape != slot.stats.shape:
-                raise ValueError(
-                    f"stream {slot.req.sid}: frame shape changed "
-                    f"{slot.stats.shape} -> {slot.pending.shape}; a stream "
-                    f"must keep one resolution (open a new stream instead)"
-                )
         return True
 
-    def _serve_group(self, members: List[int]) -> None:
-        slots = [self.slots[i] for i in members]
-        cfg = self.config
-        layout = slots[0].layout
+    def _police_stragglers(self) -> None:
+        """Feed the monitor's verdicts to the mitigation policy.
+
+        A stream flagged ``strikes_to_exclude`` steps in a row is moved to
+        a solo batch group — the streaming analog of dropping a straggler
+        host from the mesh: its neighbors stop paying its latency, it
+        keeps being served (and shed, if it cannot keep up even alone).
+        """
+        flagged = self.monitor.stragglers()
+        for h in flagged:
+            if h not in self.health.stragglers:
+                self.health.stragglers.append(h)
+        decision = self.straggler_policy.step(self.monitor)
+        for host in decision["exclude"]:
+            if host in self._excluded:
+                continue
+            self._excluded.add(host)
+            self.health.excluded.append(host)
+            for s in self.slots:
+                if s is not None and f"s{s.req.sid}" == host:
+                    s.solo = True
+
+    def _exec_group(self, cfg, frames, state, layout):
+        """One guarded group serve: delta host-check, cached or masked step.
+
+        Runs under :class:`~repro.serve.guard.StepGuard` — ``cfg`` is the
+        primary or fallback config depending on the rung. Blocks on the
+        result so failures surface here, inside the retry ladder.
+        """
         rgb = layout.endswith("C")
-
-        t0 = time.perf_counter()
-        frames = jax.device_put(
-            kernel_dtype(jnp.asarray(np.stack([s.pending for s in slots])))
-        )
-        jax.block_until_ready(frames)
-        transfer_ms = (time.perf_counter() - t0) * 1e3
-
-        t1 = time.perf_counter()
-        state = self._group_state(slots, frames)
         if state.initialized:
             changed, _skipped = self._jit_delta(frames, state, cfg, rgb=rgb)
             static = not bool(jax.device_get(jnp.any(changed)))
@@ -267,14 +436,49 @@ class StreamEngine:
             # epilogue runs. Bit-identical to the masked kernel on the
             # same frames, and the XLA backend's real delta win.
             result, new_state = self._jit_cached(cfg, state, layout=layout)
-            for s in slots:
-                s.stats.cached_steps += 1
         else:
             result, new_state = self._jit_step(
                 frames, cfg, state, layout=layout, changed=changed
             )
         jax.block_until_ready(result)
+        return result, new_state, static
+
+    def _serve_group(self, members: List[int]) -> None:
+        slots = [self.slots[i] for i in members]
+        layout = slots[0].layout
+
+        t0 = time.perf_counter()
+        frames = jax.device_put(
+            kernel_dtype(jnp.asarray(np.stack([s.pending for s in slots])))
+        )
+        jax.block_until_ready(frames)
+        transfer_ms = (time.perf_counter() - t0) * 1e3
+
+        t1 = time.perf_counter()
+        state = self._group_state(slots, frames)
+        (result, new_state, cached), kind, attempts = self._guard(
+            frames, state, layout
+        )
         compute_ms = (time.perf_counter() - t1) * 1e3
+        self.health.retries += attempts
+        self.health.degraded = self._guard.degraded
+        if self._guard.degraded and self._fb_config is not None:
+            self.health.backend = "xla"
+
+        # Injected straggler drag: the slowest member delays the whole
+        # batch (shared wall clock), but the monitor is fed each member's
+        # own time — base plus its own injected delay — so detection
+        # attributes the lag to the right stream, not the whole group.
+        lag = 0.0
+        if self.chaos is not None:
+            delays = [self.chaos.delay_s(f"s{s.req.sid}", s.stats.frames)
+                      for s in slots]
+            lag = max(delays)
+            if lag > 0:
+                time.sleep(lag)
+        else:
+            delays = [0.0] * len(slots)
+        group_ms = compute_ms + lag * 1e3
 
         skipped = np.asarray(result.skipped)
         for b, s in enumerate(slots):
@@ -282,10 +486,23 @@ class StreamEngine:
             st = s.stats
             st.frames += 1
             st.tiles_per_frame = s.state.tiles
+            if cached:
+                st.cached_steps += 1
             if st.frames > 1:            # frame 0 is the cold cache fill
                 st.skipped_tiles += int(skipped[b])
             st.transfer_ms.append(transfer_ms)
-            st.compute_ms.append(compute_ms)
+            st.compute_ms.append(group_ms)
+            self.monitor.record(
+                f"s{s.req.sid}", compute_ms / 1e3 + delays[b]
+            )
+            self._account(kind, s, s.pending_idx, attempts=attempts,
+                          latency_ms=group_ms,
+                          detail=self._guard.last_error or "" if attempts
+                          else "")
+            if st.frames > self.guard_policy.warm_frames:
+                budget = self.guard_policy.deadline_ms or st.budget_ms
+                if s.shedder.observe(group_ms, budget):
+                    self.health.deadline_violations += 1
             if self.collect:
                 st.outputs.append(self._host_outputs(result, b))
 

@@ -224,6 +224,7 @@ def sharded_edge(
     rgb: bool = False,
     need_comps: bool = False,
     need_peak: bool = False,
+    chaos=None,
 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], Optional[jnp.ndarray]]:
     """Run a per-shard edge compute over the image mesh, bit-exact with the
     single-device engine.
@@ -242,12 +243,17 @@ def sharded_edge(
         NMS thin map, in which case the third element carries the un-thinned
         magnitude as the peak source (``None`` = reduce the primary).
       need_comps / need_peak: which extras to assemble.
+      chaos: optional ``repro.runtime.chaos.FaultPlan``; fires the
+        ``"halo.sharded_edge"`` injection site before the shard_map launch
+        (host-side — at trace time under ``jax.jit``).
 
     Returns:
       ``(primary (B, H, W), components (B, D, H, W) | None,
       peak (B,) | None)`` — the peak is the exact per-image max of the
       unnormalized magnitude over valid pixels.
     """
+    if chaos is not None:
+        chaos.fire("halo.sharded_edge")
     d = mesh.shape["data"]
     rr = mesh.shape["row"]
     cc = mesh.shape["col"]

@@ -65,6 +65,39 @@ def test_legacy_shims_blank_frames(name, backend):
             assert _finite(out) and np.all(np.asarray(out) == 0.0), name
 
 
+@pytest.mark.parametrize("mode", ["nan", "inf"])
+def test_stream_engine_quarantines_nonfinite_frames(mode):
+    """A NaN/Inf frame arriving mid-stream is quarantined per-stream — the
+    engine's served outputs stay finite and the neighbors' frames are
+    untouched (the corruption never reaches a batched kernel call)."""
+    from repro.runtime.chaos import CorruptFrame, FaultPlan
+    from repro.serve import StreamEngine, StreamRequest
+
+    rng = np.random.default_rng(5)
+    # f32 source frames: corruption then trips the non-finite screen
+    # itself (on a u8 stream the dtype-contract check would fire first,
+    # since NaN/Inf cannot ride in a u8 frame at all).
+    fs = [rng.integers(0, 256, (24, 20)).astype(np.float32)
+          for _ in range(4)]
+    plan = FaultPlan([CorruptFrame(stream=0, frame=1, mode=mode)], seed=2)
+    eng = StreamEngine(
+        EdgeConfig(nms=True, hysteresis=True, backend="xla"),
+        collect=True, chaos=plan,
+    )
+    eng.submit(StreamRequest(sid=0, frames=list(fs)))
+    eng.submit(StreamRequest(sid=1, frames=list(fs)))
+    stats = eng.run()
+    assert stats[0].quarantined == 1 and stats[0].frames == 3
+    assert stats[1].quarantined == 0 and stats[1].frames == 4
+    assert eng.health.unaccounted == 0
+    q = [o for o in eng.outcomes if o.kind == "quarantined"]
+    assert len(q) == 1 and "non-finite" in q[0].detail
+    for st in stats.values():
+        for out in st.outputs:
+            assert _finite(out["magnitude"])
+            assert _finite(out["edges"])
+
+
 @pytest.mark.parametrize("edges", [False, True])
 def test_serve_traffic_path_blank_frames(edges):
     """The exact EdgeConfig the serve loop builds (normalize + with_max,

@@ -134,7 +134,7 @@ main()
 @slow_host
 def test_serve_survives_device_loss():
     out = _run(SERVE_LOSS)
-    assert "simulated device loss: 8 -> 4" in out, out
+    assert "device loss: 8 -> 4 devices" in out, out
     assert "data=1 row=2 col=2" in out, out       # spatial grid survived
     assert "served through reshard" in out, out   # traffic run completed
 

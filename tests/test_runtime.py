@@ -1,9 +1,13 @@
-"""Straggler detection/mitigation + elastic mesh planning."""
+"""Straggler detection/mitigation, retry backoff, checkpoint-restart
+semantics, and elastic mesh planning."""
+import random
+
 import numpy as np
 import pytest
 
 from repro.runtime import StepMonitor, StragglerPolicy, plan_mesh
 from repro.runtime.elastic import make_mesh
+from repro.runtime.fault import FaultPolicy, FaultTolerantRunner, StepFailure
 
 
 def test_straggler_detection():
@@ -66,3 +70,81 @@ def test_plan_mesh_elastic(n, model, pods, expect):
 def test_make_mesh_single_device():
     mesh = make_mesh(model_parallel=1)
     assert int(np.prod(list(mesh.shape.values()))) == 1
+
+
+# ------------------------------------------------------- retry backoff --
+
+def test_backoff_exponential_and_capped():
+    fp = FaultPolicy(backoff_s=0.01, backoff_mult=2.0, backoff_max_s=0.05)
+    got = [fp.backoff_for(r) for r in range(1, 6)]
+    assert got == pytest.approx([0.01, 0.02, 0.04, 0.05, 0.05])
+
+
+def test_backoff_zero_base_is_free():
+    fp = FaultPolicy(backoff_s=0.0)
+    assert fp.backoff_for(1) == 0.0 and fp.backoff_for(10) == 0.0
+    assert FaultPolicy(backoff_s=0.01).backoff_for(0) == 0.0
+
+
+def test_backoff_jitter_bounded_and_seeded():
+    fp = FaultPolicy(backoff_s=0.01, backoff_mult=2.0, backoff_max_s=1.0,
+                     jitter=0.5)
+    for retry in (1, 2, 3):
+        base = 0.01 * 2.0 ** (retry - 1)
+        vals = {fp.backoff_for(retry, random.Random(s)) for s in range(20)}
+        assert all(base <= v <= base * 1.5 for v in vals)
+        assert len(vals) > 1                    # jitter actually varies
+    # same rng seed -> same delay: retry storms decorrelate per-runner,
+    # but a given runner's sequence replays deterministically
+    assert fp.backoff_for(2, random.Random(7)) == \
+        fp.backoff_for(2, random.Random(7))
+    # jitter without an rng degrades to the deterministic base
+    assert fp.backoff_for(2) == pytest.approx(0.02)
+
+
+# -------------------------------------- checkpoint-restart reset contract --
+
+def test_restore_moves_state_and_step_backwards():
+    """Regression for the documented restore contract: the runner resumes
+    verbatim from whatever (state, step) ``restore_fn`` produced — both
+    may move backwards — with a fresh per-step retry budget, while
+    ``total_failures`` (the lifetime budget) keeps accumulating."""
+    restores = []
+
+    def restore():
+        restores.append(True)
+        return "ckpt-state", 3                  # behind the failing step
+
+    runner = FaultTolerantRunner(
+        FaultPolicy(max_retries_per_step=1, max_total_failures=16),
+        restore_fn=restore,
+    )
+    calls = []
+
+    def step_fn(state, step):
+        calls.append((state, step))
+        # fail persistently at step 7 until we are restored to step 3
+        if step == 7 and state != "ckpt-state":
+            raise StepFailure("flaky at 7")
+        return f"ok@{step}"
+
+    state, step, result = runner.run_step(step_fn, "live-state", 7)
+    assert restores == [True]
+    assert runner.restarts == 1
+    assert runner.total_failures == 2           # 1 try + 1 retry, no reset
+    # resumed verbatim from the checkpoint pair: step went 7 -> 3
+    assert calls[-1] == ("ckpt-state", 3)
+    assert (state, step, result) == ("ckpt-state", 4, "ok@3")
+    # the retry counter reset after restore: a later transient failure
+    # gets the full per-step budget again instead of restoring immediately
+    flaky = {"left": 1}
+
+    def flaky_fn(state, step):
+        if flaky["left"]:
+            flaky["left"] -= 1
+            raise StepFailure("transient")
+        return "ok"
+
+    state, step, result = runner.run_step(flaky_fn, state, step)
+    assert result == "ok" and restores == [True]   # no second restore
+    assert runner.total_failures == 3              # still accumulating

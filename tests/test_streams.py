@@ -35,7 +35,8 @@ from repro.api import (
     edge_detect_stream,
 )
 from repro.kernels import dispatch
-from repro.serve import StreamEngine, StreamRequest
+from repro.runtime.chaos import FaultPlan, Straggler
+from repro.serve import GuardPolicy, StreamEngine, StreamRequest
 
 RNG = np.random.default_rng(7)
 
@@ -354,13 +355,24 @@ class TestStreamEngine:
             np.testing.assert_array_equal(st.outputs[t]["edges"],
                                           np.asarray(ref.edges))
 
-    def test_frame_shape_change_rejected(self):
+    def test_frame_shape_change_quarantined(self):
+        """A mid-stream shape change is a corrupted frame, not a fatal
+        error: the frame is quarantined against the stream's pinned
+        contract and the stream keeps serving."""
         cfg = EdgeConfig(backend="xla")
-        eng = StreamEngine(cfg)
-        eng.submit(StreamRequest(sid=0, frames=_list_source(
-            [_frame(seed=130), _frame(h=24, w=24, seed=131)])))
-        with pytest.raises(ValueError, match="shape changed"):
-            eng.run()
+        eng = StreamEngine(cfg, collect=True)
+        fs = [_frame(seed=130), _frame(h=24, w=24, seed=131),
+              _frame(seed=132)]
+        eng.submit(StreamRequest(sid=0, frames=_list_source(fs)))
+        st = eng.run()[0]
+        assert st.frames == 2 and st.quarantined == 1 and st.submitted == 3
+        assert eng.health.unaccounted == 0
+        q = [o for o in eng.outcomes if o.kind == "quarantined"]
+        assert len(q) == 1 and "shape changed" in q[0].detail
+        for out, i in zip(st.outputs, (0, 2)):   # 1 was dropped
+            ref = edge_detect(fs[i], cfg)
+            np.testing.assert_array_equal(out["magnitude"],
+                                          np.asarray(ref.magnitude))
 
     def test_bad_fps_rejected(self):
         with pytest.raises(ValueError, match="fps"):
@@ -374,6 +386,67 @@ class TestStreamEngine:
         st = eng.run()[0]
         assert len(st.transfer_ms) == 3 and len(st.compute_ms) == 3
         assert all(x >= 0 for x in st.transfer_ms + st.compute_ms)
+
+    def test_overload_submit_beyond_capacity_all_drain(self):
+        """More streams than slots: the queue holds the overflow and every
+        stream is admitted, served completely, and accounted as slots
+        free up."""
+        cfg = EdgeConfig(backend="xla", block_h=16, block_w=16)
+        n_streams, n_frames = 6, 2
+        eng = StreamEngine(cfg, max_streams=2)
+        for sid in range(n_streams):
+            eng.submit(StreamRequest(sid=sid, frames=_list_source(
+                [_frame(seed=200 + sid)] * n_frames)))
+        stats = eng.run()
+        assert sorted(stats) == list(range(n_streams))
+        assert all(st.frames == n_frames for st in stats.values())
+        assert eng.health.submitted == n_streams * n_frames
+        assert eng.health.unaccounted == 0
+        assert eng.health.counts["served"] == n_streams * n_frames
+
+    def test_broken_source_is_isolated(self):
+        """A source iterator raising mid-run retires its own stream (error
+        recorded on the health ledger) without disturbing neighbors or the
+        accounting invariant."""
+        cfg = EdgeConfig(backend="xla")
+
+        def broken():
+            yield _frame(seed=210)
+            raise RuntimeError("camera unplugged")
+
+        good = [_frame(seed=211 + t) for t in range(3)]
+        eng = StreamEngine(cfg, collect=True)
+        eng.submit(StreamRequest(sid=0, frames=broken()))
+        eng.submit(StreamRequest(sid=1, frames=_list_source(good)))
+        stats = eng.run()
+        assert stats[0].frames == 1          # served what arrived
+        assert stats[1].frames == 3          # neighbor unaffected
+        assert eng.health.unaccounted == 0
+        assert any("camera unplugged" in e for e in eng.health.errors)
+        for t, f in enumerate(good):
+            ref = edge_detect(f, cfg)
+            np.testing.assert_array_equal(stats[1].outputs[t]["magnitude"],
+                                          np.asarray(ref.magnitude))
+
+    def test_deadline_shedding_accounts_on_stream_stats(self):
+        """Sustained pressure (injected 50ms lag vs a 5ms deadline) sheds
+        frames; the per-stream stats keep the submitted = frames + shed +
+        quarantined invariant."""
+        cfg = EdgeConfig(backend="xla")
+        n = 10
+        plan = FaultPlan([Straggler(host="s0", delay_ms=50.0)])
+        eng = StreamEngine(
+            cfg, chaos=plan,
+            guard=GuardPolicy(deadline_ms=5.0, warm_frames=1),
+        )
+        eng.submit(StreamRequest(sid=0, frames=_list_source(
+            [_frame(seed=220)] * n)))
+        st = eng.run()[0]
+        assert st.shed >= 1
+        assert st.submitted == n
+        assert st.submitted == st.frames + st.shed + st.quarantined
+        assert eng.health.deadline_violations >= 3
+        assert eng.health.unaccounted == 0
 
     @slow_host
     def test_cached_steps_are_cheaper(self):

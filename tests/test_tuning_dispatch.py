@@ -49,6 +49,66 @@ def test_measure_us_positive():
     assert us > 0
 
 
+def _key(i):
+    return tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2",
+                          64 + i, 64)
+
+
+def test_save_merges_concurrent_writers(tmp_path):
+    """Lost-update regression: N writers, each holding its own cache view
+    of the same file, record distinct keys and save concurrently. Every
+    key must survive — save() merges with the file under the lock instead
+    of blind last-replace-wins."""
+    import threading
+
+    path = str(tmp_path / "blocks.json")
+    n = 8
+    caches = [tuning.TuningCache(path) for _ in range(n)]
+    for i, c in enumerate(caches):
+        c.record(_key(i), 8, 32, us=100.0 + i)
+    barrier = threading.Barrier(n)
+
+    def writer(c):
+        barrier.wait()
+        c.save()
+
+    threads = [threading.Thread(target=writer, args=(c,)) for c in caches]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    merged = tuning.TuningCache(path)
+    assert len(merged) == n
+    for i in range(n):
+        assert merged.lookup(_key(i)) == (8, 32)
+    with open(path) as f:
+        assert json.load(f)["__meta__"]["version"] == tuning.TuningCache.VERSION
+
+
+def test_save_merge_keeps_faster_tuning(tmp_path):
+    """Two writers tuned the SAME key: the merge keeps the faster
+    measurement whichever order the saves land in."""
+    path = str(tmp_path / "blocks.json")
+    slow = tuning.TuningCache(path)
+    fast = tuning.TuningCache(path)
+    slow.record(_key(0), 16, 64, us=500.0)
+    fast.record(_key(0), 8, 32, us=50.0)
+    slow.save()
+    fast.save()
+    assert tuning.TuningCache(path).lookup(_key(0)) == (8, 32)
+
+    path2 = str(tmp_path / "blocks2.json")
+    slow = tuning.TuningCache(path2)
+    fast = tuning.TuningCache(path2)
+    slow.record(_key(0), 16, 64, us=500.0)
+    fast.record(_key(0), 8, 32, us=50.0)
+    fast.save()
+    slow.save()                     # slower result arrives second: ignored
+    assert tuning.TuningCache(path2).lookup(_key(0)) == (8, 32)
+    # and the losing saver's in-memory view was refreshed with the winner
+    assert slow.lookup(_key(0)) == (8, 32)
+
+
 # ---------------------------------------------------------------------------
 # Autotune + cache round-trip
 # ---------------------------------------------------------------------------
