@@ -7,7 +7,6 @@ from __future__ import annotations
 from typing import Dict, List
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api import EdgeConfig, edge_detect
 from repro.core.ssim import ssim

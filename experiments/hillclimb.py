@@ -17,7 +17,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import model_flops
 from repro.roofline.constants import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.roofline.hlo import module_cost
-from repro.sharding.rules import TRAIN_RULES, get_rules
+from repro.sharding.rules import get_rules
 
 # --- named experiment variants (hypothesis -> concrete override) -------------
 

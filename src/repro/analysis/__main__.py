@@ -1,0 +1,97 @@
+"""CLI for the kernel contract analyzer.
+
+    python -m repro.analysis                # fast sweep (2 operators)
+    python -m repro.analysis --all          # full registry + export battery
+    python -m repro.analysis --all --baseline analysis_baseline.json
+    python -m repro.analysis --write-baseline analysis_baseline.json
+
+Exit codes: 0 = no new violations, 1 = new violations, 2 = analyzer
+misuse/internal error. CI runs the ``--all`` form as the required
+``analysis`` job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.analysis import AnalysisError, analyze, load_baseline, write_baseline
+
+
+def _csv(value: Optional[str]) -> Optional[List[str]]:
+    if value is None:
+        return None
+    return [v.strip() for v in value.split(",") if v.strip()]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract analyzer for the fused edge engine.",
+    )
+    p.add_argument(
+        "--all",
+        action="store_true",
+        dest="full",
+        help="full sweep: every registered operator, all paddings on the "
+        "plain/NMS paths, TPU Mosaic export battery",
+    )
+    p.add_argument("--operators", type=str, default=None, help="comma-separated subset")
+    p.add_argument("--backends", type=str, default=None, help="comma-separated subset")
+    p.add_argument("--paddings", type=str, default=None, help="comma-separated subset")
+    p.add_argument("--modes", type=str, default=None, help="comma-separated subset")
+    p.add_argument("--layouts", type=str, default=None, help="gray,rgb")
+    p.add_argument(
+        "--no-export",
+        action="store_true",
+        help="skip the TPU Mosaic export checks (FUSE003)",
+    )
+    p.add_argument("--json", type=str, default=None, help="write the JSON report here")
+    p.add_argument(
+        "--baseline",
+        type=str,
+        default=None,
+        help="allowlist file; only violations absent from it fail the run",
+    )
+    p.add_argument(
+        "--write-baseline",
+        type=str,
+        default=None,
+        help="write the run's violations as the new allowlist and exit 0",
+    )
+    p.add_argument("-v", "--verbose", action="store_true")
+    args = p.parse_args(argv)
+
+    try:
+        report = analyze(
+            operators=_csv(args.operators),
+            backends=_csv(args.backends),
+            paddings=_csv(args.paddings),
+            modes=_csv(args.modes),
+            layouts=_csv(args.layouts),
+            export=not args.no_export,
+            full=args.full,
+        )
+        if args.baseline:
+            report.apply_baseline(load_baseline(args.baseline))
+    except AnalysisError as e:
+        print(f"repro.analysis: internal error: {e}", file=sys.stderr)
+        return 2
+
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report.to_json_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+    if args.write_baseline:
+        write_baseline(args.write_baseline, report)
+        print(f"wrote baseline ({len(report.violations)} entries) to "
+              f"{args.write_baseline}")
+        return 0
+    print(report.render(verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,547 @@
+"""Trace-level contract rules for the fused edge engine.
+
+Each ``check_*`` function takes a traced artifact — a ClosedJaxpr from
+``jax.make_jaxpr``, a StableHLO module string from ``jax.export`` with
+``platforms=["tpu"]``, or an :class:`~repro.core.filters.OperatorSpec` —
+and returns a list of :class:`~repro.analysis.violations.Violation`.
+Nothing here executes a kernel: jaxprs are walked with
+:func:`repro.roofline.hlo.iter_jaxpr_eqns`, and the only evaluation is
+of BlockSpec *index maps* (a handful of scalar clamps) to recover the
+halo geometry the kernel actually compiled with.
+
+Rule IDs are stable and documented in DESIGN.md §10; the committed
+baseline (``analysis_baseline.json``) keys off ``RULE|location``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.violations import Violation
+from repro.roofline.hlo import (
+    DATA_PREP_PRIMITIVES,
+    iter_jaxpr_eqns,
+    stablehlo_op_counts,
+    subjaxprs,
+)
+
+__all__ = [
+    "RULES",
+    "Rule",
+    "AnalysisError",
+    "check_fusion_purity",
+    "check_kernel_cardinality",
+    "check_mosaic_program",
+    "check_contraction_fences",
+    "check_dtype_ladder",
+    "check_vmem_budget",
+    "check_halo_window",
+    "check_static_registration",
+    "find_pallas_eqns",
+    "tap_accumulation_bounds",
+]
+
+
+class AnalysisError(RuntimeError):
+    """The analyzer itself was misused (bad geometry, unexpected trace
+    shape) — distinct from a rule violation in the analyzed program."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    guards: str
+    since: str
+
+
+RULES: Dict[str, Rule] = {
+    r.id: r
+    for r in [
+        Rule(
+            "FUSE001",
+            "fusion-purity",
+            "no pad/slice/gather/concat staging in a fused path's HBM-level "
+            "jaxpr (kernel bodies are opaque; component unstacking and the "
+            "post-gather hysteresis fixpoint are scoped allowances)",
+            "PR 2 (spy tests) / PR 8 (rule)",
+        ),
+        Rule(
+            "FUSE002",
+            "kernel-cardinality",
+            "exactly one pallas_call per fused launch — gray→gradient→NMS "
+            "stay one kernel",
+            "PR 2 / PR 8",
+        ),
+        Rule(
+            "FUSE003",
+            "mosaic-purity",
+            "the TPU-lowered StableHLO has no pad/slice/dynamic_slice and "
+            "exactly one tpu_custom_call",
+            "PR 2 / PR 8",
+        ),
+        Rule(
+            "FMA001",
+            "contraction-safety",
+            "no float mul feeding add/sub directly — unfenced tap chains "
+            "invite FMA contraction and break cross-backend bit-exactness "
+            "(fenced chains go mul→max→add)",
+            "PR 3 (fence idiom) / PR 8 (rule)",
+        ),
+        Rule(
+            "DTYPE001",
+            "dtype-ladder",
+            "u8 input × integer taps accumulates exactly in f32 (≤ 2^24); "
+            "i16/i32 fits recorded for the low-precision kernel to cite",
+            "PR 8",
+        ),
+        Rule(
+            "VMEM001",
+            "vmem-budget",
+            "block + halo + intermediates working set fits the per-core "
+            "VMEM budget (tuning.VMEM_BUDGET), incl. default_block_shape",
+            "PR 2 / PR 8",
+        ),
+        Rule(
+            "HALO001",
+            "halo-consistency",
+            "window reach derived from the compiled index map equals "
+            "OperatorSpec.radius (+1 under NMS) equals the sharded "
+            "exchange width (tiling.window_radius is the single source)",
+            "PR 4 / PR 8",
+        ),
+        Rule(
+            "DET001",
+            "no-wall-clock-or-randomness",
+            "kernel-math modules import no time/random/uuid/secrets and "
+            "call no RNG — retrace must be reproducible",
+            "PR 8",
+        ),
+        Rule(
+            "DET002",
+            "no-python-branch-on-tracer",
+            "no Python if/while/assert on a jnp expression in kernel-math "
+            "modules — branch decisions must be static or in-graph",
+            "PR 8",
+        ),
+        Rule(
+            "DET003",
+            "static-pytrees-hashable",
+            "register_static targets are frozen dataclasses (hashable, "
+            "eq-by-value) so configs/specs are valid jit static args",
+            "PR 3 / PR 8",
+        ),
+    ]
+}
+
+# Staging primitives that may never appear at the HBM level of a fused
+# path, and the slice-flavored subset eligible for the component-unstack
+# allowance.
+_SLICE_PRIMS = ("slice", "dynamic_slice")
+
+
+def find_pallas_eqns(jaxpr) -> List[object]:
+    """All pallas_call equations reachable from ``jaxpr`` (kernel bodies
+    are leaves, so nested kernels would each be reported once)."""
+    return [
+        eqn
+        for eqn in iter_jaxpr_eqns(jaxpr, opaque=("pallas_call",))
+        if eqn.primitive.name == "pallas_call"
+    ]
+
+
+def _is_component_unstack(eqn) -> bool:
+    """A ``slice`` that peels one direction plane off the stacked
+    component axis: (N, D, H, W) -> (N, 1, H, W). The only HBM-level
+    slicing the fused engine performs, and only in the with_components /
+    with_orientation output modes (the stack itself comes out of the one
+    kernel launch)."""
+    if eqn.primitive.name != "slice":
+        return False
+    src = eqn.invars[0].aval.shape
+    dst = eqn.outvars[0].aval.shape
+    return (
+        len(src) == len(dst)
+        and len(src) >= 3
+        and src[1] > 1
+        and dst[1] == 1
+        and src[0] == dst[0]
+        and tuple(src[2:]) == tuple(dst[2:])
+    )
+
+
+def check_fusion_purity(
+    jaxpr,
+    *,
+    location: str,
+    allow_unstack: bool = False,
+    opaque: Sequence[str] = ("pallas_call",),
+) -> List[Violation]:
+    """FUSE001: no data-prep staging primitives at the HBM level.
+
+    ``opaque`` lists primitives whose bodies are off-limits to the walk;
+    fused paths use ``("pallas_call",)``, and hysteresis mode adds
+    ``"while"`` because the post-gather linking fixpoint dilates with
+    ``jnp.pad`` *by design* (it runs after the kernel's gather stage).
+    """
+    out: List[Violation] = []
+    hits: Dict[str, int] = {}
+    allowed = 0
+    for eqn in iter_jaxpr_eqns(jaxpr, opaque=tuple(opaque)):
+        name = eqn.primitive.name
+        if name not in DATA_PREP_PRIMITIVES:
+            continue
+        if allow_unstack and _is_component_unstack(eqn):
+            allowed += 1
+            continue
+        hits[name] = hits.get(name, 0) + 1
+    for name, n in sorted(hits.items()):
+        out.append(
+            Violation(
+                "FUSE001",
+                location,
+                f"{n} HBM-level `{name}` op(s) in a fused path",
+                detail=(("primitive", name), ("count", str(n))),
+            )
+        )
+    return out
+
+
+def check_kernel_cardinality(
+    jaxpr, *, location: str, expected: int = 1
+) -> List[Violation]:
+    """FUSE002: a fused path launches exactly ``expected`` kernels."""
+    n = len(find_pallas_eqns(jaxpr))
+    if n == expected:
+        return []
+    return [
+        Violation(
+            "FUSE002",
+            location,
+            f"{n} pallas_call launch(es), expected {expected}",
+            detail=(("pallas_calls", str(n)), ("expected", str(expected))),
+        )
+    ]
+
+
+def check_mosaic_program(mlir_text: str, *, location: str) -> List[Violation]:
+    """FUSE003: the TPU-exported StableHLO stages nothing around the one
+    custom call. Interpret-mode lowerings are NOT valid inputs here (the
+    interpreter pads carries to block multiples internally)."""
+    out: List[Violation] = []
+    counts = stablehlo_op_counts(mlir_text)
+    for name in ("pad", "slice", "dynamic_slice", "gather", "scatter"):
+        n = counts.get(name, 0)
+        if n:
+            out.append(
+                Violation(
+                    "FUSE003",
+                    location,
+                    f"{n} stablehlo.{name} op(s) in the TPU-lowered module",
+                    detail=(("op", name), ("count", str(n))),
+                )
+            )
+    calls = mlir_text.count("tpu_custom_call")
+    if calls != 1:
+        out.append(
+            Violation(
+                "FUSE003",
+                location,
+                f"{calls} tpu_custom_call site(s) in the TPU-lowered module, expected 1",
+                detail=(("tpu_custom_calls", str(calls)),),
+            )
+        )
+    return out
+
+
+def _is_float(var) -> bool:
+    dtype = getattr(getattr(var, "aval", None), "dtype", None)
+    return dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+
+
+def check_contraction_fences(jaxpr, *, location: str) -> List[Violation]:
+    """FMA001: flag float ``mul`` results consumed directly by ``add`` /
+    ``sub``. The engine's fence idiom (``jnp.maximum(w * x, _F32_LOWEST)``,
+    see ``repro.core.sobel._tap``) puts a ``max`` between every tap
+    product and its accumulation, which is exactly what keeps XLA from
+    contracting the chain into FMAs and diverging across backends. The
+    walk descends into kernel bodies: fences matter most inside the
+    kernel."""
+    out: List[Violation] = []
+
+    def scope(jx):
+        producers = {}
+        for eqn in jx.eqns:
+            for ov in eqn.outvars:
+                producers[ov] = eqn
+        for eqn in jx.eqns:
+            if eqn.primitive.name in ("add", "sub", "add_any") and _is_float(
+                eqn.outvars[0]
+            ):
+                for iv in eqn.invars:
+                    p = producers.get(iv) if isinstance(iv, jax.core.Var) else None
+                    if p is not None and p.primitive.name == "mul" and _is_float(iv):
+                        out.append(
+                            Violation(
+                                "FMA001",
+                                location,
+                                "unfenced float mul feeding "
+                                f"{eqn.primitive.name} (shape "
+                                f"{tuple(iv.aval.shape)}) — insert a "
+                                "maximum() fence between product and sum",
+                                detail=(
+                                    ("consumer", eqn.primitive.name),
+                                    ("shape", str(tuple(iv.aval.shape))),
+                                ),
+                            )
+                        )
+        for eqn in jx.eqns:
+            for sub in subjaxprs(eqn):
+                scope(sub)
+
+    scope(getattr(jaxpr, "jaxpr", jaxpr))
+    return out
+
+
+# Exact-representation ceilings for the dtype ladder.
+_F32_EXACT_INT = 2**24
+_I16_MAX = 2**15 - 1
+_I32_MAX = 2**31 - 1
+
+
+def tap_accumulation_bounds(spec, *, input_max: int = 255) -> Dict[str, object]:
+    """Worst-case accumulation magnitude of ``input_max``-bounded input
+    against the spec's dense filter bank.
+
+    Per direction the bound is ``input_max * sum(|taps|)``; for
+    4-direction operators the v2 operator-transform path combines two
+    directional kernels (kd ± kdᵀ), so the pairwise bound — the two
+    largest per-direction sums added — covers every intermediate either
+    variant materializes. Gradients only: the NMS magnitude stays f32 by
+    contract and is not part of the integer ladder.
+    """
+    bank = spec.bank(max(spec.directions))
+    integer = bool(np.all(bank == np.round(bank)))
+    per_dir = [float(input_max * np.abs(k).sum()) for k in bank]
+    worst = max(per_dir)
+    if len(per_dir) >= 4:
+        worst = sum(sorted(per_dir)[-2:])
+    return {
+        "integer_taps": integer,
+        "per_direction": per_dir,
+        "worst": worst,
+        "fits_i16": worst <= _I16_MAX,
+        "fits_i32": worst <= _I32_MAX,
+        "f32_exact": worst <= _F32_EXACT_INT,
+    }
+
+
+def check_dtype_ladder(spec, *, location: str) -> List[Violation]:
+    """DTYPE001: integer-tap operators must accumulate u8 input exactly
+    in f32 (all intermediates ≤ 2^24) — the contract today's kernels rely
+    on, and the one a future i16/i32 low-precision kernel will cite (the
+    i16/i32 fits are recorded in the violation-free detail)."""
+    b = tap_accumulation_bounds(spec)
+    if not b["integer_taps"]:
+        return []  # fractional taps opt out of the integer ladder
+    if b["f32_exact"]:
+        return []
+    return [
+        Violation(
+            "DTYPE001",
+            location,
+            f"integer-tap accumulation bound {b['worst']:.0f} exceeds the "
+            f"f32-exact integer range (2^24); i16={b['fits_i16']}, "
+            f"i32={b['fits_i32']}",
+            detail=(
+                ("worst", f"{b['worst']:.0f}"),
+                ("fits_i16", str(b["fits_i16"])),
+                ("fits_i32", str(b["fits_i32"])),
+            ),
+        )
+    ]
+
+
+def check_vmem_budget(
+    *,
+    location: str,
+    block_h: int,
+    block_w: int,
+    radius: int,
+    nms: bool = False,
+    channels: Optional[int] = None,
+    budget: Optional[int] = None,
+) -> List[Violation]:
+    """VMEM001: the per-grid-step working set (window + halo'd
+    intermediates + output tile, f32) fits the VMEM budget."""
+    from repro.kernels import tuning
+    from repro.kernels.tiling import tile_vmem_bytes, window_radius
+
+    cap = tuning.VMEM_BUDGET if budget is None else budget
+    r_in = window_radius(radius, nms)
+    need = tile_vmem_bytes(block_h, block_w, r_in, channels=channels)
+    if need <= cap:
+        return []
+    return [
+        Violation(
+            "VMEM001",
+            location,
+            f"block ({block_h}, {block_w}) with r={r_in} needs "
+            f"{need / 2**20:.1f} MiB VMEM > {cap / 2**20:.1f} MiB budget",
+            detail=(("bytes", str(need)), ("budget", str(cap))),
+        )
+    ]
+
+
+def _eval_index_map(bm, grid_indices: Tuple[int, ...]) -> List[int]:
+    imj = bm.index_map_jaxpr
+    args = [jnp.int32(g) for g in grid_indices]
+    try:
+        out = jax.core.eval_jaxpr(imj.jaxpr, imj.consts, *args)
+    except Exception as e:  # arity/shape mismatch — analyzer misuse
+        raise AnalysisError(f"cannot evaluate BlockSpec index map: {e}") from e
+    return [int(o) for o in out]
+
+
+def check_halo_window(
+    jaxpr,
+    *,
+    location: str,
+    spec,
+    nms: bool,
+    block_h: int,
+    block_w: int,
+    image_hw: Optional[Tuple[int, int]] = None,
+    align: Tuple[int, int] = (1, 1),
+) -> List[Violation]:
+    """HALO001: the halo the kernel *compiled with* — recovered by
+    evaluating its Unblocked BlockSpec index map at an interior grid
+    point — equals ``window_radius(spec.radius, nms)``, and the sharded
+    halo exchange is sized identically.
+
+    At interior grid step (k, j) = (1, 1) the clamp in
+    :func:`repro.kernels.tiling.window_origin` is inactive, so
+    ``row0 = block_h - r`` and the reach falls straight out of the index
+    map. Requires a grid of at least 3×3 blocks (AnalysisError otherwise:
+    that is a misconfigured sweep, not an engine bug).
+    """
+    from repro.kernels.tiling import window_radius, window_shape
+    from repro.sharding import halo as halo_mod
+
+    expected = window_radius(spec.radius, nms)
+    out: List[Violation] = []
+    for pc in find_pallas_eqns(jaxpr):
+        gm = pc.params["grid_mapping"]
+        grid = tuple(gm.grid)
+        if len(grid) != 3:
+            raise AnalysisError(f"expected (n, gh, gw) grid, got {grid}")
+        if grid[1] < 3 or grid[2] < 3:
+            raise AnalysisError(
+                f"grid {grid} too small to probe an interior block; "
+                "use an image of at least 3x3 blocks"
+            )
+        windows = 0
+        for bm in gm.block_mappings:
+            if type(bm.indexing_mode).__name__ != "Unblocked":
+                continue
+            shape = tuple(bm.block_shape)
+            if len(shape) < 3 or shape[1] <= block_h:
+                continue  # not a halo'd input window
+            windows += 1
+            offs = _eval_index_map(bm, (0, 1, 1))
+            r_h = block_h - offs[1]
+            r_w = block_w - offs[2]
+            if r_h != expected or r_w != expected:
+                out.append(
+                    Violation(
+                        "HALO001",
+                        location,
+                        f"kernel window reach ({r_h}, {r_w}) != "
+                        f"window_radius(radius={spec.radius}, nms={nms}) "
+                        f"= {expected}",
+                        detail=(
+                            ("derived", f"({r_h}, {r_w})"),
+                            ("expected", str(expected)),
+                        ),
+                    )
+                )
+                continue
+            if image_hw is not None:
+                th, tw = window_shape(
+                    image_hw[0],
+                    image_hw[1],
+                    block_h,
+                    block_w,
+                    expected,
+                    align=align,
+                )
+                if (shape[1], shape[2]) != (th, tw):
+                    out.append(
+                        Violation(
+                            "HALO001",
+                            location,
+                            f"window tile {(shape[1], shape[2])} != "
+                            f"window_shape(...) = {(th, tw)} for r={expected}",
+                            detail=(
+                                ("tile", str((shape[1], shape[2]))),
+                                ("expected", str((th, tw))),
+                            ),
+                        )
+                    )
+        if not windows:
+            out.append(
+                Violation(
+                    "HALO001",
+                    location,
+                    "no halo'd Unblocked input window on the pallas_call — "
+                    "the stencil cannot be reading its halo",
+                    detail=(("windows", "0"),),
+                )
+            )
+        exch = halo_mod.exchange_radius(spec, nms)
+        if exch != expected:
+            out.append(
+                Violation(
+                    "HALO001",
+                    location,
+                    f"sharded exchange width {exch} != kernel window radius "
+                    f"{expected}",
+                    detail=(("exchange", str(exch)), ("expected", str(expected))),
+                )
+            )
+    return out
+
+
+def check_static_registration(cls, *, location: str) -> List[Violation]:
+    """DET003 (runtime half): a class registered static with JAX must be
+    a frozen dataclass — hashable and equal by value — or jit caching on
+    it silently degrades (or crashes on unhashable instances). The AST
+    half of this rule (``repro.analysis.ast_rules``) catches the same
+    mistake in source without importing it."""
+    out: List[Violation] = []
+    params = getattr(cls, "__dataclass_params__", None)
+    if params is None or not params.frozen:
+        out.append(
+            Violation(
+                "DET003",
+                location,
+                f"{cls.__name__} is registered static but is not a frozen "
+                "dataclass",
+                detail=(("class", cls.__name__),),
+            )
+        )
+    elif getattr(cls, "__hash__", None) is None:
+        out.append(
+            Violation(
+                "DET003",
+                location,
+                f"{cls.__name__} is registered static but unhashable",
+                detail=(("class", cls.__name__),),
+            )
+        )
+    return out

@@ -192,7 +192,7 @@ class EdgeConfig:
             if v is not None and not 0.0 <= v <= 1.0:
                 raise ValueError(
                     f"{name}={v} must be a fraction of the magnitude peak "
-                    f"in [0, 1]"
+                    "in [0, 1]"
                 )
         if low is not None and high is not None and low > high:
             raise ValueError(f"low={low} must not exceed high={high}")

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 __all__ = ["ModelConfig", "ShapeConfig", "register", "get_config", "list_archs", "SHAPES"]
 

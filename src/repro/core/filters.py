@@ -354,7 +354,7 @@ def _check_sep_reconstructs(spec: OperatorSpec) -> None:
         if not np.array_equal(dense, spec.bank(d + 1)[d]):
             raise ValueError(
                 f"{spec.name}: separable factors of direction {d} do not "
-                f"reconstruct the dense taps exactly"
+                "reconstruct the dense taps exactly"
             )
 
 

@@ -45,7 +45,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import filters as F
 from repro.core.sobel import magnitude, spec_components
 
 __all__ = [

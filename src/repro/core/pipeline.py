@@ -15,7 +15,6 @@ This is also registered as the ``sobel_hd`` architecture for the dry-run:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

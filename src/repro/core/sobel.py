@@ -18,8 +18,7 @@ batch dims: shape ``(..., H, W)``.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

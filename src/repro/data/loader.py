@@ -16,7 +16,7 @@ from typing import Dict, Iterator, Optional
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import image_batch, lm_batch

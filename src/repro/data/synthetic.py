@@ -10,7 +10,7 @@ reproduces the exact same batches.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -53,6 +53,7 @@ from repro.kernels.tiling import (
     ALIGN_INTERPRET,
     ALIGN_TPU_GRAY,
     ALIGN_TPU_RGB,
+    window_radius,
     window_shape,
 )
 
@@ -227,7 +228,7 @@ def _edge_sharded(
     # stencil, so the device-level halo grows to radius + 1, exactly like
     # the kernel's in-VMEM window (hysteresis, being a global fixpoint,
     # runs post-gather in :func:`edge` instead).
-    r = spec.radius + (1 if config.nms else 0)
+    r = halo.exchange_radius(spec, config.nms)
     d, rr, cc = mesh.shape["data"], mesh.shape["row"], mesh.shape["col"]
     sh, _hp = halo.shard_geometry(h, rr, r)
     sw, _wp = halo.shard_geometry(w, cc, r)
@@ -542,7 +543,7 @@ def stream_delta(
             diff = diff.any(axis=-1)
         blocks = _block_reduce_max(diff.astype(jnp.float32), bh, bw) > 0
         config = config.resolved()
-        r_in = config.spec.radius + (1 if config.nms else 0)
+        r_in = window_radius(config.spec.radius, config.nms)
         backend = resolve_backend(config.backend)
         th, tw = window_shape(
             h, w, bh, bw, r_in, align=_stream_align(backend, rgb)
@@ -666,7 +667,7 @@ def edge_stream(
     layout = layout or detect_layout(images.shape)
     if "T" in layout or layout.count("N") > 1:
         raise ValueError(
-            f"streaming takes one frame per stream per call, not a video "
+            "streaming takes one frame per stream per call, not a video "
             f"stack (layout {layout!r}); iterate frames through the state"
         )
     rgb = layout.endswith("C")

@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.filters import OperatorSpec, SobelParams, get_operator
+from repro.core.filters import OperatorSpec, get_operator
 from repro.core.nms import nms_sector, nms_thin
 from repro.core.sobel import magnitude, spec_components
 from repro.kernels import tuning
@@ -61,6 +61,7 @@ from repro.kernels.tiling import (
     luma,
     tile_vmem_bytes,
     valid_mask,
+    window_radius,
     window_spec,
 )
 
@@ -330,7 +331,7 @@ def edge_pallas(
         align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
     # NMS compares the magnitude against a 1-px neighborhood, so its input
     # window carries one extra ring on top of the operator halo.
-    r_in = spec.radius + (1 if out_nms else 0)
+    r_in = window_radius(spec.radius, out_nms)
     in_spec = window_spec(
         h, w, bh, bw, r_in, align=align, channels=3 if rgb else None
     )
@@ -465,7 +466,7 @@ def edge_stream_pallas(
         align = ALIGN_INTERPRET
     else:
         align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
-    r_in = spec.radius + (1 if out_nms else 0)
+    r_in = window_radius(spec.radius, out_nms)
     in_spec = window_spec(
         h, w, bh, bw, r_in, align=align, channels=3 if rgb else None
     )

@@ -32,7 +32,7 @@ __all__ = ["sobel", "edge_pipeline", "default_interpret", "default_block_shape"]
 def _deprecated(old: str) -> None:
     warnings.warn(
         f"{old} is deprecated; use repro.api.edge_detect "
-        f"(or repro.kernels.edge.edge_pallas for the raw kernel)",
+        "(or repro.kernels.edge.edge_pallas for the raw kernel)",
         DeprecationWarning,
         stacklevel=3,
     )

@@ -59,6 +59,22 @@ __all__ = [
 
 PAD_MODES = ("reflect", "edge", "zero")
 
+
+def window_radius(radius: int, nms: bool = False) -> int:
+    """Input-window reach of a fused kernel step, in pixels.
+
+    THE single source of truth for halo sizing: the operator stencil needs
+    ``radius``, and NMS compares the magnitude against a 1-px neighborhood
+    on top of it. The Pallas window spec (``repro.kernels.edge``), the
+    streaming delta-dilation (``repro.kernels.dispatch``), and the sharded
+    halo exchange (``repro.sharding.halo.exchange_radius``) all derive
+    their reach from this function, and the static analyzer
+    (``repro.analysis`` rule HALO001) checks the traced kernel's actual
+    index-map offsets against it.
+    """
+    return radius + (1 if nms else 0)
+
+
 # Mosaic requires the last two block dims divisible by (8, 128) or equal to
 # the array dims. For gray (N, H, W) arrays that constrains (tile_h, tile_w);
 # for RGB (N, H, W, 3) it constrains (tile_w, channels) — channels is always

@@ -211,7 +211,7 @@ class TuningCache:
             warnings.warn(
                 f"ignoring tuning cache {self.path}: schema version "
                 f"{version!r} is newer than supported ({self.VERSION}); "
-                f"run with a matching build or delete the file",
+                "run with a matching build or delete the file",
                 RuntimeWarning, stacklevel=2,
             )
             return self

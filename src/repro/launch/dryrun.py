@@ -6,12 +6,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # production meshes. (Only this entry point does this; tests/benches see 1.)
 
 import argparse
-import dataclasses
 import gzip
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import SHAPES, get_config, list_archs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (
-    SOBEL_SHAPES,
     abstract_cache,
     batch_logical_axes,
     cache_logical_axes,
@@ -30,7 +28,7 @@ from repro.launch.specs import (
 from repro.models import Model
 from repro.optim import adamw
 from repro.roofline.hlo import collective_bytes, module_cost
-from repro.sharding.partition import shardings_for_tree, specs_for_tree
+from repro.sharding.partition import shardings_for_tree
 from repro.sharding.rules import logical_to_spec, mesh_context
 from repro.train.loop import TrainConfig, Trainer, TrainState
 

@@ -176,7 +176,7 @@ def serve_image(cfg, args) -> None:
         nonlocal mesh, pop
         survivors = pop[:keep]
         print(f"{why}: {len(pop)} -> {len(survivors)} devices; "
-              f"replanning mesh and resharding")
+              "replanning mesh and resharding")
         pop = survivors
         mesh = build_step([all_devices[i] for i in pop])
         health.replans += 1
@@ -240,7 +240,7 @@ def serve_image(cfg, args) -> None:
     wall = time.perf_counter() - t_all
     if not lat_ms:  # --requests 0: nothing but the warm-up ran
         print(f"0 requests served in {wall:.2f}s (warm-up only; "
-              f"use --requests >= 1 for steady-state numbers)")
+              "use --requests >= 1 for steady-state numbers)")
         return
     mps = px_total / 1e6 / (sum(lat_ms) / 1e3)
     tag = " (served through reshard)" if health.replans else ""

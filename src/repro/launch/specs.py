@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import SHAPES, ModelConfig
 from repro.models import Model
 
 __all__ = [

@@ -1,14 +1,14 @@
 """Public model API: init / forward / loss / cache / decode for any arch."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.models.layers import abstract_tree, axes_tree, init_tree, shard
+from repro.models.layers import abstract_tree, axes_tree, init_tree
 
 __all__ = ["Model", "cross_entropy"]
 

@@ -16,8 +16,7 @@ with optional remat.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

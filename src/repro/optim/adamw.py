@@ -84,7 +84,6 @@ def update(
 def opt_state_axes(param_axes: Any, param_shapes: Any, mesh) -> AdamWState:
     """Logical axes for AdamWState: params' axes + ZeRO-1 `data` sharding on
     the largest dim that is still unsharded and divisible by |data|."""
-    import numpy as np
 
     data_size = 1
     for name in ("data",):

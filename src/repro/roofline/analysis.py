@@ -40,7 +40,6 @@ def _param_counts(arch: str):
     total = model.param_count()
     active = total
     if cfg.family == "moe":
-        import numpy as np
 
         e, k = cfg.num_experts, cfg.num_experts_per_tok
         expert_params = cfg.num_layers * 3 * cfg.d_model * cfg.d_ff * e

@@ -28,6 +28,8 @@ __all__ = [
     "parse_collectives",
     "stablehlo_op_counts",
     "jaxpr_op_counts",
+    "iter_jaxpr_eqns",
+    "subjaxprs",
     "DATA_PREP_PRIMITIVES",
 ]
 
@@ -360,28 +362,53 @@ def stablehlo_op_counts(mlir_text: str) -> Dict[str, int]:
     return dict(out)
 
 
+def _param_jaxpr(v):
+    # ClosedJaxpr params carry `.jaxpr`; pallas_call stores its kernel
+    # body as a *raw* Jaxpr (which has `.eqns` directly).
+    if hasattr(v, "eqns"):
+        return v
+    sub = getattr(v, "jaxpr", None)
+    return sub if sub is not None and hasattr(sub, "eqns") else None
+
+
+def subjaxprs(eqn):
+    """The nested jaxprs of one equation (pjit/scan/cond/while/pallas_call
+    bodies), unwrapped from their ClosedJaxpr/raw-Jaxpr params."""
+    out = []
+    for v in eqn.params.values():
+        sub = _param_jaxpr(v)
+        if sub is not None:
+            out.append(sub)
+        elif isinstance(v, (list, tuple)):
+            for vi in v:
+                sub = _param_jaxpr(vi)
+                if sub is not None:
+                    out.append(sub)
+    return out
+
+
+def iter_jaxpr_eqns(jaxpr, *, opaque: Tuple[str, ...] = ()):
+    """Yield every equation of a (closed) jaxpr, recursing through nested
+    jaxprs (pjit/scan/cond/while — and kernel bodies, unless listed in
+    ``opaque``). Opaque primitives are yielded themselves but treated as
+    leaves. This is the shared walker under :func:`jaxpr_op_counts` and the
+    ``repro.analysis`` rule engine."""
+    stack = [getattr(jaxpr, "jaxpr", jaxpr)]
+    while stack:
+        jx = stack.pop()
+        for eqn in jx.eqns:
+            yield eqn
+            if eqn.primitive.name not in opaque:
+                stack.extend(subjaxprs(eqn))
+
+
 def jaxpr_op_counts(jaxpr, *, opaque: Tuple[str, ...] = ("pallas_call",)) -> Dict[str, int]:
     """Primitive counts of a (closed) jaxpr, recursing through nested jaxprs
     (pjit/scan/cond bodies) but treating ``opaque`` primitives — kernels —
     as leaves: their internals run on-chip, not against HBM."""
     counts: Dict[str, int] = defaultdict(int)
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            counts[eqn.primitive.name] += 1
-            if eqn.primitive.name in opaque:
-                continue
-            for v in eqn.params.values():
-                sub = getattr(v, "jaxpr", None)
-                if sub is not None:
-                    walk(sub)
-                elif isinstance(v, (list, tuple)):
-                    for vi in v:
-                        sub = getattr(vi, "jaxpr", None)
-                        if sub is not None:
-                            walk(sub)
-
-    walk(getattr(jaxpr, "jaxpr", jaxpr))
+    for eqn in iter_jaxpr_eqns(jaxpr, opaque=opaque):
+        counts[eqn.primitive.name] += 1
     return dict(counts)
 
 

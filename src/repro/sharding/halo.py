@@ -41,11 +41,10 @@ from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels.tiling import PAD_MODES, boundary_index
+from repro.kernels.tiling import PAD_MODES, boundary_index, window_radius
 from repro.runtime.elastic import make_image_mesh, plan_image_mesh
 
 __all__ = [
@@ -136,6 +135,16 @@ def mesh_from_config(
 # ---------------------------------------------------------------------------
 # Shard geometry + materialized boundary extension (outside shard_map)
 # ---------------------------------------------------------------------------
+
+def exchange_radius(spec, nms: bool = False) -> int:
+    """Halo-exchange width (px) for one fused step of ``spec``.
+
+    Delegates to :func:`repro.kernels.tiling.window_radius` so the
+    cross-device exchange is sized by the same rule as the in-VMEM kernel
+    window — the HALO001 invariant checked by ``repro.analysis``.
+    """
+    return window_radius(spec.radius, nms)
+
 
 def shard_geometry(n: int, parts: int, radius: int) -> Tuple[int, int]:
     """(shard, padded_total) for one spatial dim split into ``parts``.
@@ -267,7 +276,7 @@ def sharded_edge(
             raise ValueError(
                 f"{name}={parts} leaves spatial shards of {shard} pixels — "
                 f"too small for operator radius {radius}; use a coarser "
-                f"spatial grid for this image"
+                "spatial grid for this image"
             )
 
     # Materialize extension values (ragged pad) and round the batch up.

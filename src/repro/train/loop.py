@@ -8,23 +8,21 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig
-from repro.data.loader import DataLoader, batch_shardings
+from repro.data.loader import DataLoader
 from repro.models import Model
 from repro.optim import adamw
 from repro.optim.schedule import warmup_cosine
-from repro.runtime.fault import FaultPolicy, FaultTolerantRunner, StepFailure
+from repro.runtime.fault import FaultPolicy, StepFailure
 from repro.runtime.monitor import StepMonitor
-from repro.sharding.partition import shardings_for_tree, specs_for_tree
+from repro.sharding.partition import shardings_for_tree
 from repro.sharding.rules import activation_shard, mesh_context
 
 log = logging.getLogger("repro.train")

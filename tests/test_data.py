@@ -1,6 +1,5 @@
 """Synthetic data pipeline: determinism, learnability structure, shapes."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.synthetic import image_batch, lm_batch

@@ -1,7 +1,6 @@
 """Continuous-batching engine == per-request reference greedy decode."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

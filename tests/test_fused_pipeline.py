@@ -10,7 +10,8 @@ Pins the bar for the fused gray->Sobel->normalize megakernel:
     pipeline (eager AND jit — FMA-contraction differences must not leak);
   * structurally zero HBM-side data preparation: no pad/slice in the fused
     path's jaxpr outside ``pallas_call``, and none in the Mosaic-lowered
-    TPU program (cross-platform export), checked via ``repro.roofline.hlo``.
+    TPU program (cross-platform export), checked via the ``repro.analysis``
+    FUSE rules (built on ``repro.roofline.hlo``'s walkers).
 
 No optional deps (runs without hypothesis).
 """
@@ -19,10 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import analysis
 from repro.core.pipeline import edge_detect, rgb_to_gray
 from repro.core.sobel import sobel as core_sobel
 from repro.kernels.ops import edge_pipeline, sobel as pallas_sobel
-from repro.roofline import hlo as rhlo
 
 
 def _img(rng, shape, dtype=np.float32):
@@ -224,26 +225,32 @@ def _fused_fn(shape, dtype, interpret=True, **kw):
 )
 def test_fused_jaxpr_has_no_data_prep(shape, dtype):
     """pallas_call is opaque at trace time, so any pad/slice in the jaxpr is
-    genuine HBM-side staging. The fused path must have none."""
+    genuine HBM-side staging. The fused path must have none — asserted via
+    the analyzer's FUSE001/FUSE002 rules (one source of truth; the full
+    registry sweep lives in ``python -m repro.analysis``)."""
     fn, x = _fused_fn(shape, dtype)
-    counts = rhlo.jaxpr_op_counts(jax.make_jaxpr(fn)(x))
-    assert counts.get("pallas_call", 0) >= 1 or counts.get("pjit", 0) >= 1
-    for prim in rhlo.DATA_PREP_PRIMITIVES:
-        assert counts.get(prim, 0) == 0, (prim, counts)
+    jaxpr = jax.make_jaxpr(fn)(x)
+    loc = f"test:{shape}"
+    assert analysis.check_fusion_purity(jaxpr, location=loc) == []
+    assert analysis.check_kernel_cardinality(jaxpr, location=loc) == []
 
 
 def test_legacy_path_does_have_data_prep():
     """Contrast fixture: the pure-XLA pipeline stages the boundary via
-    jnp.pad — that's exactly what the fused path deletes. (jnp.pad with
-    mode='reflect' traces to concatenate ops; mode='zero' to pad.)"""
+    jnp.pad — that's exactly what the fused path deletes, and FUSE001 is
+    the rule that would catch it. (jnp.pad with mode='reflect' traces to
+    concatenate ops; mode='zero' to pad.)"""
     def legacy(x, padding):
         return edge_detect(x, padding=padding, backend="xla", normalize=True)
 
     x = jnp.zeros((1, 37, 53), jnp.float32)
-    refl = rhlo.jaxpr_op_counts(jax.make_jaxpr(lambda t: legacy(t, "reflect"))(x))
-    assert refl.get("concatenate", 0) >= 1
-    zero = rhlo.jaxpr_op_counts(jax.make_jaxpr(lambda t: legacy(t, "zero"))(x))
-    assert zero.get("pad", 0) >= 1
+    refl = jax.make_jaxpr(lambda t: legacy(t, "reflect"))(x)
+    vios = analysis.check_fusion_purity(refl, location="test:legacy-reflect")
+    assert {v.rule for v in vios} == {"FUSE001"}
+    assert any(dict(v.detail).get("primitive") == "concatenate" for v in vios)
+    zero = jax.make_jaxpr(lambda t: legacy(t, "zero"))(x)
+    vios = analysis.check_fusion_purity(zero, location="test:legacy-zero")
+    assert any(dict(v.detail).get("primitive") == "pad" for v in vios)
 
 
 @pytest.mark.parametrize(
@@ -253,20 +260,20 @@ def test_legacy_path_does_have_data_prep():
 def test_fused_tpu_hlo_has_no_pad_or_slice(shape, dtype):
     """The real Mosaic-lowered TPU program (cross-platform export) must
     contain no whole-image pad/slice — the kernel is one tpu_custom_call
-    reading the raw frame. (The interpret-mode lowering is not checked: the
-    Pallas *interpreter* pads internally, hardware does not.)
+    reading the raw frame, asserted via the analyzer's FUSE003 rule. (The
+    interpret-mode lowering is not checked: the Pallas *interpreter* pads
+    internally, hardware does not.)
 
-    A Mosaic lowering error is a FAILURE here, not a skip: this is the only
-    test exercising the pallas-tpu production path on CPU hosts."""
+    A Mosaic lowering error is a FAILURE here, not a skip: this test and
+    the analysis CI job are what exercise the pallas-tpu production path
+    on CPU hosts."""
     jax_export = pytest.importorskip("jax.export")
 
     fn, x = _fused_fn(shape, dtype, interpret=False, block_h=64, block_w=128)
     exp = jax_export.export(jax.jit(fn), platforms=["tpu"])(x)
-    counts = rhlo.stablehlo_op_counts(exp.mlir_module())
-    assert counts.get("pad", 0) == 0, counts
-    assert counts.get("slice", 0) == 0, counts
-    assert counts.get("dynamic_slice", 0) == 0, counts
-    assert "tpu_custom_call" in exp.mlir_module()
+    assert analysis.check_mosaic_program(
+        exp.mlir_module(), location=f"test:{shape}"
+    ) == []
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,6 @@
 """roofline.hlo.module_cost vs XLA's own cost analysis on unrolled loops."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.roofline.hlo import module_cost
 

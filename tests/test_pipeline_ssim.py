@@ -1,7 +1,6 @@
 """Pipeline + SSIM behaviour."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.pipeline import edge_detect, rgb_to_gray
 from repro.core.ssim import ssim

@@ -7,7 +7,7 @@ pytest.importorskip("hypothesis")  # optional [test] extra; module skips without
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SobelParams, sobel, sobel_components
-from repro.core.sobel import VARIANTS, magnitude
+from repro.core.sobel import magnitude
 
 
 def _img(rng, shape):
