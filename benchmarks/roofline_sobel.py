@@ -20,6 +20,16 @@ from repro.roofline.constants import HBM_BW, PEAK_FLOPS_BF16
 
 MACS = {"direct": 200, "separable": 138, "v1": 96, "v2": 82}
 
+# Accumulator width per arithmetic lane (bytes per materialized
+# intermediate element). i32 is deliberately flat vs f32: the integer
+# lane only narrows traffic where the tap ladder licenses i16.
+ACCUM_BYTES = {"f32": 4.0, "int32": 4.0, "int16": 2.0}
+
+# Intermediate planes the v2 ladder materializes per pixel in VMEM:
+# five separable row-pass planes (F/S/D + the K_d± recombinations) plus
+# four directional gradients.
+V2_INTERMEDIATES = 9
+
 
 def edge_traffic(
     fused: bool,
@@ -28,6 +38,7 @@ def edge_traffic(
     u8: bool = True,
     normalize: bool = True,
     halo: float = 0.10,
+    accum: str = "f32",
 ) -> Dict[str, float]:
     """Itemized HBM bytes per output pixel of the edge-detection pipeline.
 
@@ -36,6 +47,13 @@ def edge_traffic(
     at r=2). The legacy path bills every materialized intermediate once per
     side (XLA fuses elementwise chains, so gray->pad and max->rescale are
     counted at their fusion boundaries, not per-op).
+
+    ``accum`` names the accumulation lane (``"f32"``/``"int16"``/
+    ``"int32"``). Honesty note: the integer lane barely moves the HBM
+    ``total`` — both lanes read the u8 frame and write the f32 magnitude —
+    so its accumulator-level saving is itemized as ``accum_bytes_per_px``
+    (VMEM/register traffic of the intermediate planes, 2 B vs 4 B where
+    the ladder licenses i16) and deliberately NOT folded into ``total``.
     """
     in_bpp = (3 if rgb else 1) * (1 if u8 else 4)
     t: Dict[str, float] = {}
@@ -59,6 +77,7 @@ def edge_traffic(
             t["read_mag_rescale"] = 4.0
             t["write_out"] = 4.0
     t["total"] = sum(t.values())
+    t["accum_bytes_per_px"] = V2_INTERMEDIATES * ACCUM_BYTES[accum]
     return t
 
 
@@ -102,4 +121,24 @@ def run() -> List[Dict]:
                     "config": {k: round(v, 2) for k, v in t.items()},
                 }
             )
+        # Integer-lane accounting (gray u8, i16 accumulation where the
+        # tap ladder licenses it). HBM total barely moves vs the gray
+        # f32 lane; the accumulator column is the honest win.
+        gray_f32 = edge_traffic(fused=True, rgb=False)
+        gray_i16 = edge_traffic(fused=True, rgb=False, accum="int16")
+        rows.append(
+            {
+                "name": f"roofline_sobel/pipeline/fused-i16/{n}x{n}",
+                "us_per_call": gray_i16["total"] * px / HBM_BW * 1e6,
+                "variant": "v2",
+                "derived": (
+                    f"bytes_per_px={gray_i16['total']:.1f};"
+                    f"accum_bytes_per_px={gray_i16['accum_bytes_per_px']:.1f};"
+                    f"accum_ratio="
+                    f"{gray_f32['accum_bytes_per_px'] / gray_i16['accum_bytes_per_px']:.2f};"
+                    f"path=fused-i16"
+                ),
+                "config": {k: round(v, 2) for k, v in gray_i16.items()},
+            }
+        )
     return rows

@@ -130,6 +130,7 @@ def main() -> None:
     from benchmarks import (
         fig6_blocksweep,
         fig7_ssim,
+        lowprec,
         nms_fused,
         roofline_lm,
         roofline_sobel,
@@ -142,6 +143,7 @@ def main() -> None:
     suites = [
         ("table1", table1_variants),
         ("table2", table2_throughput),
+        ("lowprec", lowprec),
         ("nms", nms_fused),
         ("fig6", fig6_blocksweep),
         ("fig7", fig7_ssim),

@@ -12,9 +12,11 @@ from repro.analysis.rules import (
     RULES,
     AnalysisError,
     check_contraction_fences,
+    check_dma_pipeline,
     check_dtype_ladder,
     check_fusion_purity,
     check_halo_window,
+    check_kernel_accum_dtype,
     check_kernel_cardinality,
     check_mosaic_program,
     check_static_registration,
@@ -39,8 +41,10 @@ __all__ = [
     "scan_file",
     "scan_source",
     "check_contraction_fences",
+    "check_dma_pipeline",
     "check_dtype_ladder",
     "check_fusion_purity",
+    "check_kernel_accum_dtype",
     "check_halo_window",
     "check_kernel_cardinality",
     "check_mosaic_program",

@@ -20,9 +20,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis.violations import Violation
+from repro.core.ladder import tap_accumulation_bounds
 from repro.roofline.hlo import (
     DATA_PREP_PRIMITIVES,
     iter_jaxpr_eqns,
@@ -39,6 +39,8 @@ __all__ = [
     "check_mosaic_program",
     "check_contraction_fences",
     "check_dtype_ladder",
+    "check_kernel_accum_dtype",
+    "check_dma_pipeline",
     "check_vmem_budget",
     "check_halo_window",
     "check_static_registration",
@@ -96,9 +98,20 @@ RULES: Dict[str, Rule] = {
         Rule(
             "DTYPE001",
             "dtype-ladder",
-            "u8 input × integer taps accumulates exactly in f32 (≤ 2^24); "
-            "i16/i32 fits recorded for the low-precision kernel to cite",
-            "PR 8",
+            "u8 input × integer taps accumulates exactly in f32 (≤ 2^24), "
+            "and the traced kernel's actual integer accumulation dtype "
+            "(recovered from its u8→int entry cast) equals the narrowest "
+            "dtype the ladder proof licenses (core.ladder.accum_dtype)",
+            "PR 8 (spec proof) / PR 9 (kernel check)",
+        ),
+        Rule(
+            "PIPE001",
+            "dma-pipeline",
+            "a fused launch that requests a manual pipeline_depth compiles "
+            "a well-formed double-buffered DMA ring: dma_start AND "
+            "dma_wait in the kernel body, ring depth ≥ 2, and one DMA "
+            "semaphore per ring slot so starts and waits pair one-to-one",
+            "PR 9",
         ),
         Rule(
             "VMEM001",
@@ -308,44 +321,16 @@ def check_contraction_fences(jaxpr, *, location: str) -> List[Violation]:
     return out
 
 
-# Exact-representation ceilings for the dtype ladder.
-_F32_EXACT_INT = 2**24
-_I16_MAX = 2**15 - 1
-_I32_MAX = 2**31 - 1
-
-
-def tap_accumulation_bounds(spec, *, input_max: int = 255) -> Dict[str, object]:
-    """Worst-case accumulation magnitude of ``input_max``-bounded input
-    against the spec's dense filter bank.
-
-    Per direction the bound is ``input_max * sum(|taps|)``; for
-    4-direction operators the v2 operator-transform path combines two
-    directional kernels (kd ± kdᵀ), so the pairwise bound — the two
-    largest per-direction sums added — covers every intermediate either
-    variant materializes. Gradients only: the NMS magnitude stays f32 by
-    contract and is not part of the integer ladder.
-    """
-    bank = spec.bank(max(spec.directions))
-    integer = bool(np.all(bank == np.round(bank)))
-    per_dir = [float(input_max * np.abs(k).sum()) for k in bank]
-    worst = max(per_dir)
-    if len(per_dir) >= 4:
-        worst = sum(sorted(per_dir)[-2:])
-    return {
-        "integer_taps": integer,
-        "per_direction": per_dir,
-        "worst": worst,
-        "fits_i16": worst <= _I16_MAX,
-        "fits_i32": worst <= _I32_MAX,
-        "f32_exact": worst <= _F32_EXACT_INT,
-    }
+# tap_accumulation_bounds lives in repro.core.ladder (and is re-exported
+# above): the kernels, the dispatcher's precision gate and this analyzer
+# must all cite the *same* proof.
 
 
 def check_dtype_ladder(spec, *, location: str) -> List[Violation]:
-    """DTYPE001: integer-tap operators must accumulate u8 input exactly
-    in f32 (all intermediates ≤ 2^24) — the contract today's kernels rely
-    on, and the one a future i16/i32 low-precision kernel will cite (the
-    i16/i32 fits are recorded in the violation-free detail)."""
+    """DTYPE001 (spec half): integer-tap operators must accumulate u8
+    input exactly in f32 (all intermediates ≤ 2^24) — the contract both
+    arithmetic lanes rely on: it is what makes the i16/i32 integer lane
+    bit-identical to the f32 lane by construction."""
     b = tap_accumulation_bounds(spec)
     if not b["integer_taps"]:
         return []  # fractional taps opt out of the integer ladder
@@ -365,6 +350,178 @@ def check_dtype_ladder(spec, *, location: str) -> List[Violation]:
             ),
         )
     ]
+
+
+def check_kernel_accum_dtype(jaxpr, *, location: str, spec) -> List[Violation]:
+    """DTYPE001 (kernel half): the integer lane's *actual* accumulation
+    dtype must equal the narrowest dtype the ladder proof licenses.
+
+    The lane entry is the only place a traced program converts a u8
+    array (rank ≥ 2 — scalar index math never starts from u8) to a
+    signed integer: ``x.astype(accum_dtype)`` in the kernels, or the
+    XLA-path equivalent in ``sobel_components``/``thin_map``. The walk
+    descends into kernel bodies. No such cast ⇒ the trace is on the f32
+    lane and the check passes vacuously. A cast *narrower* than
+    :func:`repro.core.ladder.accum_dtype` — i16 where the bound needs
+    i32 — is the silent-wraparound bug this rule exists to catch; wider
+    (i16-licensed math run in i32, as the TPU lane does around Mosaic's
+    16-bit gaps) stays exact and passes, while anything beyond i32 has
+    no proof at all and fails.
+    """
+    from repro.core import ladder
+
+    _WIDTH = {"int16": 16, "int32": 32}
+    seen: List[str] = []
+    for eqn in iter_jaxpr_eqns(jaxpr, opaque=()):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = getattr(eqn.invars[0], "aval", None)
+        dst = eqn.outvars[0].aval
+        if src is None or len(getattr(dst, "shape", ())) < 2:
+            continue
+        if src.dtype != jnp.uint8:
+            continue
+        if not jnp.issubdtype(dst.dtype, jnp.signedinteger):
+            continue
+        if str(dst.dtype) not in seen:
+            seen.append(str(dst.dtype))
+    if not seen:
+        return []
+    expected = ladder.accum_dtype(spec)
+    if expected is None:
+        return [
+            Violation(
+                "DTYPE001",
+                location,
+                f"integer accumulation ({', '.join(seen)}) in a trace of "
+                f"operator {spec.name!r}, which has no proven integer "
+                "budget (fractional taps or bound beyond 2^24)",
+                detail=(("found", ",".join(seen)), ("expected", "none")),
+            )
+        ]
+    bad = [
+        d for d in seen
+        if d not in _WIDTH or _WIDTH[d] < _WIDTH[expected]
+    ]
+    return [
+        Violation(
+            "DTYPE001",
+            location,
+            f"kernel accumulates u8 taps in {d}, but the ladder proof "
+            f"licenses {expected} for operator {spec.name!r}"
+            + ("" if d in _WIDTH else " (no proof covers this dtype)"),
+            detail=(("found", d), ("expected", expected)),
+        )
+        for d in bad
+    ]
+
+
+def _dma_op_counts(kernel_jaxpr) -> Dict[str, int]:
+    """dma_start/dma_wait sites in a kernel body, descending into the
+    ``cond`` branches that ``pl.when`` wraps them in."""
+    counts = {"dma_start": 0, "dma_wait": 0}
+    for eqn in iter_jaxpr_eqns(kernel_jaxpr, opaque=()):
+        if eqn.primitive.name in counts:
+            counts[eqn.primitive.name] += 1
+    return counts
+
+
+def _pipeline_scratch(pc) -> Tuple[Optional[object], Optional[object]]:
+    """(ring_aval, sem_aval) of a manual-DMA pallas_call, else (None, None).
+
+    Scratch operands are the trailing kernel-jaxpr invars
+    (``grid_mapping.num_scratch_operands`` of them). The DMA semaphore
+    array identifies itself by memory space; among the remaining VMEM
+    scratch buffers the copy ring is the one with the widest row tile —
+    the v2 sink rows are halo-cropped (ew < tw) by construction.
+    """
+    gm = pc.params["grid_mapping"]
+    n = getattr(gm, "num_scratch_operands", 0) or 0
+    if not n:
+        return None, None
+    avals = [v.aval for v in pc.params["jaxpr"].invars[-n:]]
+    sems = [a for a in avals if "semaphore" in str(a).lower()]
+    rings = [
+        a for a in avals
+        if "semaphore" not in str(a).lower() and len(a.shape) >= 3
+    ]
+    if not sems or not rings:
+        return None, None
+    ring = max(rings, key=lambda a: a.shape[2])
+    return ring, sems[0]
+
+
+def check_dma_pipeline(jaxpr, *, location: str, min_depth: int = 2) -> List[Violation]:
+    """PIPE001: every fused launch on this path compiled a well-formed
+    manual DMA ring — dma_start AND dma_wait present in the kernel body,
+    ring depth ≥ ``min_depth`` (double buffering needs two slots), and
+    exactly one DMA semaphore per ring slot so each started copy has a
+    slot-matched wait. Only meaningful on traces that *requested* a
+    manual ``pipeline_depth``; the automatic-pipelining path compiles no
+    DMA ops by design and must not be passed here.
+    """
+    out: List[Violation] = []
+    for pc in find_pallas_eqns(jaxpr):
+        counts = _dma_op_counts(pc.params["jaxpr"])
+        if not counts["dma_start"]:
+            out.append(
+                Violation(
+                    "PIPE001",
+                    location,
+                    "no dma_start in the fused kernel body — a manual "
+                    "pipeline_depth was requested but the kernel compiled "
+                    "without a DMA ring",
+                    detail=(("dma_start", "0"),),
+                )
+            )
+            continue
+        if not counts["dma_wait"]:
+            out.append(
+                Violation(
+                    "PIPE001",
+                    location,
+                    f"{counts['dma_start']} dma_start site(s) but no "
+                    "dma_wait — started copies are never consumed",
+                    detail=(("dma_start", str(counts["dma_start"])),
+                            ("dma_wait", "0")),
+                )
+            )
+            continue
+        ring, sem = _pipeline_scratch(pc)
+        if ring is None:
+            out.append(
+                Violation(
+                    "PIPE001",
+                    location,
+                    "DMA ops present but no (ring buffer, DMA semaphore) "
+                    "scratch pair on the pallas_call",
+                    detail=(("scratch", "missing"),),
+                )
+            )
+            continue
+        depth = int(ring.shape[0])
+        if depth < min_depth:
+            out.append(
+                Violation(
+                    "PIPE001",
+                    location,
+                    f"DMA ring depth {depth} < {min_depth} — double "
+                    "buffering requires at least two slots",
+                    detail=(("depth", str(depth)),),
+                )
+            )
+        nsem = int(sem.shape[0]) if sem.shape else 0
+        if nsem != depth:
+            out.append(
+                Violation(
+                    "PIPE001",
+                    location,
+                    f"{nsem} DMA semaphore(s) for a depth-{depth} ring — "
+                    "starts and waits cannot pair one-to-one per slot",
+                    detail=(("semaphores", str(nsem)), ("depth", str(depth))),
+                )
+            )
+    return out
 
 
 def check_vmem_budget(
@@ -494,15 +651,42 @@ def check_halo_window(
                         )
                     )
         if not windows:
-            out.append(
-                Violation(
-                    "HALO001",
-                    location,
-                    "no halo'd Unblocked input window on the pallas_call — "
-                    "the stencil cannot be reading its halo",
-                    detail=(("windows", "0"),),
+            # Manual-DMA kernels take their input as an opaque ANY-space
+            # ref (no Unblocked window to probe); the halo geometry is
+            # baked into the copy ring instead: each slot holds exactly
+            # one window_shape(...) tile, so the ring's trailing dims
+            # carry the compiled reach.
+            ring, _sem = _pipeline_scratch(pc)
+            if ring is None:
+                out.append(
+                    Violation(
+                        "HALO001",
+                        location,
+                        "no halo'd Unblocked input window (and no DMA ring) "
+                        "on the pallas_call — the stencil cannot be reading "
+                        "its halo",
+                        detail=(("windows", "0"),),
+                    )
                 )
-            )
+            elif image_hw is not None:
+                th, tw = window_shape(
+                    image_hw[0], image_hw[1], block_h, block_w, expected,
+                    align=align,
+                )
+                got = tuple(ring.shape[1:3])
+                if got != (th, tw):
+                    out.append(
+                        Violation(
+                            "HALO001",
+                            location,
+                            f"DMA ring slot tile {got} != window_shape(...) "
+                            f"= {(th, tw)} for r={expected}",
+                            detail=(
+                                ("tile", str(got)),
+                                ("expected", str((th, tw))),
+                            ),
+                        )
+                    )
         exch = halo_mod.exchange_radius(spec, nms)
         if exch != expected:
             out.append(

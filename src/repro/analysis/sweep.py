@@ -58,6 +58,8 @@ class Mode:
     opaque_while: bool = False  # hysteresis: post-gather fixpoint pads by design
     all_paddings: bool = False  # sweep every padding in full mode
     export: bool = False  # part of the Mosaic export battery
+    pipelined: bool = False  # manual DMA ring requested: PIPE001 applies
+    gray_only: bool = False  # integer lane: RGB is ineligible by design
 
     def kw(self) -> Dict[str, object]:
         return dict(self.config_kw)
@@ -73,6 +75,14 @@ MODES: Dict[str, Mode] = {
         Mode("hysteresis", (("hysteresis", True),), opaque_while=True),
         Mode("stream", (), stream=True),
         Mode("stream-nms", (("nms", True),), stream=True),
+        Mode("pipelined", (("pipeline_depth", 2),), pipelined=True,
+             export=True),
+        Mode("lowprec", (("precision", "int"),), gray_only=True, export=True),
+        # The full PR-9 path: manual DMA ring feeding the integer lane,
+        # NMS fused — exercises the in-kernel sink scratch too.
+        Mode("lowprec-pipelined",
+             (("precision", "int"), ("pipeline_depth", 3), ("nms", True)),
+             pipelined=True, gray_only=True, export=True),
     ]
 }
 
@@ -183,8 +193,14 @@ def _combo_violations(
                 channels=3 if layout == "rgb" else None,
             )
             report.checks += 2
+        if mode.pipelined and not mode.stream:
+            out += rules.check_dma_pipeline(jaxpr, location=location)
+            report.checks += 1
+    # Vacuous on f32-lane traces; on the integer lane (either backend) it
+    # pins the actual accumulation dtype to the ladder proof.
+    out += rules.check_kernel_accum_dtype(jaxpr, location=location, spec=spec)
     out += rules.check_contraction_fences(jaxpr, location=location)
-    report.checks += 1
+    report.checks += 2
     return out
 
 
@@ -320,6 +336,10 @@ def analyze(
                     mode = MODES[mode_name]
                     if mode.stream and backend == "xla":
                         continue  # streaming is a fused-path feature
+                    if mode.pipelined and backend == "xla":
+                        continue  # the DMA ring only exists on fused paths
+                    if mode.gray_only and layout == "rgb":
+                        continue  # explicit int on RGB raises by contract
                     pads = paddings if (mode.all_paddings or not full) else ("reflect",)
                     if not mode.all_paddings:
                         pads = pads[:1]
@@ -338,7 +358,7 @@ def analyze(
                 report.add(_export_violations(op, "gray", mode, report))
         for mode_name in mode_names:
             mode = MODES[mode_name]
-            if mode.export and "rgb" in layouts:
+            if mode.export and not mode.gray_only and "rgb" in layouts:
                 report.add(_export_violations(operators[0], "rgb", mode, report))
     for op in operators:
         report.add(_spec_violations(op, report))

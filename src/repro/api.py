@@ -93,6 +93,23 @@ class EdgeConfig:
       backend:    ``auto`` | ``pallas-tpu`` | ``pallas-interpret`` | ``xla``;
                   None = auto. Outputs are bit-exact across backends.
       block_h/block_w: Pallas tile override; None = tuning cache / default.
+      precision:  arithmetic lane: ``auto`` | ``f32`` | ``int``. ``int`` is
+                  the exact low-precision lane — u8 gray frames x integer
+                  taps accumulated in the i16/i32 budget
+                  ``repro.core.ladder`` proves, f32 only from the
+                  magnitude/NMS stage on — *bit-identical* to the f32 lane
+                  (it raises when the proof does not cover the workload:
+                  RGB, non-u8 input, fractional taps, oversized bound).
+                  ``auto`` opts eligible workloads in on the Pallas
+                  backends and stays f32 on XLA
+                  (``repro.kernels.dispatch.resolve_precision``).
+      pipeline_depth: HBM->VMEM pipelining of the Pallas kernel's input
+                  windows. None = automatic (Pallas double buffering, or a
+                  tuned depth from the cache); 2..8 = an explicit manual
+                  DMA ring of that depth — tile k+1's halo load overlaps
+                  tile k's compute under kernel control (DESIGN.md §11).
+                  Outputs are bit-exact across depths; ignored on the XLA
+                  backend (no DMA to pipeline).
       shard:      :class:`~repro.sharding.halo.ShardConfig` — spread the call
                   over the image mesh ``(data, row, col)`` with halo
                   exchange between spatial neighbors; None = single device.
@@ -136,6 +153,8 @@ class EdgeConfig:
     backend: Optional[str] = None
     block_h: Optional[int] = None
     block_w: Optional[int] = None
+    precision: str = "auto"
+    pipeline_depth: Optional[int] = None
     shard: Optional[ShardConfig] = None
     nms: bool = False
     hysteresis: bool = False
@@ -162,6 +181,19 @@ class EdgeConfig:
         """
         from repro.core import nms as _nms
 
+        if self.precision not in ("auto", "f32", "int"):
+            raise ValueError(
+                f"unknown precision {self.precision!r}; expected 'auto', "
+                "'f32' or 'int'"
+            )
+        if self.pipeline_depth is not None and not (
+            isinstance(self.pipeline_depth, int)
+            and 2 <= self.pipeline_depth <= 8
+        ):
+            raise ValueError(
+                f"pipeline_depth must be None (automatic) or an int in "
+                f"2..8 (manual DMA ring depth), got {self.pipeline_depth!r}"
+            )
         if not 0.0 <= self.decay <= 1.0:
             raise ValueError(
                 f"decay={self.decay} must be a per-frame attenuation in [0, 1]"

@@ -154,6 +154,7 @@ def thin_map(
     variant: str,
     directions: int,
     padding: str = "reflect",
+    precision: str = "f32",
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...], jnp.ndarray]:
     """Pure-XLA reference for the fused gray->Sobel->NMS stage.
 
@@ -166,10 +167,28 @@ def thin_map(
     The pad radius is ``spec.radius + 1``: the component ladder runs on the
     ``(H+2, W+2)`` extended output so the NMS neighborhood exists at the
     image border, mirroring the kernel's grown halo window (DESIGN.md §7).
+
+    ``precision="int"`` runs the gradient ladder in the exact integer
+    accumulation dtype ``repro.core.ladder`` proves (the caller must have
+    gated eligibility: u8-valued gray, integer taps, budget fits); the
+    components are cast to f32 before the magnitude/NMS stage, which stays
+    f32 by contract — bit-identical to the default lane.
     """
     h, w = gray.shape[-2], gray.shape[-1]
-    xp = _pad_ext(gray.astype(jnp.float32), spec.radius + 1, padding)
+    if precision == "int":
+        from repro.core import ladder
+
+        acc = ladder.accum_dtype(spec)
+        if acc is None:
+            raise ValueError(
+                f"precision='int' unavailable for operator {spec.name!r}"
+            )
+        xp = _pad_ext(gray.astype(jnp.dtype(acc)), spec.radius + 1, padding)
+    else:
+        xp = _pad_ext(gray.astype(jnp.float32), spec.radius + 1, padding)
     comps_ext = spec_components(xp, spec, h + 2, w + 2, variant, directions)
+    if precision == "int":
+        comps_ext = tuple(c.astype(jnp.float32) for c in comps_ext)
     mag_ext = magnitude(comps_ext)
 
     def center(a: jnp.ndarray) -> jnp.ndarray:

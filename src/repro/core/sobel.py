@@ -49,12 +49,40 @@ _F32_LOWEST = float(np.finfo(np.float32).min)
 
 
 def _tap(term: jnp.ndarray, w: float) -> jnp.ndarray:
-    """``w * term`` with FMA contraction blocked (±1 taps skip the mul)."""
+    """``w * term`` with FMA contraction blocked (±1 taps skip the mul).
+
+    Integer-dtype terms (the exact low-precision lane: u8 frames × integer
+    taps accumulated in i16/i32, see ``repro.core.ladder``) multiply
+    plainly — integer mul-add is exact, there is no FMA rounding hazard to
+    fence, and the fence constant is a float anyway.
+    """
     if w == 1.0:
         return term
     if w == -1.0:
         return -term
+    if jnp.issubdtype(term.dtype, jnp.integer):
+        if w != int(w):
+            raise ValueError(
+                f"fractional tap {w!r} reached the integer lane; "
+                "repro.core.ladder.int_lane_eligible should have gated this"
+            )
+        return term * jnp.asarray(int(w), term.dtype)
     return jnp.maximum(w * term, jnp.float32(_F32_LOWEST))
+
+
+def _halve(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact ``x / 2`` for the operator transform's even-valued sums.
+
+    ``gd_plus ± gd_minus`` is ``2 * (kd ⊛ x)`` / ``2 * (kdt ⊛ x)`` by
+    construction (Eq. 10-11), i.e. always even in the integer lane — so an
+    arithmetic right shift is exact there (even negatives shift exactly;
+    the floor-vs-truncate discrepancy only exists for odd negatives, which
+    cannot occur). The float lane keeps the historical ``* 0.5`` (exact:
+    scaling by a power of two).
+    """
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x >> 1
+    return x * 0.5
 
 
 def _hpass(x: jnp.ndarray, taps: np.ndarray, out_w: int) -> jnp.ndarray:
@@ -147,12 +175,32 @@ def _sym_rowpass(xp, dense: np.ndarray, h, w):
     return acc
 
 
-def spec_components(xp, spec: F.OperatorSpec, h, w, variant: str, directions: int):
+def spec_components(
+    xp, spec: F.OperatorSpec, h, w, variant: str, directions: int, *, sink=None
+):
     """Direction components of ``spec`` on the pre-padded image ``xp``.
 
     ``variant``/``directions`` must already be resolved against the spec
     (``spec.resolve_variant`` / ``spec.resolve_directions``).
+
+    The arithmetic runs in ``xp.dtype``: float input takes the historical
+    fenced-f32 path; integer input (the exact low-precision lane — u8
+    frames cast to the i16/i32 budget ``repro.core.ladder`` proves) runs
+    plain integer mul-add, bit-identical to the f32 lane because both
+    compute the same exact integers.
+
+    ``sink`` (optional ``sink(name, array) -> array``) is applied to the
+    named separable row-pass intermediates — ``"f"``/``"s"`` (Eq. 5-7's
+    horizontal passes) and v2's 2-tap difference ``"d"`` — before their
+    column passes consume them. The fused Pallas kernel's DMA-pipelined
+    path uses it to spill each row pass into a dedicated VMEM scratch
+    buffer and read it back (deterministic VMEM residency for the reused
+    factors); a sink must return its input's values unchanged, so the
+    default identity and any store/load round-trip are bit-identical.
     """
+    if sink is None:
+        def sink(_name, arr):
+            return arr
     if variant == "direct":
         return tuple(_correlate2d(xp, k, h, w) for k in spec.bank(directions))
 
@@ -160,8 +208,8 @@ def spec_components(xp, spec: F.OperatorSpec, h, w, variant: str, directions: in
     # leading factor a.
     col_x, row_x = spec.sep_factors(0)
     col_y, row_y = spec.sep_factors(1)
-    f = _hpass(xp, row_x, w)       # the reused F pass (4 MACs: zero centre)
-    s = _hpass(xp, row_y, w)
+    f = sink("f", _hpass(xp, row_x, w))  # the reused F pass (4 MACs: zero centre)
+    s = sink("s", _hpass(xp, row_y, w))
     gx = _vpass(f, col_x, h)
     gy = _vpass(s, col_y, h)
     if directions == 2:
@@ -179,12 +227,12 @@ def spec_components(xp, spec: F.OperatorSpec, h, w, variant: str, directions: in
         gd_minus = _sym_rowpass(xp, spec.kd_minus_dense(), h, w)
     elif variant == "v2":
         col_f, col_d, row_d = spec.v2_arrays()
-        d = _hpass(xp, row_d, w)   # 2-tap difference D = p3 - p1
+        d = sink("d", _hpass(xp, row_d, w))  # 2-tap difference D = p3 - p1
         gd_minus = _vpass(f, col_f, h) - _vpass(d, col_d, h)
     else:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
-    gd = (gd_plus + gd_minus) * 0.5   # Eq. 11
-    gdt = (gd_plus - gd_minus) * 0.5
+    gd = _halve(gd_plus + gd_minus)   # Eq. 11 (sums are even: exact either lane)
+    gdt = _halve(gd_plus - gd_minus)
     return (gx, gy, gd, gdt)
 
 
@@ -210,6 +258,7 @@ def sobel_components(
     params: SobelParams = SobelParams(),
     padding: str = "reflect",
     operator: "str | None" = None,
+    precision: str = "f32",
 ) -> Tuple[jnp.ndarray, ...]:
     """Per-direction gradient images ``(G_x, G_y[, G_d, G_dt])``.
 
@@ -217,15 +266,36 @@ def sobel_components(
     by name (``sobel5``/``sobel3``/``scharr3``/``prewitt3``/``sobel7``/...);
     when omitted, the legacy ``size`` kwarg picks the Sobel operator of that
     size. ``directions`` of 0 means the operator's maximum.
+
+    ``precision="int"`` runs the exact low-precision lane: uint8 input cast
+    to the i16/i32 budget proved by ``repro.core.ladder``, gradients
+    accumulated in integers, components cast to f32 on return —
+    bit-identical to the default f32 lane (both compute the same exact
+    integers). Raises for inputs/operators the budget does not cover.
     """
     if variant not in VARIANTS and variant != "auto":
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+    if precision not in ("f32", "int"):
+        raise ValueError(f"unknown precision {precision!r}; expected 'f32' or 'int'")
     spec = F.get_operator(operator or F.operator_for_size(size), params)
     directions = spec.resolve_directions(directions)
     variant = spec.resolve_variant(variant)
-    x = image.astype(jnp.float32)
+    if precision == "int":
+        from repro.core import ladder
+
+        ok, reason = ladder.int_lane_eligible(
+            spec, rgb=False, input_dtype=image.dtype
+        )
+        if not ok:
+            raise ValueError(f"precision='int' unavailable: {reason}")
+        x = image.astype(jnp.dtype(ladder.accum_dtype(spec)))
+    else:
+        x = image.astype(jnp.float32)
     xp, h, w = _pad(x, spec.radius, padding)
-    return spec_components(xp, spec, h, w, variant, directions)
+    comps = spec_components(xp, spec, h, w, variant, directions)
+    if precision == "int":
+        comps = tuple(c.astype(jnp.float32) for c in comps)
+    return comps
 
 
 def magnitude(components: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
@@ -256,6 +326,7 @@ def sobel(
     padding: str = "reflect",
     return_components: bool = False,
     operator: "str | None" = None,
+    precision: str = "f32",
 ):
     """Multi-directional edge magnitude ``G`` (paper Eq. 4).
 
@@ -270,6 +341,8 @@ def sobel(
       padding: ``reflect | edge | zero`` (same-size output) or ``valid``.
       return_components: also return the per-direction gradients.
       operator: registered operator name (overrides ``size``).
+      precision: ``f32`` (default) or ``int`` — the exact integer lane
+        (see :func:`sobel_components`); magnitude is always f32.
     """
     comps = sobel_components(
         image,
@@ -279,6 +352,7 @@ def sobel(
         params=params,
         padding=padding,
         operator=operator,
+        precision=precision,
     )
     g = magnitude(comps)
     if return_components:
@@ -296,5 +370,6 @@ sobel_jit = jax.jit(
         "padding",
         "return_components",
         "operator",
+        "precision",
     ),
 )

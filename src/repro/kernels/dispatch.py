@@ -63,6 +63,7 @@ if TYPE_CHECKING:  # no runtime import: repro.api imports this module
 __all__ = [
     "BACKENDS",
     "resolve_backend",
+    "resolve_precision",
     "choose_block_shape",
     "stream_block_shape",
     "edge",
@@ -86,6 +87,45 @@ def resolve_backend(backend: Optional[str] = None) -> str:
     return b
 
 
+def resolve_precision(
+    precision: str, backend: str, *, spec, rgb: bool, input_dtype
+) -> str:
+    """Resolve ``EdgeConfig.precision`` to the concrete lane: f32 | int.
+
+    Explicit ``"int"`` works on every backend but raises (with the first
+    failing gate from ``repro.core.ladder.int_lane_eligible``) when the
+    exactness proof does not cover the workload — fractional taps, a
+    budget past 2^24, RGB input (fractional BT.601 luma), or non-u8
+    frames. ``"auto"`` opts eligible gray-u8 workloads into the integer
+    lane on the Pallas backends only: on XLA the f32 ladder is already
+    the measured reference (and the committed benchmark baselines), so
+    auto stays conservative there — the lane is still available
+    explicitly.
+    """
+    from repro.core import ladder
+
+    if precision == "f32":
+        return "f32"
+    if precision == "int":
+        ok, reason = ladder.int_lane_eligible(
+            spec, rgb=rgb, input_dtype=input_dtype
+        )
+        if not ok:
+            raise ValueError(f"precision='int' unavailable: {reason}")
+        return "int"
+    if precision != "auto":
+        raise ValueError(
+            f"unknown precision {precision!r}; expected 'auto', 'f32' or "
+            "'int'"
+        )
+    if backend == "xla":
+        return "f32"
+    ok, _reason = ladder.int_lane_eligible(
+        spec, rgb=rgb, input_dtype=input_dtype
+    )
+    return "int" if ok else "f32"
+
+
 def choose_block_shape(
     h: int,
     w: int,
@@ -103,8 +143,10 @@ def choose_block_shape(
     mesh: str = "1x1x1",
     kernel_h: Optional[int] = None,
     kernel_w: Optional[int] = None,
-) -> Tuple[int, int, str]:
-    """Resolve (block_h, block_w, source) for a Pallas backend.
+    precision: str = "f32",
+    pipeline_depth: Optional[int] = None,
+) -> Tuple[int, int, int, str]:
+    """Resolve (block_h, block_w, depth, source) for a Pallas backend.
 
     ``source`` is ``"explicit"``, ``"tuned"`` or ``"default"`` — tests and
     benchmarks use it to verify the tuning cache actually steers dispatch.
@@ -112,24 +154,30 @@ def choose_block_shape(
     sharding ``kernel_h``/``kernel_w`` name the halo-extended local block
     the kernel actually tiles (they size the fallback default), and
     ``devices``/``mesh`` keep sharded tunings from colliding with
-    single-device entries (TuneKey schema v4).
+    single-device entries (TuneKey schema v4). ``precision`` (resolved
+    lane) and ``pipeline_depth`` slot the v5 key dimensions: an explicit
+    depth pins the returned depth (and its own cache slot); ``None`` lets
+    a tuned entry supply the depth the sweep measured faster, defaulting
+    to 0 (automatic pipelining).
     """
     if block_h and block_w:
-        return block_h, block_w, "explicit"
+        return block_h, block_w, pipeline_depth or 0, "explicit"
     cache = cache if cache is not None else tuning.get_default_cache()
     hit = cache.lookup(
         tuning.TuneKey(backend, dtype, operator, variant, h, w, padding,
-                       layout, devices, mesh)
+                       layout, devices, mesh, precision, pipeline_depth or 0)
     )
     if hit is not None:
-        bh, bw = hit
-        return block_h or bh, block_w or bw, "tuned"
+        bh, bw, depth = hit
+        if pipeline_depth is not None:
+            depth = pipeline_depth
+        return block_h or bh, block_w or bw, depth, "tuned"
     spec = get_operator(operator)
     dbh, dbw = ekern.default_block_shape(
         kernel_h or h, kernel_w or w, spec.size,
         channels=3 if layout == "rgb" else None,
     )
-    return block_h or dbh, block_w or dbw, "default"
+    return block_h or dbh, block_w or dbw, pipeline_depth or 0, "default"
 
 
 def _kernel_dtype_name(x: jnp.ndarray) -> str:
@@ -142,7 +190,8 @@ def _kernel_dtype_name(x: jnp.ndarray) -> str:
 # ---------------------------------------------------------------------------
 
 def _backend_compute(
-    config, backend, *, rgb, need_comps, need_raw, block_h, block_w
+    config, backend, *, rgb, need_comps, need_raw, block_h, block_w,
+    precision="f32", pipeline_depth=0,
 ):
     """The backend compute: ``(B, h, w[, 3]) -> (primary, stacked
     components | None, raw magnitude | None)``.
@@ -158,17 +207,28 @@ def _backend_compute(
     single-device magnitude+peak cases bypass it for the fused ``with_max``
     kernel; the sharded path computes its peak from the cropped raw
     magnitude instead, an exact max either way.)
+
+    ``precision`` is the *resolved* lane (:func:`resolve_precision`);
+    ``pipeline_depth`` the resolved DMA ring depth (0 = automatic; Pallas
+    backends only — XLA has no DMA to pipeline).
     """
     if backend == "xla":
         from repro.core import nms
         from repro.core.pipeline import rgb_to_gray
 
         def run(xl):
-            gray = rgb_to_gray(xl) if rgb else xl.astype(jnp.float32)
+            if precision == "int":
+                # Eligibility (u8 gray input) was proven by
+                # resolve_precision; the ladder casts straight to the
+                # accumulation dtype, so the frame is handed over raw.
+                gray = xl
+            else:
+                gray = rgb_to_gray(xl) if rgb else xl.astype(jnp.float32)
             if config.nms:
                 thin, ctuple, raw = nms.thin_map(
                     gray, config.spec, variant=config.variant,
                     directions=config.directions, padding=config.padding,
+                    precision=precision,
                 )
                 stacked = jnp.stack(ctuple, axis=-3) if need_comps else None
                 return thin, stacked, (raw if need_raw else None)
@@ -179,6 +239,7 @@ def _backend_compute(
                 variant=config.variant,
                 params=config.params or SobelParams(),
                 padding=config.padding,
+                precision=precision,
             )
             mag = rss_magnitude(ctuple)
             return mag, (jnp.stack(ctuple, axis=-3) if need_comps else None), None
@@ -189,6 +250,7 @@ def _backend_compute(
         operator=config.operator, variant=config.variant,
         params=config.params, directions=config.directions,
         padding=config.padding, block_h=block_h, block_w=block_w, rgb=rgb,
+        precision=precision, pipeline_depth=pipeline_depth,
         interpret=(backend == "pallas-interpret"),
     )
 
@@ -217,10 +279,15 @@ def _backend_compute(
 
 def _edge_sharded(
     x, config, backend, mesh, *, rgb, h, w, need_comps, need_peak,
-    tuning_cache, chaos=None,
+    tuning_cache, precision="f32", chaos=None,
 ):
     """Sharded engine body: returns ``(mag, comps|None, peak (B,1,1)|None)``
-    bit-exact with the single-device branch."""
+    bit-exact with the single-device branch.
+
+    Both new kernel lanes compose with sharding unchanged: the halo
+    exchange is dtype-preserving, so the per-shard kernel still sees raw
+    u8 (the integer lane's input contract), and the DMA ring tiles the
+    halo-extended local block exactly like the automatic pipeline."""
     from repro.sharding import halo
 
     spec = config.spec
@@ -236,8 +303,9 @@ def _edge_sharded(
     we = sw + (2 * r if cc > 1 else 0)
 
     bh = bw = None
+    depth = 0
     if backend != "xla":
-        bh, bw, _src = choose_block_shape(
+        bh, bw, depth, _src = choose_block_shape(
             h, w, operator=config.operator, variant=config.variant,
             dtype=_kernel_dtype_name(x), backend=backend,
             padding=config.padding, layout="rgb" if rgb else "gray",
@@ -245,10 +313,12 @@ def _edge_sharded(
             cache=tuning_cache,
             devices=d * rr * cc, mesh=f"{d}x{rr}x{cc}",
             kernel_h=he, kernel_w=we,
+            precision=precision, pipeline_depth=config.pipeline_depth,
         )
     run = _backend_compute(
         config, backend, rgb=rgb, need_comps=need_comps,
         need_raw=config.nms and need_peak, block_h=bh, block_w=bw,
+        precision=precision, pipeline_depth=depth,
     )
     mag, comps, peak = halo.sharded_edge(
         x, mesh, radius=r, padding=config.padding, compute=run,
@@ -312,6 +382,14 @@ def edge(
     # Hysteresis thresholds are fractions of the per-image magnitude peak.
     need_peak = config.normalize or config.with_max or config.hysteresis
 
+    # Resolve the arithmetic lane once, against the dtype the kernel will
+    # actually see — every downstream branch (fused fast path, backend
+    # closure, sharded engine) then agrees on it.
+    precision = resolve_precision(
+        config.precision, backend, spec=config.spec, rgb=rgb,
+        input_dtype=x.dtype,
+    )
+
     if mesh is None and config.shard is not None:
         from repro.sharding import halo
 
@@ -323,17 +401,19 @@ def edge(
         mag, comps, peak = _edge_sharded(
             x, config, backend, mesh, rgb=rgb, h=h, w=w,
             need_comps=need_comps, need_peak=need_peak,
-            tuning_cache=tuning_cache, chaos=chaos,
+            tuning_cache=tuning_cache, precision=precision, chaos=chaos,
         )
     else:
         bh = bw = None
+        depth = 0
         if backend != "xla":
-            bh, bw, _src = choose_block_shape(
+            bh, bw, depth, _src = choose_block_shape(
                 h, w, operator=config.operator, variant=config.variant,
                 dtype=_kernel_dtype_name(x), backend=backend,
                 padding=config.padding, layout="rgb" if rgb else "gray",
                 block_h=config.block_h, block_w=config.block_w,
                 cache=tuning_cache,
+                precision=precision, pipeline_depth=config.pipeline_depth,
             )
         if backend != "xla" and need_peak:
             # Fused Pallas fast path: the kernel emits per-block maxima of
@@ -345,6 +425,7 @@ def edge(
                 operator=config.operator, variant=config.variant,
                 params=config.params, directions=config.directions,
                 padding=config.padding, block_h=bh, block_w=bw, rgb=rgb,
+                precision=precision, pipeline_depth=depth,
                 interpret=(backend == "pallas-interpret"),
             )
             if config.nms:
@@ -373,6 +454,7 @@ def edge(
             run = _backend_compute(
                 config, backend, rgb=rgb, need_comps=need_comps,
                 need_raw=config.nms and need_peak, block_h=bh, block_w=bw,
+                precision=precision, pipeline_depth=depth,
             )
             mag, comps, raw = run(x)
             if need_peak:
@@ -450,7 +532,7 @@ def stream_block_shape(
         return ekern.default_block_shape(
             h, w, spec.size, channels=3 if rgb else None
         )
-    bh, bw, _src = choose_block_shape(
+    bh, bw, _depth, _src = choose_block_shape(
         h, w, operator=config.operator, variant=config.variant,
         dtype=dtype, backend=backend, padding=config.padding,
         layout="rgb" if rgb else "gray", block_h=config.block_h,
@@ -620,6 +702,17 @@ def _check_stream_config(config: "EdgeConfig") -> None:
         raise ValueError(
             "streaming caches the primary map only; with_components/"
             "with_orientation are not supported on the stream path"
+        )
+    if config.precision == "int" or config.pipeline_depth is not None:
+        # The masked streaming kernel stays on the automatic-pipelining f32
+        # path: its per-tile lax.cond branches around the whole compute,
+        # which a cross-step DMA ring (whose copies must be unconditional)
+        # cannot coexist with, and the delta-splice caches are f32.
+        # precision="auto" is fine — it resolves to f32 here.
+        raise ValueError(
+            "streaming runs the automatic-pipelining f32 kernel; explicit "
+            "precision='int' / pipeline_depth are not supported on the "
+            "stream path"
         )
 
 

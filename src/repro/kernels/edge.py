@@ -18,7 +18,26 @@ module):
     the operator spec (r=1/2/3 for 3x3/5x5/7x7).
   * warp-shuffle register taps (§4.3.3)  ->  static strided slices of the
     VMEM-resident tile feeding the VPU.
-  * explicit prefetch (§4.3.4)  ->  Pallas's automatic double buffering.
+  * explicit prefetch (§4.3.4)  ->  Pallas's automatic double buffering
+    (``pipeline_depth=0``, the default), or — the paper's trick made
+    explicit — a manual HBM->VMEM DMA ring (``pipeline_depth >= 2``): the
+    input stays in ``pltpu.ANY`` memory and each grid step issues
+    ``pltpu.make_async_copy`` for the window ``depth - 1`` steps ahead
+    into a ``(depth, tile_h, tile_w)`` VMEM scratch ring, so tile k+1's
+    halo load overlaps tile k's compute under our control (DESIGN.md §11).
+
+Two orthogonal lanes thread through both pipelines:
+
+  * ``precision="int"`` — the exact low-precision lane: u8 frames x
+    integer taps accumulated in the i16/i32 dtype ``repro.core.ladder``
+    proves, cast to f32 only at the magnitude/NMS boundary. Bit-identical
+    to the f32 lane by construction (both compute the same exact
+    integers); gated per-operator by the same budget DTYPE001 checks.
+  * the registry's separable col (x) row factors exploited in-kernel: on
+    the manual-DMA path the row passes F/S (and v2's D) spill into a
+    dedicated VMEM scratch buffer (``spec_components``'s ``sink``) and
+    the column passes read them back — deterministic VMEM residency for
+    the reused factors, still one launch, values unchanged.
 
 The kernel is a megakernel for the full edge-detection pipeline: raw u8
 gray or RGB frame in (BT.601 luma per-tile in VMEM), in-kernel boundary
@@ -49,6 +68,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import ladder
 from repro.core.filters import OperatorSpec, get_operator
 from repro.core.nms import nms_sector, nms_thin
 from repro.core.sobel import magnitude, spec_components
@@ -61,7 +81,9 @@ from repro.kernels.tiling import (
     luma,
     tile_vmem_bytes,
     valid_mask,
+    window_origin,
     window_radius,
+    window_shape,
     window_spec,
 )
 
@@ -130,14 +152,28 @@ def kernel_dtype(x: jnp.ndarray) -> jnp.ndarray:
 # Kernel body — pure math on the VMEM-resident halo'd tile
 # ---------------------------------------------------------------------------
 
-def _kernel(
-    x_ref, *o_refs,
-    spec, variant, directions, bh, bw, h, w, padding, rgb, out_components,
-    out_nms, out_mag, with_max,
+def _compute_dtype(acc_dtype):
+    """Kernel compute dtype: the integer lane's proven i16/i32, else f32."""
+    return jnp.dtype(acc_dtype) if acc_dtype else jnp.float32
+
+
+def _emit_outputs(
+    x, o_refs, k, j, *,
+    spec, variant, directions, bh, bw, h, w, padding, out_components,
+    out_nms, out_mag, with_max, sink=None,
 ):
-    k = pl.program_id(1)
-    j = pl.program_id(2)
-    x = luma(x_ref[0]) if rgb else x_ref[0].astype(jnp.float32)
+    """Shared tail of both fused kernel bodies: gray tile -> stored outputs.
+
+    ``x`` is the grayscale window in the compute dtype (f32, or the integer
+    lane's i16/i32). The gradient ladder runs in that dtype; components are
+    cast to f32 before the magnitude/NMS stage either way, so both lanes
+    store bit-identical f32 outputs (``repro.core.ladder`` proves every
+    integer intermediate is f32-exact). ``sink`` forwards to
+    ``spec_components`` (the manual-DMA path's row-pass VMEM spill).
+    """
+
+    def as_f32(comps):
+        return tuple(c.astype(jnp.float32) for c in comps)
 
     def block_max(mag):
         """Masked per-block max of the (un-thinned) center magnitude."""
@@ -154,7 +190,10 @@ def _kernel(
             x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=spec.radius + 1,
             padding=padding,
         )
-        comps_ext = spec_components(y, spec, bh + 2, bw + 2, variant, directions)
+        comps_ext = as_f32(
+            spec_components(y, spec, bh + 2, bw + 2, variant, directions,
+                            sink=sink)
+        )
         mag_ext = magnitude(comps_ext)
         comps = tuple(
             jax.lax.slice(g, (1, 1), (1 + bh, 1 + bw)) for g in comps_ext
@@ -176,7 +215,9 @@ def _kernel(
         x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=spec.radius,
         padding=padding,
     )
-    comps = spec_components(y, spec, bh, bw, variant, directions)
+    comps = as_f32(
+        spec_components(y, spec, bh, bw, variant, directions, sink=sink)
+    )
     if out_components:
         o_refs[0][0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
         if with_max:
@@ -189,6 +230,107 @@ def _kernel(
     o_refs[0][0] = mag
     if with_max:
         o_refs[1][0, k, j] = block_max(mag)
+
+
+def _kernel(
+    x_ref, *o_refs,
+    spec, variant, directions, bh, bw, h, w, padding, rgb, out_components,
+    out_nms, out_mag, with_max, acc_dtype=None,
+):
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    x = luma(x_ref[0]) if rgb else x_ref[0].astype(_compute_dtype(acc_dtype))
+    _emit_outputs(
+        x, o_refs, k, j,
+        spec=spec, variant=variant, directions=directions, bh=bh, bw=bw,
+        h=h, w=w, padding=padding, out_components=out_components,
+        out_nms=out_nms, out_mag=out_mag, with_max=with_max,
+    )
+
+
+def _sink_slots(variant: str, directions: int) -> int:
+    """Row-pass VMEM spill slots the manual-DMA path allocates.
+
+    The separable ladder materializes the horizontal passes F and S
+    (Eq. 5-7); RG-v2 adds the 2-tap difference D (Eq. 18-19). ``direct``
+    has no row passes; 2-direction v2 never reaches D. Slot order is
+    fixed: f=0, s=1, d=2.
+    """
+    if variant == "direct":
+        return 0
+    return 3 if (variant == "v2" and directions != 2) else 2
+
+
+def _pipelined_kernel(
+    x_hbm, *refs,
+    spec, variant, directions, bh, bw, h, w, padding, rgb, out_components,
+    out_nms, out_mag, with_max, acc_dtype, depth, th, tw, n_sink,
+):
+    """Manual double-buffered DMA body (``pipeline_depth >= 2``).
+
+    The input stays in ``pltpu.ANY`` (HBM); a ``(depth, th, tw[, 3])``
+    VMEM scratch ring plus a ``depth``-wide DMA semaphore array implement
+    the paper's prefetch explicitly. Grid step j (j fastest, sequential
+    under ``dimension_semantics=("arbitrary",)*3``):
+
+      * j == 0 — refill: start copies for windows 0..depth-2 (new grid
+        row; every prior copy was already waited, the ring is clean);
+      * start the copy for window j+depth-1 (when it exists), keeping
+        depth-1 loads in flight ahead of compute;
+      * wait window j's copy, then compute from ring slot ``j % depth``.
+
+    Each window's copy is started exactly once and waited exactly once;
+    the window offsets are ``tiling.window_origin`` — the very function
+    the automatic path's ``pl.Unblocked`` index map uses — so both paths
+    read byte-identical windows and the outputs are bit-exact across
+    ``pipeline_depth`` settings. Analyzer rule PIPE001 checks the
+    start/wait pairing and ring depth on the traced jaxpr.
+    """
+    n_scratch = 3 if n_sink else 2
+    o_refs = refs[:-n_scratch]
+    buf = refs[len(refs) - n_scratch]
+    sem = refs[len(refs) - n_scratch + 1]
+    rows = refs[-1] if n_sink else None
+
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+    j = pl.program_id(2)
+    gw = pl.num_programs(2)
+    r_in = window_radius(spec.radius, out_nms)
+
+    def window_copy(j2, slot):
+        row0, col0 = window_origin(k, j2, h, w, bh, bw, r_in, th, tw)
+        src = x_hbm.at[i, pl.ds(row0, th), pl.ds(col0, tw)]
+        return pltpu.make_async_copy(src, buf.at[slot], sem.at[slot])
+
+    @pl.when(j == 0)
+    def _refill():
+        for ahead in range(min(depth - 1, gw)):
+            window_copy(ahead, ahead).start()
+
+    @pl.when(j + depth - 1 < gw)
+    def _prefetch():
+        window_copy(j + depth - 1, jax.lax.rem(j + depth - 1, depth)).start()
+
+    slot = jax.lax.rem(j, depth)
+    window_copy(j, slot).wait()
+    x_win = buf[slot]
+    x = luma(x_win) if rgb else x_win.astype(_compute_dtype(acc_dtype))
+
+    sink = None
+    if n_sink:
+        slots = {"f": 0, "s": 1, "d": 2}
+
+        def sink(name, arr):
+            rows[slots[name]] = arr
+            return rows[slots[name]]
+
+    _emit_outputs(
+        x, o_refs, k, j,
+        spec=spec, variant=variant, directions=directions, bh=bh, bw=bw,
+        h=h, w=w, padding=padding, out_components=out_components,
+        out_nms=out_nms, out_mag=out_mag, with_max=with_max, sink=sink,
+    )
 
 
 def _stream_kernel(
@@ -268,6 +410,8 @@ def _stream_kernel(
         "out_nms",
         "out_mag",
         "with_max",
+        "precision",
+        "pipeline_depth",
         "interpret",
     ),
 )
@@ -286,6 +430,8 @@ def edge_pallas(
     out_nms: bool = False,
     out_mag: bool = False,
     with_max: bool = False,
+    precision: str = "f32",
+    pipeline_depth: int = 0,
     interpret: bool = False,
 ):
     """Fused megakernel on the raw batch — any registered operator, any (H, W).
@@ -309,13 +455,45 @@ def edge_pallas(
 
     ``variant``/``directions`` must be valid for the operator (resolve via
     the spec first; see ``repro.api`` / ``repro.kernels.dispatch``).
+
+    ``precision="int"`` runs the exact integer lane (u8 gray input only;
+    raises with the first failing eligibility gate otherwise — see
+    ``repro.core.ladder``); outputs stay f32 and bit-identical to the
+    default lane. ``pipeline_depth=0`` (default) uses Pallas's automatic
+    double buffering; ``2..8`` switches to the manual DMA ring of that
+    depth (:func:`_pipelined_kernel`), again bit-identical by construction.
     """
     if out_mag and not out_nms:
         raise ValueError("out_mag only applies with out_nms (the magnitude "
                          "is already the primary output otherwise)")
+    if precision not in ("f32", "int"):
+        # "auto" is a dispatch-level policy (repro.kernels.dispatch
+        # resolves it before reaching the kernel wrapper).
+        raise ValueError(
+            f"unknown precision {precision!r}; expected 'f32' or 'int'"
+        )
+    if pipeline_depth and not 2 <= pipeline_depth <= 8:
+        raise ValueError(
+            f"pipeline_depth must be 0 (automatic) or 2..8 (manual DMA "
+            f"ring), got {pipeline_depth}"
+        )
     spec: OperatorSpec = get_operator(operator, params)
     variant = spec.resolve_variant(variant)
     directions = spec.resolve_directions(directions)
+    acc_dtype = None
+    if precision == "int":
+        ok, reason = ladder.int_lane_eligible(
+            spec, rgb=rgb, input_dtype=x.dtype
+        )
+        if not ok:
+            raise ValueError(f"precision='int' unavailable: {reason}")
+        acc_dtype = ladder.accum_dtype(spec)
+        if not interpret and acc_dtype == "int16":
+            # Mosaic's 16-bit vector coverage is incomplete (e.g. no i16
+            # neg); i32 holds every i16-bounded intermediate exactly, so
+            # widening preserves bit-exactness. Interpret/XLA lanes keep
+            # the narrow dtype the ladder licenses.
+            acc_dtype = "int32"
     if rgb:
         n, h, w, _c = x.shape
     else:
@@ -368,8 +546,7 @@ def edge_pallas(
         )
         out_shape.append(jax.ShapeDtypeStruct((n, gh, gw), jnp.float32))
 
-    kernel = functools.partial(
-        _kernel,
+    common = dict(
         spec=spec,
         variant=variant,
         directions=directions,
@@ -383,15 +560,52 @@ def edge_pallas(
         out_nms=out_nms,
         out_mag=out_mag,
         with_max=with_max,
+        acc_dtype=acc_dtype,
     )
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[in_spec],
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(x)
+    if pipeline_depth:
+        # Manual DMA ring: input stays in ANY/HBM, the kernel copies each
+        # clamped window itself (same window_origin offsets as in_spec's
+        # index map — byte-identical reads). The grid must run sequentially
+        # for cross-step prefetch to be legal, hence "arbitrary" semantics.
+        th, tw = window_shape(h, w, bh, bw, r_in, align=align)
+        n_sink = _sink_slots(variant, directions)
+        eh = bh + (2 if out_nms else 0) + 2 * spec.radius
+        ew = bw + (2 if out_nms else 0)
+        buf_shape = (pipeline_depth, th, tw) + ((3,) if rgb else ())
+        scratch = [
+            pltpu.VMEM(buf_shape, x.dtype),
+            pltpu.SemaphoreType.DMA((pipeline_depth,)),
+        ]
+        if n_sink:
+            scratch.append(
+                pltpu.VMEM((n_sink, eh, ew), _compute_dtype(acc_dtype))
+            )
+        kernel = functools.partial(
+            _pipelined_kernel, **common,
+            depth=pipeline_depth, th=th, tw=tw, n_sink=n_sink,
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            compiler_params=pltpu.TPUCompilerParams(
+                dimension_semantics=("arbitrary",) * 3
+            ),
+            interpret=interpret,
+        )(x)
+    else:
+        kernel = functools.partial(_kernel, **common)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[in_spec],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x)
     if len(out) == 1:
         return out[0]
     return tuple(out)

@@ -192,9 +192,10 @@ def extend_tile(
     r: int,
     padding: str = "reflect",
 ) -> jnp.ndarray:
-    """Halo'd ``(block_h + 2r, block_w + 2r)`` f32 tile for grid step (k, j),
+    """Halo'd ``(block_h + 2r, block_w + 2r)`` tile for grid step (k, j),
     built from the clamped in-bounds window ``x`` (shape ``(tile_h, tile_w)``,
-    already f32/grayscale).
+    already grayscale, in the kernel's compute dtype — f32 historically,
+    i16/i32 on the exact integer lane).
 
     Interior tiles — every requested coordinate inside the image, the
     overwhelming majority on large frames — take a dynamic-slice fast path:
@@ -202,10 +203,13 @@ def extend_tile(
     alignment-shifted) offset. Boundary/ragged tiles run the general path:
     two one-hot selection matmuls (exact; MXU-friendly) pick each requested
     global coordinate after boundary-mapping it into the image and
-    translating it into the window. Requested coordinates that fall entirely
-    outside the window only occur for output rows/cols past the ragged image
-    edge — their one-hot rows are all-zero, producing 0s that Pallas's
-    masked output store then drops.
+    translating it into the window — integer tiles round-trip through f32
+    for the matmul, exact because every selected value is an integer in
+    [-2^24, 2^24] (the ladder bound) and every product is ``0 * v`` or
+    ``1 * v``. Requested coordinates that fall entirely outside the window
+    only occur for output rows/cols past the ragged image edge — their
+    one-hot rows are all-zero, producing 0s that Pallas's masked output
+    store then drops.
     """
     th, tw = x.shape
     ext_h, ext_w = block_h + 2 * r, block_w + 2 * r
@@ -218,14 +222,15 @@ def extend_tile(
         q = _onehot_f32(boundary_index(gc, w, padding) - col0, tw)
         y = jax.lax.dot(
             p,
-            jax.lax.dot(x, q.T, preferred_element_type=jnp.float32),
+            jax.lax.dot(x.astype(jnp.float32), q.T,
+                        preferred_element_type=jnp.float32),
             preferred_element_type=jnp.float32,
         )
         if padding == "zero":
             rin = (gr >= 0) & (gr < h)
             cin = (gc >= 0) & (gc < w)
             y = jnp.where(rin[:, None] & cin[None, :], y, jnp.float32(0.0))
-        return y
+        return y.astype(x.dtype)
 
     if th < ext_h or tw < ext_w:
         # image smaller than the stencil window: every tile is a boundary tile

@@ -10,8 +10,14 @@ The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
     loop), and
   * persists the winner in a JSON cache keyed by
     ``(backend, dtype, operator, variant, padding, layout, H, W, devices,
-    mesh)`` (:class:`TuningCache`), which ``repro.kernels.dispatch``
-    consults on every call. ``devices``/``mesh`` entered with the
+    mesh, precision, depth)`` (:class:`TuningCache`), which
+    ``repro.kernels.dispatch`` consults on every call.
+    ``precision``/``depth`` entered with the DMA-pipelined low-precision
+    megakernel (schema v5): an integer-lane tuning or a manual-depth ring
+    has different VMEM pressure and arithmetic than the f32/automatic
+    path, so their slots must not collide — and the tuned pipeline depth
+    itself became part of the cached *value* (``depth``, 0 = automatic).
+    ``devices``/``mesh`` entered with the
     multi-device edge engine (schema v4): under spatial sharding the kernel
     runs on the halo-extended *local* block, so a tuning taken on a
     ``1x2x2`` mesh must not collide with the single-device entry for the
@@ -22,8 +28,9 @@ The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
     (gray/rgb) entered with the fused zero-copy pipeline (schema v2). Older
     files migrate on load: v1 entries land in the reflect/gray slot, v2
     entries map their ``SxS`` size segment onto the Sobel operator of that
-    size, v3 entries land in the single-device (``1/1x1x1``) slot; the next
-    :meth:`TuningCache.save` rewrites the file as v4.
+    size, v3 entries land in the single-device (``1/1x1x1``) slot, v4
+    entries in the ``f32/0`` precision/depth slot; the next
+    :meth:`TuningCache.save` rewrites the file as v5.
 
 Cache location: ``$REPRO_TUNE_CACHE`` if set, else
 ``~/.cache/repro/sobel_blocks.json``. The file is plain JSON so it can be
@@ -79,12 +86,14 @@ class TuneKey:
     layout: str = "gray"       # gray | rgb
     devices: int = 1           # devices the call spans (1 = single-device)
     mesh: str = "1x1x1"        # image mesh shape "DxRxC" (data x row x col)
+    precision: str = "f32"     # resolved lane: f32 | int
+    depth: int = 0             # requested pipeline depth (0 = auto)
 
     def to_str(self) -> str:
         return (
             f"{self.backend}/{self.dtype}/{self.operator}/{self.variant}"
             f"/{self.padding}/{self.layout}/{self.h}x{self.w}"
-            f"/{self.devices}/{self.mesh}"
+            f"/{self.devices}/{self.mesh}/{self.precision}/{self.depth}"
         )
 
 
@@ -141,24 +150,38 @@ def _migrate_v2_key(key: str) -> Optional[str]:
 
 def _migrate_v3_key(key: str) -> Optional[str]:
     """v3 keys predate the multi-device engine — every tuning was taken on
-    one device, so they land in the ``1/1x1x1`` slot of the v4 key space."""
+    one device, so they land in the ``1/1x1x1`` slot of the v4 key space
+    (then through v4->v5)."""
     parts = key.split("/")
     if len(parts) != 7:
         return None
-    return "/".join(parts + ["1", "1x1x1"])
+    return _migrate_v4_key("/".join(parts + ["1", "1x1x1"]))
+
+
+def _migrate_v4_key(key: str) -> Optional[str]:
+    """v4 keys predate the precision/pipeline dimensions — every tuning was
+    the f32 lane with automatic (implicit) pipelining, so they land in the
+    ``f32/0`` slot of the v5 key space; integer-lane and manual-depth
+    tunings can never collide with them."""
+    parts = key.split("/")
+    if len(parts) != 9:
+        return None
+    return "/".join(parts + ["f32", "0"])
 
 
 class TuningCache:
     """JSON-backed best-known-config store.
 
-    Schema: ``{key: {"block_h": int, "block_w": int, "us": float}}`` with a
-    ``__meta__`` entry recording the schema version. Older files (v1: no
-    padding/layout key segments; v2: size segment instead of operator name;
-    v3: no device-count/mesh segments) are migrated in-memory on load and
-    rewritten as v4 on the next :meth:`save`.
+    Schema: ``{key: {"block_h": int, "block_w": int, "depth": int,
+    "us": float}}`` with a ``__meta__`` entry recording the schema version
+    (``depth`` is the tuned pipeline depth, 0 = automatic; absent reads as
+    0). Older files (v1: no padding/layout key segments; v2: size segment
+    instead of operator name; v3: no device-count/mesh segments; v4: no
+    precision/pipeline-depth segments) are migrated in-memory on load and
+    rewritten as v5 on the next :meth:`save`.
     """
 
-    VERSION = 4
+    VERSION = 5
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -217,9 +240,11 @@ class TuningCache:
             return self
         entries = {k: v for k, v in raw.items() if not k.startswith("__")}
         if version < self.VERSION:
-            migrate = {1: _migrate_v1_key, 2: _migrate_v2_key}.get(
-                version, _migrate_v3_key
-            )
+            migrate = {
+                1: _migrate_v1_key,
+                2: _migrate_v2_key,
+                3: _migrate_v3_key,
+            }.get(version, _migrate_v4_key)
             migrated = {}
             for k, v in entries.items():
                 mk = migrate(k)
@@ -269,7 +294,9 @@ class TuningCache:
                 f.write("\n")
             os.replace(tmp, self.path)
 
-    def lookup(self, key: TuneKey) -> Optional[Tuple[int, int]]:
+    def lookup(self, key: TuneKey) -> Optional[Tuple[int, int, int]]:
+        """(block_h, block_w, depth) for the key, or None. ``depth`` is the
+        tuned pipeline depth (0 = automatic; pre-v5 entries read as 0)."""
         e = self._entries.get(key.to_str())
         if not e:
             return None
@@ -280,12 +307,20 @@ class TuningCache:
                 RuntimeWarning, stacklevel=2,
             )
             return None
-        return int(e["block_h"]), int(e["block_w"])
+        try:
+            depth = int(e.get("depth", 0))
+        except (TypeError, ValueError):
+            depth = 0
+        return int(e["block_h"]), int(e["block_w"]), depth
 
-    def record(self, key: TuneKey, block_h: int, block_w: int, us: float) -> None:
+    def record(
+        self, key: TuneKey, block_h: int, block_w: int, us: float,
+        depth: int = 0,
+    ) -> None:
         self._entries[key.to_str()] = {
             "block_h": int(block_h),
             "block_w": int(block_w),
+            "depth": int(depth),
             "us": float(us),
         }
 
@@ -388,7 +423,10 @@ def legal_block_shapes(
     return shapes
 
 
-def _run_shape(img, operator, variant, directions, padding, backend, bh, bw):
+def _run_shape(
+    img, operator, variant, directions, padding, backend, bh, bw,
+    precision="f32", depth=0,
+):
     from repro.kernels.edge import edge_pallas
 
     rgb = img.ndim >= 3 and img.shape[-1] == 3
@@ -401,6 +439,8 @@ def _run_shape(img, operator, variant, directions, padding, backend, bh, bw):
         block_h=bh,
         block_w=bw,
         rgb=rgb,
+        precision=precision,
+        pipeline_depth=depth,
         interpret=(backend != "pallas-tpu"),
     )
 
@@ -420,14 +460,20 @@ def sweep(
     shapes: Optional[Sequence[Tuple[int, int]]] = None,
     iters: int = 3,
     seed: int = 0,
+    precision: str = "f32",
+    depths: Sequence[int] = (0,),
 ) -> List[Dict]:
     """Time every candidate block shape on a random HxW image.
 
-    Returns one row per shape: ``{"block_h", "block_w", "us", "vmem_bytes",
-    "halo_overhead", "grid_steps"}`` — the structural columns of the paper's
-    Fig. 6 sweep, generalized to both block dimensions. ``layout="rgb"``
-    times the full fused gray->Sobel megakernel on an ``(1, h, w, 3)`` frame.
-    ``operator`` (registry name) overrides the legacy ``size`` selector.
+    Returns one row per (shape, pipeline depth): ``{"block_h", "block_w",
+    "depth", "us", "vmem_bytes", "halo_overhead", "grid_steps"}`` — the
+    structural columns of the paper's Fig. 6 sweep, generalized to both
+    block dimensions plus the DMA pipeline depth (0 = Pallas automatic,
+    >= 2 = manual ring). ``layout="rgb"`` times the full fused gray->Sobel
+    megakernel on an ``(1, h, w, 3)`` frame. ``operator`` (registry name)
+    overrides the legacy ``size`` selector. ``precision="int"`` times the
+    exact integer lane — pass ``dtype="uint8"`` with it (the lane rejects
+    anything else).
     """
     import jax.numpy as jnp
 
@@ -448,21 +494,23 @@ def sweep(
     img = jnp.asarray(rng.integers(0, 256, shape).astype(dtype))
     rows = []
     for bh, bw in shapes:
-        us = measure_us(
-            _run_shape, img, operator, variant, directions, padding, backend,
-            bh, bw, iters=iters,
-        )
-        gh, gw = -(-h // bh), -(-w // bw)
-        rows.append(
-            {
-                "block_h": bh,
-                "block_w": bw,
-                "us": us,
-                "vmem_bytes": tile_vmem_bytes(bh, bw, r, channels=channels),
-                "halo_overhead": halo_amplification(bh, bw, r),
-                "grid_steps": gh * gw,
-            }
-        )
+        for depth in depths:
+            us = measure_us(
+                _run_shape, img, operator, variant, directions, padding,
+                backend, bh, bw, precision, depth, iters=iters,
+            )
+            gh, gw = -(-h // bh), -(-w // bw)
+            rows.append(
+                {
+                    "block_h": bh,
+                    "block_w": bw,
+                    "depth": depth,
+                    "us": us,
+                    "vmem_bytes": tile_vmem_bytes(bh, bw, r, channels=channels),
+                    "halo_overhead": halo_amplification(bh, bw, r),
+                    "grid_steps": gh * gw,
+                }
+            )
     return rows
 
 
@@ -485,8 +533,11 @@ def autotune(
     save: bool = True,
     devices: int = 1,
     mesh: str = "1x1x1",
-) -> Tuple[int, int]:
-    """Best (block_h, block_w) for the workload; cached across processes.
+    precision: str = "f32",
+    pipeline_depth: Optional[int] = None,
+) -> Tuple[int, int, int]:
+    """Best (block_h, block_w, depth) for the workload; cached across
+    processes.
 
     Consults ``cache`` (default: the process-wide JSON cache) unless
     ``refresh``; on a miss, sweeps the legal shapes, records the winner, and
@@ -495,6 +546,11 @@ def autotune(
     ``devices``/``mesh`` slot the tuning for a sharded deployment — the
     sweep itself times the per-shard (h, w) block, which for a spatial mesh
     is the halo-extended local shape (see ``dispatch.choose_block_shape``).
+
+    ``precision`` keys (and times) the resolved arithmetic lane.
+    ``pipeline_depth=None`` (auto) lets the sweep choose between automatic
+    pipelining (depth 0) and a manual depth-2 DMA ring, recording the
+    faster; an explicit depth pins the sweep (and the cache slot) to it.
     """
     from repro.core.filters import get_operator, operator_for_size
 
@@ -504,20 +560,22 @@ def autotune(
     variant = get_operator(operator).resolve_variant(variant)
     cache = cache if cache is not None else get_default_cache()
     key = TuneKey(backend, dtype, operator, variant, h, w, padding, layout,
-                  devices, mesh)
+                  devices, mesh, precision, pipeline_depth or 0)
     if not refresh:
         hit = cache.lookup(key)
         if hit is not None:
             return hit
+    depths = (0, 2) if pipeline_depth is None else (pipeline_depth,)
     rows = sweep(
         h, w, operator=operator, variant=variant, directions=directions,
         dtype=dtype, backend=backend, padding=padding, layout=layout,
-        shapes=shapes, iters=iters,
+        shapes=shapes, iters=iters, precision=precision, depths=depths,
     )
     if not rows:
         raise ValueError(f"no legal block shapes for {key.to_str()}")
     best = min(rows, key=lambda r: r["us"])
-    cache.record(key, best["block_h"], best["block_w"], best["us"])
+    cache.record(key, best["block_h"], best["block_w"], best["us"],
+                 best["depth"])
     if save:
         cache.save()
-    return best["block_h"], best["block_w"]
+    return best["block_h"], best["block_w"], best["depth"]
