@@ -1,0 +1,107 @@
+"""Fused StencilPlan Canny vs staged composition: the cost of multi-stage.
+
+Series per case, all producing the NMS-thinned magnitude of a Gaussian-
+smoothed gray u8 frame (``EdgeConfig(plan="canny5")``, the PR-10 stencil
+platform's flagship workload):
+
+  * ``fused``  — ONE launch on the host's fast backend: blur -> Sobel ->
+    NMS inside a single program with the composed (2+2+1) halo. The thin
+    map is the only whole-image write.
+  * ``staged`` — the pre-platform composition, split at the pipeline seam:
+    stage 1 is a separately-jitted Gaussian pass that materializes the
+    blurred frame in HBM; stage 2 is the single-operator fused sobel5+NMS
+    engine re-reading it. This is exactly what the plan fusion removes:
+    one whole-image HBM write + re-read per pre-stage.
+  * ``pallas`` — the fused plan kernel row on CPU hosts (interpreter:
+    correctness-level trajectory signal, same caveat as table2's ``fused``
+    rows; on TPU hosts this IS the ``fused`` row and is not duplicated).
+
+Hysteresis is excluded on purpose (an identical post-gather XLA stage in
+every composition — see benchmarks/nms_fused.py for the same choice).
+
+Timing uses the shared ``repro.kernels.tuning.measure_us`` harness.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import EdgeConfig, edge_detect
+from repro.core.filters import get_plan
+from repro.core.sobel import _pad, _stage_apply
+from repro.kernels.edge import default_block_shape
+from repro.kernels.tuning import measure_us
+
+CASES = [1024, 2048]
+SMOKE_CASES = [128]
+_PLAN = "canny5"
+
+
+def _fast_backend() -> str:
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pallas_backend() -> str:
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
+
+
+def _blur_stage(x: jnp.ndarray) -> jnp.ndarray:
+    """Stage 1 of the staged baseline: the plan's Gaussian pre-stage as its
+    own whole-image pass (pad + correlate, output materializes in HBM)."""
+    stage = get_plan(_PLAN).pre_stages[0]
+    h, w = x.shape[-2], x.shape[-1]
+    ext, _, _ = _pad(x.astype(jnp.float32), stage.radius, "reflect")
+    return _stage_apply(ext, stage, h, w)
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    fast = _fast_backend()
+    pallas = _pallas_backend()
+    plan = get_plan(_PLAN)
+    for n in SMOKE_CASES if smoke else CASES:
+        img = jnp.asarray(rng.integers(0, 256, (n, n)).astype(np.uint8))
+        bh, bw = default_block_shape(n, n, 2 * plan.reach + 1)
+        base = EdgeConfig(normalize=False, block_h=bh, block_w=bw)
+
+        fused = jax.jit(lambda x: edge_detect(
+            x, base.replace(plan=_PLAN, backend=fast)).magnitude)
+        stage1 = jax.jit(_blur_stage)
+        stage2 = jax.jit(lambda b: edge_detect(
+            b, base.replace(operator="sobel5", nms=True,
+                            backend=fast)).magnitude)
+
+        def staged(x):
+            return stage2(stage1(x))  # blurred frame materializes between
+
+        series = [
+            ("fused", fused, fast),
+            ("staged", staged, fast),
+        ]
+        if pallas != fast:
+            pallas_fused = jax.jit(lambda x: edge_detect(
+                x, base.replace(plan=_PLAN, backend=pallas)).magnitude)
+            series.append(("pallas", pallas_fused, pallas))
+
+        us = {path: measure_us(fn, img, iters=3) for path, fn, _ in series}
+        for path, _fn, backend in series:
+            rows.append(
+                {
+                    "name": f"canny/{_PLAN}/{n}x{n}/{path}",
+                    "us_per_call": us[path],
+                    "backend": backend,
+                    "variant": "v2",
+                    "derived": (
+                        f"MPS={n * n / us[path]:.1f};"
+                        f"speedup_vs_staged={us['staged'] / us[path]:.2f};"
+                        f"path={path}"
+                    ),
+                    "config": {"plan": _PLAN, "n": n, "nms": True,
+                               "input": "gray-u8"},
+                }
+            )
+    return rows

@@ -128,6 +128,7 @@ def compare_to_baseline(
 
 def main() -> None:
     from benchmarks import (
+        canny,
         fig6_blocksweep,
         fig7_ssim,
         lowprec,
@@ -145,6 +146,7 @@ def main() -> None:
         ("table2", table2_throughput),
         ("lowprec", lowprec),
         ("nms", nms_fused),
+        ("canny", canny),
         ("fig6", fig6_blocksweep),
         ("fig7", fig7_ssim),
         ("streaming", streaming),

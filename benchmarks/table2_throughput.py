@@ -4,7 +4,7 @@ at 1024/2048 images. The paper's headline is the speedup of the optimized
 kernel over OpenCV-GPU; here the like-for-like ratio is v2 vs direct.
 
 Each case is measured on BOTH execution paths of
-``repro.core.pipeline.edge_detect``:
+``repro.api.edge_detect``:
 
   * ``legacy`` — backend="xla": RGB->gray, jnp.pad staging, Sobel, full-image
     normalization as separate XLA passes (fastest on CPU hosts);

@@ -44,6 +44,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--modes", type=str, default=None, help="comma-separated subset")
     p.add_argument("--layouts", type=str, default=None, help="gray,rgb")
     p.add_argument(
+        "--plans",
+        type=str,
+        default=None,
+        help="comma-separated StencilPlan subset for the fused multi-stage "
+        "battery (default: canny5,blur_sobel5; '' skips it)",
+    )
+    p.add_argument(
         "--no-export",
         action="store_true",
         help="skip the TPU Mosaic export checks (FUSE003)",
@@ -71,6 +78,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             paddings=_csv(args.paddings),
             modes=_csv(args.modes),
             layouts=_csv(args.layouts),
+            plans=_csv(args.plans),
             export=not args.no_export,
             full=args.full,
         )

@@ -533,14 +533,23 @@ def check_vmem_budget(
     nms: bool = False,
     channels: Optional[int] = None,
     budget: Optional[int] = None,
+    plan=None,
 ) -> List[Violation]:
     """VMEM001: the per-grid-step working set (window + halo'd
-    intermediates + output tile, f32) fits the VMEM budget."""
+    intermediates + output tile, f32) fits the VMEM budget.
+
+    With ``plan`` (a :class:`~repro.core.filters.StencilPlan`) the window
+    radius is the *composed* reach of the whole stage chain — the fused
+    multi-stage kernel pads once by ``plan.linear_reach`` (+1 for a
+    trailing NMS stage), not per stage."""
     from repro.kernels import tuning
     from repro.kernels.tiling import tile_vmem_bytes, window_radius
 
     cap = tuning.VMEM_BUDGET if budget is None else budget
-    r_in = window_radius(radius, nms)
+    if plan is not None:
+        r_in = window_radius(plan.linear_reach, nms or plan.nms)
+    else:
+        r_in = window_radius(radius, nms)
     need = tile_vmem_bytes(block_h, block_w, r_in, channels=channels)
     if need <= cap:
         return []
@@ -575,11 +584,14 @@ def check_halo_window(
     block_w: int,
     image_hw: Optional[Tuple[int, int]] = None,
     align: Tuple[int, int] = (1, 1),
+    plan=None,
 ) -> List[Violation]:
     """HALO001: the halo the kernel *compiled with* — recovered by
     evaluating its Unblocked BlockSpec index map at an interior grid
-    point — equals ``window_radius(spec.radius, nms)``, and the sharded
-    halo exchange is sized identically.
+    point — equals ``window_radius(spec.radius, nms)`` (with ``plan``:
+    ``window_radius(plan.linear_reach, plan.nms)``, the composed reach of
+    the fused stage chain), and the sharded halo exchange is sized
+    identically.
 
     At interior grid step (k, j) = (1, 1) the clamp in
     :func:`repro.kernels.tiling.window_origin` is inactive, so
@@ -590,7 +602,10 @@ def check_halo_window(
     from repro.kernels.tiling import window_radius, window_shape
     from repro.sharding import halo as halo_mod
 
-    expected = window_radius(spec.radius, nms)
+    if plan is not None:
+        expected = window_radius(plan.linear_reach, nms or plan.nms)
+    else:
+        expected = window_radius(spec.radius, nms)
     out: List[Violation] = []
     for pc in find_pallas_eqns(jaxpr):
         gm = pc.params["grid_mapping"]
@@ -614,12 +629,14 @@ def check_halo_window(
             r_h = block_h - offs[1]
             r_w = block_w - offs[2]
             if r_h != expected or r_w != expected:
+                src = (f"linear_reach={plan.linear_reach}, nms={nms or plan.nms}"
+                       if plan is not None else f"radius={spec.radius}, nms={nms}")
                 out.append(
                     Violation(
                         "HALO001",
                         location,
                         f"kernel window reach ({r_h}, {r_w}) != "
-                        f"window_radius(radius={spec.radius}, nms={nms}) "
+                        f"window_radius({src}) "
                         f"= {expected}",
                         detail=(
                             ("derived", f"({r_h}, {r_w})"),
@@ -687,7 +704,7 @@ def check_halo_window(
                             ),
                         )
                     )
-        exch = halo_mod.exchange_radius(spec, nms)
+        exch = halo_mod.exchange_radius(spec, nms, plan=plan)
         if exch != expected:
             out.append(
                 Violation(

@@ -4,8 +4,10 @@ Enumerates operator × backend × padding × layout × output-mode combos,
 traces each through the public ``repro.api`` surface (no execution —
 ``jax.make_jaxpr`` / ``jax.export`` only), and runs every applicable
 rule from :mod:`repro.analysis.rules`. Adds spec-level checks (dtype
-ladder, default-block VMEM, static registration) per operator and the
-AST determinism scan over the kernel-math sources.
+ladder, default-block VMEM, static registration) per operator, a
+multi-stage StencilPlan battery (plan × backend × padding: one-launch
+FUSE002, composed-reach HALO001/VMEM001), and the AST determinism scan
+over the kernel-math sources.
 
 Fast sweep (default): two operators, reflect padding — enough to catch
 an engine regression in seconds. Full sweep (``--all`` / ``full=True``):
@@ -27,7 +29,8 @@ from jax import export as jax_export
 from repro.analysis import ast_rules, rules
 from repro.analysis.violations import Report, Violation
 
-__all__ = ["analyze", "MODES", "kernel_math_files", "DEFAULT_OPERATORS"]
+__all__ = ["analyze", "MODES", "kernel_math_files", "DEFAULT_OPERATORS",
+           "DEFAULT_PLANS"]
 
 # Trace geometry: >= 3 blocks per axis so HALO001 can probe an interior
 # grid step (see rules.check_halo_window).
@@ -40,6 +43,7 @@ EXPORT_SHAPE = (1, 512, 640)
 EXPORT_BLOCK = (64, 128)
 
 DEFAULT_OPERATORS = ("sobel3", "sobel5")
+DEFAULT_PLANS = ("canny5", "blur_sobel5")
 BACKENDS = ("xla", "pallas-interpret")
 PAD_MODES = ("reflect", "edge", "zero")
 
@@ -204,6 +208,61 @@ def _combo_violations(
     return out
 
 
+def _plan_violations(
+    plan_name: str, backend: str, padding: str, report: Report
+) -> List[Violation]:
+    """Multi-stage StencilPlan battery: the whole plan (pre-stages →
+    gradient → optional NMS) must trace as ONE pallas_call (FUSE002 with
+    ``expected=1`` — the tentpole claim of the stencil platform), with the
+    *composed* halo (``plan.linear_reach`` + NMS ring) on the kernel
+    window, the VMEM budget, and the sharded exchange width."""
+    from repro import api
+    from repro.core.filters import get_plan
+
+    plan = get_plan(plan_name)
+    location = f"plan:{plan_name}/{backend}/{padding}/gray"
+    cfg = api.EdgeConfig(
+        plan=plan_name,
+        backend=backend,
+        padding=padding,
+        block_h=TRACE_BLOCK[0],
+        block_w=TRACE_BLOCK[1],
+    )
+    x = jnp.zeros(TRACE_SHAPE, jnp.uint8)
+    jaxpr = jax.make_jaxpr(lambda a: api.edge_detect(a, cfg))(x)
+    report.combos.append(location)
+    spec = plan.gradient
+    out: List[Violation] = []
+    if backend.startswith("pallas"):
+        out += rules.check_fusion_purity(jaxpr, location=location)
+        out += rules.check_kernel_cardinality(jaxpr, location=location,
+                                              expected=1)
+        out += rules.check_halo_window(
+            jaxpr,
+            location=location,
+            spec=spec,
+            nms=plan.nms,
+            block_h=TRACE_BLOCK[0],
+            block_w=TRACE_BLOCK[1],
+            image_hw=TRACE_SHAPE[1:],
+            align=(1, 1),
+            plan=plan,
+        )
+        out += rules.check_vmem_budget(
+            location=location,
+            block_h=TRACE_BLOCK[0],
+            block_w=TRACE_BLOCK[1],
+            radius=spec.radius,
+            nms=plan.nms,
+            plan=plan,
+        )
+        report.checks += 4
+    out += rules.check_kernel_accum_dtype(jaxpr, location=location, spec=spec)
+    out += rules.check_contraction_fences(jaxpr, location=location)
+    report.checks += 2
+    return out
+
+
 def _export_violations(op: str, layout: str, mode: Mode, report: Report) -> List[Violation]:
     """FUSE003 over the real Mosaic lowering (cross-platform TPU export;
     runs fine on CPU hosts — nothing executes)."""
@@ -244,7 +303,7 @@ def _export_violations(op: str, layout: str, mode: Mode, report: Report) -> List
 
 def _spec_violations(op: str, report: Report) -> List[Violation]:
     from repro.core.filters import get_operator
-    from repro.kernels.ops import default_block_shape
+    from repro.kernels.edge import default_block_shape
 
     spec = get_operator(op)
     out: List[Violation] = []
@@ -310,21 +369,25 @@ def analyze(
     paddings: Optional[Sequence[str]] = None,
     modes: Optional[Sequence[str]] = None,
     layouts: Optional[Sequence[str]] = None,
+    plans: Optional[Sequence[str]] = None,
     export: bool = True,
     full: bool = False,
 ) -> Report:
     """Run the analyzer sweep; returns a :class:`Report` (no baseline
     applied — the CLI handles that)."""
-    from repro.core.filters import list_operators
+    from repro.core.filters import list_operators, list_plans
 
     if operators is None:
         operators = tuple(list_operators()) if full else DEFAULT_OPERATORS
+    if plans is None:
+        plans = tuple(list_plans()) if full else DEFAULT_PLANS
     backends = tuple(backends or BACKENDS)
     paddings = tuple(paddings or (PAD_MODES if full else ("reflect",)))
     mode_names = tuple(modes or MODES)
     layouts = tuple(layouts or ("gray", "rgb"))
 
-    report = Report(meta={"full": full, "operators": list(operators)})
+    report = Report(meta={"full": full, "operators": list(operators),
+                          "plans": list(plans)})
     for op in operators:
         for layout in layouts:
             # RGB exercises the in-kernel luma path, which is operator-
@@ -349,6 +412,10 @@ def analyze(
                                 op, backend, padding, layout, mode, report
                             )
                         )
+    for plan_name in plans:
+        for backend in backends:
+            for padding in paddings:
+                report.add(_plan_violations(plan_name, backend, padding, report))
     if export:
         for op in operators if full else operators[:1]:
             for mode_name in mode_names:

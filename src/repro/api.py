@@ -13,11 +13,13 @@ One call::
     result.edges          # (..., H, W) bool edge map when hysteresis=True
 
 :class:`EdgeConfig` is one frozen dataclass — operator (any name in the
-``repro.core.filters`` registry), directions, variant, padding, backend,
-block overrides, and output selection — threaded verbatim through
-``repro.kernels.dispatch`` down to the Pallas megakernel / XLA reference.
-:class:`EdgeResult` is a structured output; both are registered pytrees, so
-the facade composes with ``jax.jit``/``vmap``/sharding.
+``repro.core.filters`` registry) or multi-stage :class:`StencilPlan`
+(``plan="canny5"`` for the fused Gaussian5 -> Sobel5 -> NMS chain),
+directions, variant, padding, backend, block overrides, and output
+selection — threaded verbatim through ``repro.kernels.dispatch`` down to
+the Pallas megakernel / XLA reference. :class:`EdgeResult` is a structured
+output; both are registered pytrees, so the facade composes with
+``jax.jit``/``vmap``/sharding.
 
 Input layout is auto-detected (``HW`` / ``HWC`` / ``NHW`` / ``NHWC`` /
 batched video ``NTHW``/``NTHWC``): a trailing dimension of exactly 3 on a
@@ -25,10 +27,11 @@ batched video ``NTHW``/``NTHWC``): a trailing dimension of exactly 3 on a
 ``(H, W)`` pair is batch. Pass ``layout=`` to override (e.g. a genuine
 3-pixel-wide grayscale image).
 
-The legacy entry points — ``repro.core.pipeline.edge_detect``,
-``repro.kernels.dispatch.{sobel,edge_detect}``,
-``repro.kernels.ops.{sobel,edge_pipeline}`` — are deprecation-warning shims
-over this module and remain bit-exact with it.
+This module IS the entry point: the historical shims
+(``repro.core.pipeline.edge_detect``, ``repro.kernels.dispatch.{sobel,
+edge_detect}``, ``repro.kernels.ops.{sobel,edge_pipeline}``) were removed
+with the stencil-platform refactor — see README "Migrating from the legacy
+entry points".
 """
 from __future__ import annotations
 
@@ -38,7 +41,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.filters import SobelParams, get_operator
+from repro.core.filters import SobelParams, StencilPlan, get_operator, resolve_plan
 from repro.sharding.halo import ShardConfig
 
 __all__ = [
@@ -83,6 +86,16 @@ class EdgeConfig:
     Fields:
       operator:   registered operator name (``sobel5`` | ``sobel3`` |
                   ``scharr3`` | ``prewitt3`` | ``sobel7`` | custom).
+      plan:       multi-stage :class:`~repro.core.filters.StencilPlan` —
+                  a registered plan name (``canny5`` | ``blur_sobel5``) or
+                  a :class:`StencilPlan` value. The plan is the single
+                  source of truth for the whole stencil chain: it
+                  overrides ``operator`` (the resolved config pins
+                  ``operator`` to the plan's gradient stage), composes the
+                  halo from every stage radius, and — when it ends in an
+                  ``nms`` stage — forces ``nms=True``. The entire chain
+                  runs as ONE fused Pallas launch (or the equivalent
+                  staged XLA reference), bit-exact across backends/meshes.
       directions: direction count; 0 = the operator's maximum.
       variant:    algorithmic variant (``direct``/``separable``/``v1``/``v2``);
                   ``auto`` = the operator's best. Unsupported ladder variants
@@ -145,6 +158,7 @@ class EdgeConfig:
     """
 
     operator: str = "sobel5"
+    plan: "str | StencilPlan | None" = None
     directions: int = 0
     variant: str = "auto"
     params: Optional[SobelParams] = None
@@ -228,11 +242,34 @@ class EdgeConfig:
                 )
         if low is not None and high is not None and low > high:
             raise ValueError(f"low={low} must not exceed high={high}")
-        spec = get_operator(self.operator, self.params)
+        plan = resolve_plan(self.plan)
+        if plan is not None:
+            spec = plan.gradient
+            if spec is None:
+                raise ValueError(
+                    f"plan {plan.name!r} has no gradient stage; the edge "
+                    "engine emits direction components (append a gradient "
+                    "operator stage)"
+                )
+            if (self.nms or hysteresis) and not plan.nms:
+                raise ValueError(
+                    f"plan gate 'nms-stage': plan {plan.name!r} has no "
+                    "trailing 'nms' stage but nms/hysteresis was requested; "
+                    "the plan is the single source of truth — append 'nms' "
+                    "to its stages"
+                )
+            operator = spec.name
+            nms = plan.nms or hysteresis
+        else:
+            spec = get_operator(self.operator, self.params)
+            operator = self.operator
+            nms = self.nms or hysteresis
         return self.replace(
+            plan=plan,
+            operator=operator,
             directions=spec.resolve_directions(self.directions),
             variant=spec.resolve_variant(self.variant),
-            nms=self.nms or hysteresis,
+            nms=nms,
             hysteresis=hysteresis,
             low=low,
             high=high,
@@ -240,6 +277,9 @@ class EdgeConfig:
 
     @property
     def spec(self):
+        plan = resolve_plan(self.plan)
+        if plan is not None and plan.gradient is not None:
+            return plan.gradient
         return get_operator(self.operator, self.params)
 
 

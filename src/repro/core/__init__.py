@@ -3,10 +3,22 @@ declarative operator registry (``OperatorSpec``)."""
 from repro.core.filters import (  # noqa: F401
     OperatorSpec,
     SobelParams,
+    Stage,
+    StencilPlan,
     get_operator,
+    get_plan,
+    get_stage,
     list_operators,
+    list_plans,
+    list_stages,
+    make_plan,
     make_separable_spec,
+    plan_identity,
     register_operator,
+    register_plan,
+    register_pointwise,
+    register_stage,
+    resolve_plan,
     filter_bank_3x3,
     filter_bank_5x5,
     kd,
@@ -27,6 +39,6 @@ from repro.core.nms import (  # noqa: F401
     resolve_thresholds,
     thin_map,
 )
-from repro.core.pipeline import edge_detect, make_sharded_edge_fn, rgb_to_gray  # noqa: F401
+from repro.core.pipeline import make_sharded_edge_fn, rgb_to_gray  # noqa: F401
 from repro.core.sobel import VARIANTS, magnitude, sobel, sobel_components  # noqa: F401
 from repro.core.ssim import ssim  # noqa: F401

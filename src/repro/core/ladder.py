@@ -42,6 +42,9 @@ __all__ = [
     "tap_accumulation_bounds",
     "accum_dtype",
     "int_lane_eligible",
+    "plan_input_bound",
+    "plan_int_eligible",
+    "plan_accum_dtype",
 ]
 
 # Exact-representation ceilings for the dtype ladder.
@@ -137,3 +140,112 @@ def int_lane_eligible(
             f"accumulation bound {b['worst']:.0f} exceeds i32"
         )
     return True, ""
+
+
+# ---------------------------------------------------------------------------
+# StencilPlan extension: chain the bound through every pre-stage, then
+# apply the per-operator proof above to the gradient stage with the
+# chained input bound. A one-gradient-stage plan reduces exactly to
+# ``int_lane_eligible(spec)``.
+# ---------------------------------------------------------------------------
+
+def plan_input_bound(plan, *, input_max: int = 255):
+    """(bound, reason) — the gradient stage's input magnitude bound after
+    the plan's pre-stages, or (None, reason) when a pre-stage leaves the
+    integer lane. ``reason`` names the failing gate (used verbatim in the
+    ``precision="int"`` error message).
+
+    Per stage kind: window max/min selects an input value (bound
+    preserved); an integer-tap linear stage multiplies the bound by
+    ``sum|taps|`` (triangle inequality, same as the gradient proof); a
+    fractional-tap stage (the normalized Gaussians) has no exact integer
+    form; pointwise fns carry their own registered bound transform.
+    """
+    from repro.core import filters as F
+
+    m = float(input_max)
+    for stage in plan.pre_stages:
+        if stage.kind == "window_reduce":
+            continue
+        if stage.kind == "linear":
+            bank = stage.operator.bank(1)
+            if not np.all(bank == np.round(bank)):
+                return None, (
+                    f"plan gate 'integer-taps': stage {stage.name!r} has "
+                    "fractional taps (no exact integer form)"
+                )
+            m = m * float(np.abs(bank[0]).sum())
+        elif stage.kind == "pointwise":
+            _fn, bound = F.get_pointwise(stage.op)
+            if bound is None:
+                return None, (
+                    f"plan gate 'integer-taps': pointwise stage "
+                    f"{stage.name!r} has no integer bound transform"
+                )
+            m = float(bound(m))
+        if m > F32_EXACT_INT:
+            return None, (
+                f"plan gate 'integer-taps': bound {m:.0f} after stage "
+                f"{stage.name!r} exceeds f32's exact integer range (2^24)"
+            )
+    return m, ""
+
+
+def plan_int_eligible(
+    plan, *, rgb: bool, input_dtype=None, input_max: int = 255
+) -> Tuple[bool, str]:
+    """Plan-level (eligible, reason) for the exact integer lane."""
+    spec = plan.gradient
+    if spec is None:
+        return False, (
+            f"plan {plan.name!r} has no gradient stage; the integer lane "
+            "covers gradient plans only"
+        )
+    if not plan.pre_stages:
+        return int_lane_eligible(
+            spec, rgb=rgb, input_dtype=input_dtype, input_max=input_max
+        )
+    if rgb:
+        return False, (
+            "RGB input needs the fractional BT.601 luma, whose fenced f32 "
+            "rounding has no bit-exact fixed-point equivalent"
+        )
+    if input_dtype is not None and np.dtype(input_dtype) != np.dtype(np.uint8):
+        return False, (
+            f"input dtype {np.dtype(input_dtype).name} is not uint8 — the "
+            "integer bound only covers [0, 255] integer frames"
+        )
+    m, reason = plan_input_bound(plan, input_max=input_max)
+    if m is None:
+        return False, reason
+    b = tap_accumulation_bounds(spec, input_max=m)
+    if not b["integer_taps"]:
+        return False, f"operator {spec.name!r} has fractional taps"
+    if not b["f32_exact"]:
+        return False, (
+            f"accumulation bound {b['worst']:.0f} exceeds f32's exact "
+            "integer range (2^24); the f32 lane itself rounds"
+        )
+    if not b["fits_i32"]:
+        return False, f"accumulation bound {b['worst']:.0f} exceeds i32"
+    return True, ""
+
+
+def plan_accum_dtype(plan, *, input_max: int = 255) -> Optional[str]:
+    """Narrowest exact integer accumulation dtype for the whole plan."""
+    spec = plan.gradient
+    if spec is None:
+        return None
+    if not plan.pre_stages:
+        return accum_dtype(spec, input_max=input_max)
+    m, _reason = plan_input_bound(plan, input_max=input_max)
+    if m is None:
+        return None
+    b = tap_accumulation_bounds(spec, input_max=m)
+    if not b["integer_taps"] or not b["f32_exact"]:
+        return None
+    if b["fits_i16"]:
+        return "int16"
+    if b["fits_i32"]:
+        return "int32"
+    return None

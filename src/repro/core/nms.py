@@ -45,7 +45,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sobel import magnitude, spec_components
+from repro.core.sobel import magnitude, plan_components, spec_components
 
 __all__ = [
     "DEFAULT_LOW",
@@ -155,8 +155,9 @@ def thin_map(
     directions: int,
     padding: str = "reflect",
     precision: str = "f32",
+    plan: "F.StencilPlan | None" = None,
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...], jnp.ndarray]:
-    """Pure-XLA reference for the fused gray->Sobel->NMS stage.
+    """Pure-XLA reference for the fused gray->[pre-stages]->Sobel->NMS stage.
 
     ``gray``: ``(..., H, W)`` float32 grayscale. ``variant``/``directions``
     must already be resolved against ``spec``. Returns ``(thin, comps,
@@ -164,9 +165,11 @@ def thin_map(
     components, and the center (un-thinned) magnitude — the peak source for
     normalization/thresholds, identical to the non-NMS pipeline's.
 
-    The pad radius is ``spec.radius + 1``: the component ladder runs on the
-    ``(H+2, W+2)`` extended output so the NMS neighborhood exists at the
-    image border, mirroring the kernel's grown halo window (DESIGN.md §7).
+    The pad radius is the composed linear reach + 1 (``spec.radius + 1``
+    for single-operator runs, ``plan.linear_reach + 1`` when ``plan``
+    chains pre-stages): the component ladder runs on the ``(H+2, W+2)``
+    extended output so the NMS neighborhood exists at the image border,
+    mirroring the kernel's grown halo window (DESIGN.md §7, §12).
 
     ``precision="int"`` runs the gradient ladder in the exact integer
     accumulation dtype ``repro.core.ladder`` proves (the caller must have
@@ -175,18 +178,23 @@ def thin_map(
     f32 by contract — bit-identical to the default lane.
     """
     h, w = gray.shape[-2], gray.shape[-1]
+    reach = plan.linear_reach if plan is not None else spec.radius
     if precision == "int":
         from repro.core import ladder
 
-        acc = ladder.accum_dtype(spec)
+        acc = (ladder.plan_accum_dtype(plan) if plan is not None
+               else ladder.accum_dtype(spec))
         if acc is None:
             raise ValueError(
                 f"precision='int' unavailable for operator {spec.name!r}"
             )
-        xp = _pad_ext(gray.astype(jnp.dtype(acc)), spec.radius + 1, padding)
+        xp = _pad_ext(gray.astype(jnp.dtype(acc)), reach + 1, padding)
     else:
-        xp = _pad_ext(gray.astype(jnp.float32), spec.radius + 1, padding)
-    comps_ext = spec_components(xp, spec, h + 2, w + 2, variant, directions)
+        xp = _pad_ext(gray.astype(jnp.float32), reach + 1, padding)
+    if plan is not None:
+        comps_ext = plan_components(xp, plan, h + 2, w + 2, variant, directions)
+    else:
+        comps_ext = spec_components(xp, spec, h + 2, w + 2, variant, directions)
     if precision == "int":
         comps_ext = tuple(c.astype(jnp.float32) for c in comps_ext)
     mag_ext = magnitude(comps_ext)

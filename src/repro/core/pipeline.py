@@ -5,13 +5,15 @@ RSS magnitude -> normalization, batched over images, optionally sharded over
 a device mesh (batch -> data axes, image rows -> model axis).
 
 On the Pallas backends the whole chain is ONE fused zero-copy kernel launch
-(``repro.kernels.dispatch.edge_detect``): the raw u8 frame is read from HBM
+(``repro.api.edge_detect``): the raw u8 frame is read from HBM
 exactly once, luma and padding happen per-tile in VMEM, and normalization
 rides on per-block maxima emitted by the kernel. The ``xla`` backend keeps
 the legacy multi-pass pipeline; outputs are bit-exact across backends.
 
 This is also registered as the ``sobel_hd`` architecture for the dry-run:
-``serve_step`` = one batched edge-detection pass.
+``serve_step`` = one batched edge-detection pass. The historical
+``edge_detect`` kwargs shim that lived here was removed with the
+stencil-platform refactor — use :func:`repro.api.edge_detect`.
 """
 from __future__ import annotations
 
@@ -21,9 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.filters import SobelParams
-
-__all__ = ["rgb_to_gray", "edge_detect", "make_sharded_edge_fn"]
+__all__ = ["rgb_to_gray", "make_sharded_edge_fn"]
 
 # ITU-R BT.601 luma weights (OpenCV cvtColor convention).
 _LUMA = (0.299, 0.587, 0.114)
@@ -49,57 +49,6 @@ def rgb_to_gray(images: jnp.ndarray) -> jnp.ndarray:
         jnp.maximum(_LUMA[0] * x[..., 0], lo)
         + jnp.maximum(_LUMA[1] * x[..., 1], lo)
     ) + jnp.maximum(_LUMA[2] * x[..., 2], lo)
-
-
-def edge_detect(
-    images: jnp.ndarray,
-    *,
-    size: int = 5,
-    directions: int = 4,
-    variant: str = "v2",
-    params: SobelParams = SobelParams(),
-    padding: str = "reflect",
-    normalize: bool = True,
-    backend: Optional[str] = None,
-    block_h: Optional[int] = None,
-    block_w: Optional[int] = None,
-) -> jnp.ndarray:
-    """Deprecated: full pipeline on a batch of images, kwargs form.
-
-    Use :func:`repro.api.edge_detect` — this shim builds the equivalent
-    :class:`~repro.api.EdgeConfig` and returns ``result.magnitude``
-    (bit-exact with the facade; a test pins this).
-
-    Args:
-      images: ``(..., H, W)`` grayscale or ``(..., H, W, 3)`` RGB.
-      normalize: scale magnitudes into [0, 255] (per image) and saturate —
-        the display form used for the paper's Fig. 1/7 outputs.
-      backend: ``auto`` / ``pallas-tpu`` / ``pallas-interpret`` / ``xla``;
-        None = auto. Pallas backends run the whole pipeline as one fused
-        zero-copy kernel launch.
-      block_h, block_w: Pallas tile override; None = tuning cache / default.
-    Returns:
-      ``(..., H, W)`` float32 edge image.
-    """
-    import warnings
-
-    # Imported here: repro.core must stay importable without repro.kernels
-    # (kernels itself builds on repro.core.sobel).
-    from repro.api import EdgeConfig, edge_detect as api_edge_detect
-    from repro.core.filters import operator_for_size
-
-    warnings.warn(
-        "repro.core.pipeline.edge_detect is deprecated; use "
-        "repro.api.edge_detect",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    cfg = EdgeConfig(
-        operator=operator_for_size(size), directions=directions,
-        variant=variant, params=params, padding=padding, normalize=normalize,
-        backend=backend, block_h=block_h, block_w=block_w,
-    )
-    return api_edge_detect(images, cfg).magnitude
 
 
 def make_sharded_edge_fn(

@@ -27,7 +27,14 @@ import numpy as np
 from repro.core import filters as F
 from repro.core.filters import SobelParams
 
-__all__ = ["sobel", "sobel_components", "spec_components", "magnitude", "VARIANTS"]
+__all__ = [
+    "sobel",
+    "sobel_components",
+    "spec_components",
+    "plan_components",
+    "magnitude",
+    "VARIANTS",
+]
 
 VARIANTS = ("direct", "separable", "v1", "v2")
 
@@ -237,6 +244,88 @@ def spec_components(
 
 
 # ---------------------------------------------------------------------------
+# StencilPlan chaining: single-plane pre-stages on shrinking extents, then
+# the gradient stage via the variant ladder above. Shared — like
+# ``spec_components`` — by the XLA reference path and the fused Pallas
+# kernel body, so fused-vs-staged bit-exactness holds by construction.
+# ---------------------------------------------------------------------------
+
+def _window_reduce(x, r: int, mode: str, out_h, out_w):
+    """Separable ``(2r+1)``-square max/min (morphological dilate/erode).
+
+    max/min over a square window separates exactly into a horizontal then a
+    vertical pass of shifted-slice reductions — every output is one of the
+    input values (no arithmetic), so the reduction is exact in every lane
+    and every backend orders it identically.
+    """
+    op = jnp.maximum if mode == "max" else jnp.minimum
+    acc = None
+    for t in range(2 * r + 1):
+        s = jax.lax.slice_in_dim(x, t, t + out_w, axis=-1)
+        acc = s if acc is None else op(acc, s)
+    x = acc
+    acc = None
+    for t in range(2 * r + 1):
+        s = jax.lax.slice_in_dim(x, t, t + out_h, axis=-2)
+        acc = s if acc is None else op(acc, s)
+    return acc
+
+
+def _stage_apply(x, stage, out_h, out_w):
+    """Apply one single-plane stage to ``x`` (extent ``out + 2*radius``)."""
+    if stage.kind == "linear":
+        spec = stage.operator
+        fac = spec.sep_factors(0)
+        if fac is not None:
+            col, row = fac
+            return _vpass(_hpass(x, row, out_w), col, out_h)
+        return _correlate2d(x, spec.bank(1)[0], out_h, out_w)
+    if stage.kind == "window_reduce":
+        return _window_reduce(x, stage.radius, stage.op, out_h, out_w)
+    if stage.kind == "pointwise":
+        fn, _bound = F.get_pointwise(stage.op)
+        return fn(x)
+    raise ValueError(f"stage {stage.name!r} (kind {stage.kind!r}) is not a "
+                     "single-plane stage")
+
+
+def plan_components(ext, plan, h, w, variant: str, directions: int, *,
+                    sink=None, stage_sink=None):
+    """Direction components of ``plan`` on ``ext``, the input extended by
+    ``plan.linear_reach`` on each side (``(h + 2R, w + 2R)``).
+
+    Each pre-stage consumes its own radius off the margin — stage ``k``'s
+    output extent is ``h + 2 * (remaining radii)`` — so after the last
+    pre-stage the plane is extended by exactly the gradient's radius, and
+    the existing :func:`spec_components` ladder finishes the chain. This
+    pad-once / shrink-per-stage walk is *the same arithmetic* as running
+    each stage separately with its own (remaining-reach) pad: correlation
+    at an interior point only reads values the larger pad also contains.
+
+    ``variant``/``directions`` apply to the gradient stage; plans without
+    a gradient return the single smoothed plane as a 1-tuple.
+
+    ``sink`` forwards to :func:`spec_components` (the gradient row-pass
+    spill); ``stage_sink`` (optional ``stage_sink(idx, array) -> array``)
+    is applied to each pre-stage's output plane — the fused kernel's
+    DMA-pipelined path spills the inter-stage planes into dedicated VMEM
+    scratch. A stage_sink must return its input's values unchanged, so
+    the identity default and a store/load round-trip are bit-identical.
+    """
+    cur = ext
+    remaining = plan.linear_reach
+    for idx, stage in enumerate(plan.pre_stages):
+        remaining -= stage.radius
+        cur = _stage_apply(cur, stage, h + 2 * remaining, w + 2 * remaining)
+        if stage_sink is not None:
+            cur = stage_sink(idx, cur)
+    spec = plan.gradient
+    if spec is None:
+        return (cur,)
+    return spec_components(cur, spec, h, w, variant, directions, sink=sink)
+
+
+# ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
@@ -259,6 +348,7 @@ def sobel_components(
     padding: str = "reflect",
     operator: "str | None" = None,
     precision: str = "f32",
+    plan=None,
 ) -> Tuple[jnp.ndarray, ...]:
     """Per-direction gradient images ``(G_x, G_y[, G_d, G_dt])``.
 
@@ -266,6 +356,13 @@ def sobel_components(
     by name (``sobel5``/``sobel3``/``scharr3``/``prewitt3``/``sobel7``/...);
     when omitted, the legacy ``size`` kwarg picks the Sobel operator of that
     size. ``directions`` of 0 means the operator's maximum.
+
+    ``plan`` (a :class:`~repro.core.filters.StencilPlan` or registered plan
+    name) chains the plan's single-plane pre-stages ahead of its gradient
+    stage with one composed pad of ``plan.linear_reach`` — the staged
+    semantics of :func:`plan_components`. It overrides
+    ``operator``/``size``; the plan must carry a gradient stage (this
+    function returns direction components).
 
     ``precision="int"`` runs the exact low-precision lane: uint8 input cast
     to the i16/i32 budget proved by ``repro.core.ladder``, gradients
@@ -277,22 +374,43 @@ def sobel_components(
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
     if precision not in ("f32", "int"):
         raise ValueError(f"unknown precision {precision!r}; expected 'f32' or 'int'")
-    spec = F.get_operator(operator or F.operator_for_size(size), params)
+    if plan is not None:
+        plan = F.resolve_plan(plan)
+        spec = plan.gradient
+        if spec is None:
+            raise ValueError(
+                f"plan {plan.name!r} has no gradient stage; "
+                "sobel_components returns direction components"
+            )
+        reach = plan.linear_reach
+    else:
+        spec = F.get_operator(operator or F.operator_for_size(size), params)
+        reach = spec.radius
     directions = spec.resolve_directions(directions)
     variant = spec.resolve_variant(variant)
     if precision == "int":
         from repro.core import ladder
 
-        ok, reason = ladder.int_lane_eligible(
-            spec, rgb=False, input_dtype=image.dtype
-        )
+        if plan is not None:
+            ok, reason = ladder.plan_int_eligible(
+                plan, rgb=False, input_dtype=image.dtype
+            )
+            acc = ladder.plan_accum_dtype(plan)
+        else:
+            ok, reason = ladder.int_lane_eligible(
+                spec, rgb=False, input_dtype=image.dtype
+            )
+            acc = ladder.accum_dtype(spec)
         if not ok:
             raise ValueError(f"precision='int' unavailable: {reason}")
-        x = image.astype(jnp.dtype(ladder.accum_dtype(spec)))
+        x = image.astype(jnp.dtype(acc))
     else:
         x = image.astype(jnp.float32)
-    xp, h, w = _pad(x, spec.radius, padding)
-    comps = spec_components(xp, spec, h, w, variant, directions)
+    xp, h, w = _pad(x, reach, padding)
+    if plan is not None:
+        comps = plan_components(xp, plan, h, w, variant, directions)
+    else:
+        comps = spec_components(xp, spec, h, w, variant, directions)
     if precision == "int":
         comps = tuple(c.astype(jnp.float32) for c in comps)
     return comps

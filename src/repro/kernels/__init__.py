@@ -2,16 +2,16 @@
 
 Layout: ``edge.py`` (the unified spec-driven megakernel — one pl.pallas_call
 for every operator in the ``repro.core.filters`` registry, incl. the fused
-gray->Sobel->normalize pipeline), ``tiling.py`` (zero-copy clamped-window
-geometry + in-kernel boundary handling), ``tuning.py`` (block-shape
-autotuner + JSON cache, keyed per operator), ``dispatch.py`` (the
-EdgeConfig engine under the ``repro.api`` facade + backend routing:
-pallas-tpu / pallas-interpret / xla), ``ref.py`` (pure-jnp oracle).
-``sobel5x5.py`` / ``sobel3x3.py`` / ``ops.py`` are back-compat wrappers
-over ``edge.py``.
+gray->Sobel->normalize pipeline and multi-stage ``StencilPlan`` chains),
+``tiling.py`` (zero-copy clamped-window geometry + in-kernel boundary
+handling), ``tuning.py`` (block-shape autotuner + JSON cache, keyed per
+operator/plan), ``dispatch.py`` (the EdgeConfig engine under the
+``repro.api`` facade + backend routing: pallas-tpu / pallas-interpret /
+xla), ``ref.py`` (pure-jnp oracle). The historical back-compat wrappers
+(``sobel5x5.py`` / ``sobel3x3.py`` / ``ops.py``) were removed with the
+stencil-platform refactor — use ``repro.api.edge_detect`` or
+``edge.edge_pallas``.
 """
 from repro.kernels import dispatch, tuning  # noqa: F401
-from repro.kernels.dispatch import sobel as sobel_dispatch  # noqa: F401
 from repro.kernels.edge import edge_pallas  # noqa: F401
-from repro.kernels.ops import edge_pipeline, sobel  # noqa: F401
 from repro.kernels.ref import sobel_ref  # noqa: F401

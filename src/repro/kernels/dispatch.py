@@ -27,24 +27,25 @@ taps the outputs are bit-exact across backends (see
 When the config carries a :class:`~repro.sharding.halo.ShardConfig` (or an
 explicit image ``mesh`` is passed), the same per-shard backend compute runs
 under ``shard_map`` on the image mesh ``(data, row, col)`` with halo
-exchange of the operator radius between spatial neighbors
+exchange of the stencil radius between spatial neighbors
 (``repro.sharding.halo``) — batch-sharded, spatially sharded, or both, and
 bit-exact with the single-device engine for every backend.
 
-The historical entry points :func:`sobel` and :func:`edge_detect` are
-deprecation-warning shims over the engine; their outputs are bit-exact with
-the facade's.
+A config with a multi-stage :class:`~repro.core.filters.StencilPlan`
+(``EdgeConfig.plan``) routes through the same funnel: the composed reach
+(sum of stage radii, plus the NMS ring) sizes the halo exchange and the
+tuning-cache slot, and the whole chain runs as one fused Pallas launch /
+one staged XLA closure per backend.
 """
 from __future__ import annotations
 
 import math
-import warnings
 from typing import TYPE_CHECKING, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.filters import SobelParams, get_operator, operator_for_size
+from repro.core.filters import SobelParams, get_operator, plan_identity
 from repro.core.sobel import magnitude as rss_magnitude
 from repro.core.sobel import sobel_components as core_components
 from repro.kernels import edge as ekern
@@ -70,8 +71,6 @@ __all__ = [
     "stream_delta",
     "edge_stream",
     "edge_stream_cached",
-    "sobel",
-    "edge_detect",
 ]
 
 BACKENDS = ("auto", "pallas-tpu", "pallas-interpret", "xla")
@@ -88,12 +87,13 @@ def resolve_backend(backend: Optional[str] = None) -> str:
 
 
 def resolve_precision(
-    precision: str, backend: str, *, spec, rgb: bool, input_dtype
+    precision: str, backend: str, *, spec, rgb: bool, input_dtype, plan=None
 ) -> str:
     """Resolve ``EdgeConfig.precision`` to the concrete lane: f32 | int.
 
     Explicit ``"int"`` works on every backend but raises (with the first
-    failing gate from ``repro.core.ladder.int_lane_eligible``) when the
+    failing gate from ``repro.core.ladder.int_lane_eligible`` — or the
+    plan-level ``plan_int_eligible`` chain when ``plan`` is set) when the
     exactness proof does not cover the workload — fractional taps, a
     budget past 2^24, RGB input (fractional BT.601 luma), or non-u8
     frames. ``"auto"`` opts eligible gray-u8 workloads into the integer
@@ -104,12 +104,19 @@ def resolve_precision(
     """
     from repro.core import ladder
 
+    def eligible():
+        if plan is not None:
+            return ladder.plan_int_eligible(
+                plan, rgb=rgb, input_dtype=input_dtype
+            )
+        return ladder.int_lane_eligible(
+            spec, rgb=rgb, input_dtype=input_dtype
+        )
+
     if precision == "f32":
         return "f32"
     if precision == "int":
-        ok, reason = ladder.int_lane_eligible(
-            spec, rgb=rgb, input_dtype=input_dtype
-        )
+        ok, reason = eligible()
         if not ok:
             raise ValueError(f"precision='int' unavailable: {reason}")
         return "int"
@@ -120,9 +127,7 @@ def resolve_precision(
         )
     if backend == "xla":
         return "f32"
-    ok, _reason = ladder.int_lane_eligible(
-        spec, rgb=rgb, input_dtype=input_dtype
-    )
+    ok, _reason = eligible()
     return "int" if ok else "f32"
 
 
@@ -145,6 +150,7 @@ def choose_block_shape(
     kernel_w: Optional[int] = None,
     precision: str = "f32",
     pipeline_depth: Optional[int] = None,
+    plan=None,
 ) -> Tuple[int, int, int, str]:
     """Resolve (block_h, block_w, depth, source) for a Pallas backend.
 
@@ -158,23 +164,27 @@ def choose_block_shape(
     lane) and ``pipeline_depth`` slot the v5 key dimensions: an explicit
     depth pins the returned depth (and its own cache slot); ``None`` lets
     a tuned entry supply the depth the sweep measured faster, defaulting
-    to 0 (automatic pipelining).
+    to 0 (automatic pipelining). ``plan`` (a resolved
+    :class:`~repro.core.filters.StencilPlan`) slots the v6 plan-identity
+    dimension and sizes the fallback default by the composed reach.
     """
     if block_h and block_w:
         return block_h, block_w, pipeline_depth or 0, "explicit"
     cache = cache if cache is not None else tuning.get_default_cache()
     hit = cache.lookup(
         tuning.TuneKey(backend, dtype, operator, variant, h, w, padding,
-                       layout, devices, mesh, precision, pipeline_depth or 0)
+                       layout, devices, mesh, precision, pipeline_depth or 0,
+                       plan_identity(plan) if plan is not None else "-")
     )
     if hit is not None:
         bh, bw, depth = hit
         if pipeline_depth is not None:
             depth = pipeline_depth
         return block_h or bh, block_w or bw, depth, "tuned"
-    spec = get_operator(operator)
+    size = (2 * plan.linear_reach + 1 if plan is not None
+            else get_operator(operator).size)
     dbh, dbw = ekern.default_block_shape(
-        kernel_h or h, kernel_w or w, spec.size,
+        kernel_h or h, kernel_w or w, size,
         channels=3 if layout == "rgb" else None,
     )
     return block_h or dbh, block_w or dbw, pipeline_depth or 0, "default"
@@ -228,7 +238,7 @@ def _backend_compute(
                 thin, ctuple, raw = nms.thin_map(
                     gray, config.spec, variant=config.variant,
                     directions=config.directions, padding=config.padding,
-                    precision=precision,
+                    precision=precision, plan=config.plan,
                 )
                 stacked = jnp.stack(ctuple, axis=-3) if need_comps else None
                 return thin, stacked, (raw if need_raw else None)
@@ -240,6 +250,7 @@ def _backend_compute(
                 params=config.params or SobelParams(),
                 padding=config.padding,
                 precision=precision,
+                plan=config.plan,
             )
             mag = rss_magnitude(ctuple)
             return mag, (jnp.stack(ctuple, axis=-3) if need_comps else None), None
@@ -251,6 +262,7 @@ def _backend_compute(
         params=config.params, directions=config.directions,
         padding=config.padding, block_h=block_h, block_w=block_w, rgb=rgb,
         precision=precision, pipeline_depth=pipeline_depth,
+        plan=config.plan,
         interpret=(backend == "pallas-interpret"),
     )
 
@@ -294,8 +306,9 @@ def _edge_sharded(
     # NMS reads a 1-px magnitude neighborhood on top of the operator
     # stencil, so the device-level halo grows to radius + 1, exactly like
     # the kernel's in-VMEM window (hysteresis, being a global fixpoint,
-    # runs post-gather in :func:`edge` instead).
-    r = halo.exchange_radius(spec, config.nms)
+    # runs post-gather in :func:`edge` instead). A multi-stage plan
+    # composes every stage radius into one exchange.
+    r = halo.exchange_radius(spec, config.nms, plan=config.plan)
     d, rr, cc = mesh.shape["data"], mesh.shape["row"], mesh.shape["col"]
     sh, _hp = halo.shard_geometry(h, rr, r)
     sw, _wp = halo.shard_geometry(w, cc, r)
@@ -314,6 +327,7 @@ def _edge_sharded(
             devices=d * rr * cc, mesh=f"{d}x{rr}x{cc}",
             kernel_h=he, kernel_w=we,
             precision=precision, pipeline_depth=config.pipeline_depth,
+            plan=config.plan,
         )
     run = _backend_compute(
         config, backend, rgb=rgb, need_comps=need_comps,
@@ -340,8 +354,8 @@ def edge(
 ) -> "EdgeResult":
     """Run one resolved :class:`~repro.api.EdgeConfig` end to end.
 
-    This is the single funnel every entry point (the ``repro.api`` facade
-    and all legacy shims) goes through: backend resolution, block-shape
+    This is the single funnel every entry point (the ``repro.api`` facade,
+    benchmarks, the serve loop) goes through: backend resolution, block-shape
     choice, the fused Pallas launch / XLA reference / sharded engine, and
     the assembly of the structured result. ``layout`` must name the input
     layout (the facade auto-detects it; see ``repro.api.detect_layout``).
@@ -387,7 +401,7 @@ def edge(
     # closure, sharded engine) then agrees on it.
     precision = resolve_precision(
         config.precision, backend, spec=config.spec, rgb=rgb,
-        input_dtype=x.dtype,
+        input_dtype=x.dtype, plan=config.plan,
     )
 
     if mesh is None and config.shard is not None:
@@ -414,6 +428,7 @@ def edge(
                 block_h=config.block_h, block_w=config.block_w,
                 cache=tuning_cache,
                 precision=precision, pipeline_depth=config.pipeline_depth,
+                plan=config.plan,
             )
         if backend != "xla" and need_peak:
             # Fused Pallas fast path: the kernel emits per-block maxima of
@@ -426,6 +441,7 @@ def edge(
                 params=config.params, directions=config.directions,
                 padding=config.padding, block_h=bh, block_w=bw, rgb=rgb,
                 precision=precision, pipeline_depth=depth,
+                plan=config.plan,
                 interpret=(backend == "pallas-interpret"),
             )
             if config.nms:
@@ -625,7 +641,11 @@ def stream_delta(
             diff = diff.any(axis=-1)
         blocks = _block_reduce_max(diff.astype(jnp.float32), bh, bw) > 0
         config = config.resolved()
-        r_in = window_radius(config.spec.radius, config.nms)
+        r_in = window_radius(
+            config.plan.linear_reach if config.plan is not None
+            else config.spec.radius,
+            config.nms,
+        )
         backend = resolve_backend(config.backend)
         th, tw = window_shape(
             h, w, bh, bw, r_in, align=_stream_align(backend, rgb)
@@ -693,6 +713,17 @@ def _stream_epilogue(
 
 
 def _check_stream_config(config: "EdgeConfig") -> None:
+    if config.plan is not None and config.plan.pre_stages:
+        # The masked streaming kernel is single-stage; a multi-stage plan
+        # would need per-stage scratch inside the per-tile lax.cond, which
+        # the delta-splice path does not carry. Single-operator plans
+        # (gradient [+ nms]) resolve to the plain operator config and are
+        # fine.
+        raise ValueError(
+            f"streaming runs the single-stage masked kernel; plan "
+            f"{config.plan.name!r} has pre-stages and is not supported on "
+            "the stream path (use edge_detect for fused multi-stage plans)"
+        )
     if config.shard is not None:
         raise ValueError(
             "streaming is single-device per stream group for now; drop "
@@ -853,77 +884,3 @@ def edge_stream_cached(
         state.frame, config, state, state.primary, state.bmax, skipped,
         batch_shape=batch_shape, layout=layout,
     )
-
-
-# ---------------------------------------------------------------------------
-# Legacy entry points (deprecation shims; bit-exact vs the facade)
-# ---------------------------------------------------------------------------
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"{old} is deprecated; use {new} (repro.api)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def sobel(
-    image: jnp.ndarray,
-    *,
-    size: int = 5,
-    directions: int = 4,
-    variant: str = "v2",
-    params: SobelParams = SobelParams(),
-    padding: str = "reflect",
-    backend: Optional[str] = None,
-    block_h: Optional[int] = None,
-    block_w: Optional[int] = None,
-    tuning_cache: Optional[tuning.TuningCache] = None,
-) -> jnp.ndarray:
-    """Deprecated: multi-directional Sobel magnitude on grayscale input.
-
-    Use ``repro.api.edge_detect(image, EdgeConfig(normalize=False, ...))``.
-    Input is always treated as ``(..., H, W)`` grayscale (no layout
-    detection), matching the historical contract; output is identical.
-    """
-    from repro.api import EdgeConfig
-
-    _deprecated("repro.kernels.dispatch.sobel", "edge_detect")
-    image = jnp.asarray(image)
-    cfg = EdgeConfig(
-        operator=operator_for_size(size), directions=directions,
-        variant=variant, params=params, padding=padding, normalize=False,
-        backend=backend, block_h=block_h, block_w=block_w,
-    )
-    layout = "N" * max(0, image.ndim - 2) + "HW"
-    return edge(image, cfg, layout=layout, tuning_cache=tuning_cache).magnitude
-
-
-def edge_detect(
-    images: jnp.ndarray,
-    *,
-    size: int = 5,
-    directions: int = 4,
-    variant: str = "v2",
-    params: SobelParams = SobelParams(),
-    padding: str = "reflect",
-    normalize: bool = True,
-    backend: Optional[str] = None,
-    block_h: Optional[int] = None,
-    block_w: Optional[int] = None,
-    tuning_cache: Optional[tuning.TuningCache] = None,
-) -> jnp.ndarray:
-    """Deprecated: full edge-detection pipeline, kwargs form.
-
-    Use ``repro.api.edge_detect`` — this shim builds the equivalent
-    :class:`~repro.api.EdgeConfig` and returns ``result.magnitude``.
-    """
-    from repro.api import EdgeConfig
-
-    _deprecated("repro.kernels.dispatch.edge_detect", "edge_detect")
-    cfg = EdgeConfig(
-        operator=operator_for_size(size), directions=directions,
-        variant=variant, params=params, padding=padding, normalize=normalize,
-        backend=backend, block_h=block_h, block_w=block_w,
-    )
-    return edge(jnp.asarray(images), cfg, tuning_cache=tuning_cache).magnitude

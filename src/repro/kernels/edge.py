@@ -7,9 +7,8 @@ extended 7x7 Sobel, and any user-registered spec. The kernel body is the
 (``repro.core.sobel.spec_components``) applied to a halo'd VMEM tile, so
 cross-backend bit-exactness holds by construction for every operator.
 
-GPU -> TPU mapping (see DESIGN.md §2) — unchanged from the size-specialized
-predecessors (``sobel5x5.py``/``sobel3x3.py``, now thin wrappers over this
-module):
+GPU -> TPU mapping (see DESIGN.md §2) — unchanged from the PR-1/2
+size-specialized kernels this module replaced:
 
   * paper's CUDA-block tile ownership + 2r overlap (§4.3.1)  ->  2-D tiled
     grid; step (k, j) owns a ``block_h x block_w`` output tile and reads a
@@ -69,9 +68,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import ladder
-from repro.core.filters import OperatorSpec, get_operator
+from repro.core.filters import OperatorSpec, get_operator, resolve_plan
 from repro.core.nms import nms_sector, nms_thin
-from repro.core.sobel import magnitude, spec_components
+from repro.core.sobel import magnitude, plan_components, spec_components
 from repro.kernels import tuning
 from repro.kernels.tiling import (
     ALIGN_INTERPRET,
@@ -160,7 +159,7 @@ def _compute_dtype(acc_dtype):
 def _emit_outputs(
     x, o_refs, k, j, *,
     spec, variant, directions, bh, bw, h, w, padding, out_components,
-    out_nms, out_mag, with_max, sink=None,
+    out_nms, out_mag, with_max, sink=None, plan=None, stage_sink=None,
 ):
     """Shared tail of both fused kernel bodies: gray tile -> stored outputs.
 
@@ -170,7 +169,22 @@ def _emit_outputs(
     store bit-identical f32 outputs (``repro.core.ladder`` proves every
     integer intermediate is f32-exact). ``sink`` forwards to
     ``spec_components`` (the manual-DMA path's row-pass VMEM spill).
+
+    ``plan`` (a multi-stage :class:`~repro.core.filters.StencilPlan`)
+    chains the plan's single-plane pre-stages ahead of the gradient ladder
+    on the same halo'd tile — the tile is extended by the *composed* linear
+    reach and each stage consumes its own radius off the margin
+    (``core.sobel.plan_components``, the same walk the XLA reference
+    runs). ``stage_sink`` spills the inter-stage planes (pipelined path).
     """
+    reach = plan.linear_reach if plan is not None else spec.radius
+
+    def components(y, hh, ww):
+        if plan is not None and plan.pre_stages:
+            return plan_components(y, plan, hh, ww, variant, directions,
+                                   sink=sink, stage_sink=stage_sink)
+        return spec_components(y, spec, hh, ww, variant, directions,
+                               sink=sink)
 
     def as_f32(comps):
         return tuple(c.astype(jnp.float32) for c in comps)
@@ -183,17 +197,15 @@ def _emit_outputs(
         return jnp.max(masked)
 
     if out_nms:
-        # NMS needs a 1-px magnitude neighborhood: grow the halo to r + 1,
-        # run the ladder on the (bh + 2, bw + 2) inner tile, suppress down
-        # to the (bh, bw) output block (core.nms math, shared with XLA).
+        # NMS needs a 1-px magnitude neighborhood: grow the halo to
+        # reach + 1, run the stage chain on the (bh + 2, bw + 2) inner
+        # tile, suppress down to the (bh, bw) output block (core.nms math,
+        # shared with XLA).
         y = extend_tile(
-            x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=spec.radius + 1,
+            x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=reach + 1,
             padding=padding,
         )
-        comps_ext = as_f32(
-            spec_components(y, spec, bh + 2, bw + 2, variant, directions,
-                            sink=sink)
-        )
+        comps_ext = as_f32(components(y, bh + 2, bw + 2))
         mag_ext = magnitude(comps_ext)
         comps = tuple(
             jax.lax.slice(g, (1, 1), (1 + bh, 1 + bw)) for g in comps_ext
@@ -212,12 +224,10 @@ def _emit_outputs(
         return
 
     y = extend_tile(
-        x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=spec.radius,
+        x, k, j, h=h, w=w, block_h=bh, block_w=bw, r=reach,
         padding=padding,
     )
-    comps = as_f32(
-        spec_components(y, spec, bh, bw, variant, directions, sink=sink)
-    )
+    comps = as_f32(components(y, bh, bw))
     if out_components:
         o_refs[0][0] = jnp.stack(comps, axis=0)     # (directions, bh, bw)
         if with_max:
@@ -235,7 +245,7 @@ def _emit_outputs(
 def _kernel(
     x_ref, *o_refs,
     spec, variant, directions, bh, bw, h, w, padding, rgb, out_components,
-    out_nms, out_mag, with_max, acc_dtype=None,
+    out_nms, out_mag, with_max, acc_dtype=None, plan=None,
 ):
     k = pl.program_id(1)
     j = pl.program_id(2)
@@ -244,7 +254,7 @@ def _kernel(
         x, o_refs, k, j,
         spec=spec, variant=variant, directions=directions, bh=bh, bw=bw,
         h=h, w=w, padding=padding, out_components=out_components,
-        out_nms=out_nms, out_mag=out_mag, with_max=with_max,
+        out_nms=out_nms, out_mag=out_mag, with_max=with_max, plan=plan,
     )
 
 
@@ -265,6 +275,7 @@ def _pipelined_kernel(
     x_hbm, *refs,
     spec, variant, directions, bh, bw, h, w, padding, rgb, out_components,
     out_nms, out_mag, with_max, acc_dtype, depth, th, tw, n_sink,
+    plan=None, n_pre=0,
 ):
     """Manual double-buffered DMA body (``pipeline_depth >= 2``).
 
@@ -286,17 +297,19 @@ def _pipelined_kernel(
     ``pipeline_depth`` settings. Analyzer rule PIPE001 checks the
     start/wait pairing and ring depth on the traced jaxpr.
     """
-    n_scratch = 3 if n_sink else 2
-    o_refs = refs[:-n_scratch]
-    buf = refs[len(refs) - n_scratch]
-    sem = refs[len(refs) - n_scratch + 1]
-    rows = refs[-1] if n_sink else None
+    n_scratch = 2 + (1 if n_sink else 0) + n_pre
+    o_refs = refs[:len(refs) - n_scratch]
+    scratch = refs[len(refs) - n_scratch:]
+    buf, sem = scratch[0], scratch[1]
+    rows = scratch[2] if n_sink else None
+    pre_refs = scratch[2 + (1 if n_sink else 0):]
 
     i = pl.program_id(0)
     k = pl.program_id(1)
     j = pl.program_id(2)
     gw = pl.num_programs(2)
-    r_in = window_radius(spec.radius, out_nms)
+    reach = plan.linear_reach if plan is not None else spec.radius
+    r_in = window_radius(reach, out_nms)
 
     def window_copy(j2, slot):
         row0, col0 = window_origin(k, j2, h, w, bh, bw, r_in, th, tw)
@@ -325,11 +338,21 @@ def _pipelined_kernel(
             rows[slots[name]] = arr
             return rows[slots[name]]
 
+    stage_sink = None
+    if n_pre:
+        # Inter-stage VMEM spill: each pre-stage plane round-trips through
+        # its dedicated scratch buffer (deterministic VMEM residency for
+        # the chained stages; values unchanged, so still bit-exact).
+        def stage_sink(idx, arr):
+            pre_refs[idx][0] = arr
+            return pre_refs[idx][0]
+
     _emit_outputs(
         x, o_refs, k, j,
         spec=spec, variant=variant, directions=directions, bh=bh, bw=bw,
         h=h, w=w, padding=padding, out_components=out_components,
         out_nms=out_nms, out_mag=out_mag, with_max=with_max, sink=sink,
+        plan=plan, stage_sink=stage_sink,
     )
 
 
@@ -412,6 +435,7 @@ def _stream_kernel(
         "with_max",
         "precision",
         "pipeline_depth",
+        "plan",
         "interpret",
     ),
 )
@@ -432,6 +456,7 @@ def edge_pallas(
     with_max: bool = False,
     precision: str = "f32",
     pipeline_depth: int = 0,
+    plan: "StencilPlan | str | None" = None,
     interpret: bool = False,
 ):
     """Fused megakernel on the raw batch — any registered operator, any (H, W).
@@ -462,6 +487,15 @@ def edge_pallas(
     default lane. ``pipeline_depth=0`` (default) uses Pallas's automatic
     double buffering; ``2..8`` switches to the manual DMA ring of that
     depth (:func:`_pipelined_kernel`), again bit-identical by construction.
+
+    ``plan`` (a :class:`~repro.core.filters.StencilPlan` or registered
+    plan name) fuses the whole multi-stage chain into this same single
+    launch: the input window and halo grow to the plan's *composed* linear
+    reach (``sum of stage radii``, +1 for NMS), the pre-stages run on
+    shrinking in-tile extents, and the gradient/NMS tail is unchanged. A
+    one-gradient-stage plan takes the historical single-operator path
+    byte-identically. The plan's NMS stage must match ``out_nms`` (the
+    dispatcher derives one from the other).
     """
     if out_mag and not out_nms:
         raise ValueError("out_mag only applies with out_nms (the magnitude "
@@ -477,17 +511,40 @@ def edge_pallas(
             f"pipeline_depth must be 0 (automatic) or 2..8 (manual DMA "
             f"ring), got {pipeline_depth}"
         )
-    spec: OperatorSpec = get_operator(operator, params)
+    plan = resolve_plan(plan)
+    if plan is not None:
+        spec = plan.gradient
+        if spec is None:
+            raise ValueError(
+                f"plan {plan.name!r} has no gradient stage; the edge kernel "
+                "emits direction components"
+            )
+        if out_nms != plan.nms:
+            raise ValueError(
+                f"plan {plan.name!r} {'ends in' if plan.nms else 'has no'} "
+                f"NMS stage but out_nms={out_nms}; the plan is the single "
+                "source of truth — pass out_nms=plan.nms"
+            )
+        if plan.single_operator:
+            plan = None  # historical single-operator path, byte-identical
+    else:
+        spec = get_operator(operator, params)
     variant = spec.resolve_variant(variant)
     directions = spec.resolve_directions(directions)
     acc_dtype = None
     if precision == "int":
-        ok, reason = ladder.int_lane_eligible(
-            spec, rgb=rgb, input_dtype=x.dtype
-        )
+        if plan is not None:
+            ok, reason = ladder.plan_int_eligible(
+                plan, rgb=rgb, input_dtype=x.dtype
+            )
+        else:
+            ok, reason = ladder.int_lane_eligible(
+                spec, rgb=rgb, input_dtype=x.dtype
+            )
         if not ok:
             raise ValueError(f"precision='int' unavailable: {reason}")
-        acc_dtype = ladder.accum_dtype(spec)
+        acc_dtype = (ladder.plan_accum_dtype(plan) if plan is not None
+                     else ladder.accum_dtype(spec))
         if not interpret and acc_dtype == "int16":
             # Mosaic's 16-bit vector coverage is incomplete (e.g. no i16
             # neg); i32 holds every i16-bounded intermediate exactly, so
@@ -508,8 +565,9 @@ def edge_pallas(
     else:
         align = ALIGN_TPU_RGB if rgb else ALIGN_TPU_GRAY
     # NMS compares the magnitude against a 1-px neighborhood, so its input
-    # window carries one extra ring on top of the operator halo.
-    r_in = window_radius(spec.radius, out_nms)
+    # window carries one extra ring on top of the (composed) stencil halo.
+    reach = plan.linear_reach if plan is not None else spec.radius
+    r_in = window_radius(reach, out_nms)
     in_spec = window_spec(
         h, w, bh, bw, r_in, align=align, channels=3 if rgb else None
     )
@@ -561,6 +619,7 @@ def edge_pallas(
         out_mag=out_mag,
         with_max=with_max,
         acc_dtype=acc_dtype,
+        plan=plan,
     )
     if pipeline_depth:
         # Manual DMA ring: input stays in ANY/HBM, the kernel copies each
@@ -569,6 +628,9 @@ def edge_pallas(
         # for cross-step prefetch to be legal, hence "arbitrary" semantics.
         th, tw = window_shape(h, w, bh, bw, r_in, align=align)
         n_sink = _sink_slots(variant, directions)
+        # Gradient row-pass sink extents are relative to the gradient
+        # stage's input tile — bh/bw plus the NMS ring plus the *gradient*
+        # radius (pre-stages have already consumed the rest of the reach).
         eh = bh + (2 if out_nms else 0) + 2 * spec.radius
         ew = bw + (2 if out_nms else 0)
         buf_shape = (pipeline_depth, th, tw) + ((3,) if rgb else ())
@@ -580,9 +642,23 @@ def edge_pallas(
             scratch.append(
                 pltpu.VMEM((n_sink, eh, ew), _compute_dtype(acc_dtype))
             )
+        # Inter-stage VMEM scratch: one buffer per pre-stage plane, sized
+        # to that stage's (shrinking) output extent.
+        pre_shapes = []
+        if plan is not None:
+            pad2 = 2 if out_nms else 0
+            remaining = plan.linear_reach
+            for stage in plan.pre_stages:
+                remaining -= stage.radius
+                pre_shapes.append(
+                    (1, bh + pad2 + 2 * remaining, bw + pad2 + 2 * remaining)
+                )
+        for shp in pre_shapes:
+            scratch.append(pltpu.VMEM(shp, _compute_dtype(acc_dtype)))
         kernel = functools.partial(
             _pipelined_kernel, **common,
             depth=pipeline_depth, th=th, tw=tw, n_sink=n_sink,
+            n_pre=len(pre_shapes),
         )
         out = pl.pallas_call(
             kernel,

@@ -10,8 +10,15 @@ The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
     loop), and
   * persists the winner in a JSON cache keyed by
     ``(backend, dtype, operator, variant, padding, layout, H, W, devices,
-    mesh, precision, depth)`` (:class:`TuningCache`), which
+    mesh, precision, depth, plan)`` (:class:`TuningCache`), which
     ``repro.kernels.dispatch`` consults on every call.
+    ``plan`` entered with the multi-stage stencil platform (schema v6): a
+    fused plan kernel (e.g. ``canny5``) tiles a larger composed halo and
+    holds inter-stage scratch, so its tunings must not collide with the
+    bare operator's; the segment is the plan identity
+    (``repro.core.filters.plan_identity`` — name + a stable hash of the
+    stage structure, so a redefined plan gets a fresh slot) or ``-`` for
+    plain single-operator calls.
     ``precision``/``depth`` entered with the DMA-pipelined low-precision
     megakernel (schema v5): an integer-lane tuning or a manual-depth ring
     has different VMEM pressure and arithmetic than the f32/automatic
@@ -29,8 +36,9 @@ The paper's key tuning knob is the CUDA block geometry; ours is the Pallas
     files migrate on load: v1 entries land in the reflect/gray slot, v2
     entries map their ``SxS`` size segment onto the Sobel operator of that
     size, v3 entries land in the single-device (``1/1x1x1``) slot, v4
-    entries in the ``f32/0`` precision/depth slot; the next
-    :meth:`TuningCache.save` rewrites the file as v5.
+    entries in the ``f32/0`` precision/depth slot, v5 entries in the
+    single-operator (``-``) plan slot; the next
+    :meth:`TuningCache.save` rewrites the file as v6.
 
 Cache location: ``$REPRO_TUNE_CACHE`` if set, else
 ``~/.cache/repro/sobel_blocks.json``. The file is plain JSON so it can be
@@ -88,12 +96,14 @@ class TuneKey:
     mesh: str = "1x1x1"        # image mesh shape "DxRxC" (data x row x col)
     precision: str = "f32"     # resolved lane: f32 | int
     depth: int = 0             # requested pipeline depth (0 = auto)
+    plan: str = "-"            # plan identity (filters.plan_identity) or "-"
 
     def to_str(self) -> str:
         return (
             f"{self.backend}/{self.dtype}/{self.operator}/{self.variant}"
             f"/{self.padding}/{self.layout}/{self.h}x{self.w}"
             f"/{self.devices}/{self.mesh}/{self.precision}/{self.depth}"
+            f"/{self.plan}"
         )
 
 
@@ -161,12 +171,22 @@ def _migrate_v3_key(key: str) -> Optional[str]:
 def _migrate_v4_key(key: str) -> Optional[str]:
     """v4 keys predate the precision/pipeline dimensions — every tuning was
     the f32 lane with automatic (implicit) pipelining, so they land in the
-    ``f32/0`` slot of the v5 key space; integer-lane and manual-depth
-    tunings can never collide with them."""
+    ``f32/0`` slot of the v5 key space (then through v5->v6); integer-lane
+    and manual-depth tunings can never collide with them."""
     parts = key.split("/")
     if len(parts) != 9:
         return None
-    return "/".join(parts + ["f32", "0"])
+    return _migrate_v5_key("/".join(parts + ["f32", "0"]))
+
+
+def _migrate_v5_key(key: str) -> Optional[str]:
+    """v5 keys predate the stencil-plan dimension — every tuning was a
+    plain single-operator kernel, so they land in the ``-`` plan slot of
+    the v6 key space; fused-plan tunings can never collide with them."""
+    parts = key.split("/")
+    if len(parts) != 11:
+        return None
+    return "/".join(parts + ["-"])
 
 
 class TuningCache:
@@ -177,11 +197,11 @@ class TuningCache:
     (``depth`` is the tuned pipeline depth, 0 = automatic; absent reads as
     0). Older files (v1: no padding/layout key segments; v2: size segment
     instead of operator name; v3: no device-count/mesh segments; v4: no
-    precision/pipeline-depth segments) are migrated in-memory on load and
-    rewritten as v5 on the next :meth:`save`.
+    precision/pipeline-depth segments; v5: no plan segment) are migrated
+    in-memory on load and rewritten as v6 on the next :meth:`save`.
     """
 
-    VERSION = 5
+    VERSION = 6
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -244,7 +264,8 @@ class TuningCache:
                 1: _migrate_v1_key,
                 2: _migrate_v2_key,
                 3: _migrate_v3_key,
-            }.get(version, _migrate_v4_key)
+                4: _migrate_v4_key,
+            }.get(version, _migrate_v5_key)
             migrated = {}
             for k, v in entries.items():
                 mk = migrate(k)
@@ -425,10 +446,12 @@ def legal_block_shapes(
 
 def _run_shape(
     img, operator, variant, directions, padding, backend, bh, bw,
-    precision="f32", depth=0,
+    precision="f32", depth=0, plan=None,
 ):
+    from repro.core.filters import resolve_plan
     from repro.kernels.edge import edge_pallas
 
+    plan = resolve_plan(plan)
     rgb = img.ndim >= 3 and img.shape[-1] == 3
     return edge_pallas(
         img,
@@ -441,6 +464,8 @@ def _run_shape(
         rgb=rgb,
         precision=precision,
         pipeline_depth=depth,
+        plan=plan,
+        out_nms=plan.nms if plan is not None else False,
         interpret=(backend != "pallas-tpu"),
     )
 
@@ -462,6 +487,7 @@ def sweep(
     seed: int = 0,
     precision: str = "f32",
     depths: Sequence[int] = (0,),
+    plan=None,
 ) -> List[Dict]:
     """Time every candidate block shape on a random HxW image.
 
@@ -471,23 +497,39 @@ def sweep(
     block dimensions plus the DMA pipeline depth (0 = Pallas automatic,
     >= 2 = manual ring). ``layout="rgb"`` times the full fused gray->Sobel
     megakernel on an ``(1, h, w, 3)`` frame. ``operator`` (registry name)
-    overrides the legacy ``size`` selector. ``precision="int"`` times the
+    overrides the legacy ``size`` selector; ``plan`` (a
+    :class:`~repro.core.filters.StencilPlan` or registered plan name)
+    overrides both and times the fused multi-stage kernel with its
+    composed halo. ``precision="int"`` times the
     exact integer lane — pass ``dtype="uint8"`` with it (the lane rejects
     anything else).
     """
     import jax.numpy as jnp
 
-    from repro.core.filters import get_operator, operator_for_size
+    from repro.core.filters import get_operator, operator_for_size, resolve_plan
 
-    operator = operator or operator_for_size(size)
-    spec = get_operator(operator)
+    plan = resolve_plan(plan)
+    if plan is not None:
+        spec = plan.gradient
+        if spec is None:
+            raise ValueError(
+                f"plan {plan.name!r} has no gradient stage; the edge kernel "
+                "sweep needs one"
+            )
+        operator = spec.name
+        r = plan.reach
+    else:
+        operator = operator or operator_for_size(size)
+        spec = get_operator(operator)
+        r = spec.radius
     variant = spec.resolve_variant(variant)
     directions = spec.resolve_directions(directions)
-    r = spec.radius
     channels = 3 if layout == "rgb" else None
     if shapes is None:
         shapes = legal_block_shapes(
-            h, w, operator=operator, backend=backend, layout=layout
+            h, w, size=2 * r + 1,
+            operator=None if plan is not None else operator,
+            backend=backend, layout=layout,
         )
     rng = np.random.default_rng(seed)
     shape = (1, h, w, 3) if layout == "rgb" else (1, h, w)
@@ -497,7 +539,7 @@ def sweep(
         for depth in depths:
             us = measure_us(
                 _run_shape, img, operator, variant, directions, padding,
-                backend, bh, bw, precision, depth, iters=iters,
+                backend, bh, bw, precision, depth, plan, iters=iters,
             )
             gh, gw = -(-h // bh), -(-w // bw)
             rows.append(
@@ -535,6 +577,7 @@ def autotune(
     mesh: str = "1x1x1",
     precision: str = "f32",
     pipeline_depth: Optional[int] = None,
+    plan=None,
 ) -> Tuple[int, int, int]:
     """Best (block_h, block_w, depth) for the workload; cached across
     processes.
@@ -542,7 +585,10 @@ def autotune(
     Consults ``cache`` (default: the process-wide JSON cache) unless
     ``refresh``; on a miss, sweeps the legal shapes, records the winner, and
     persists the cache to disk (``save=False`` to skip, e.g. in tests).
-    ``operator`` (registry name) overrides the legacy ``size`` selector.
+    ``operator`` (registry name) overrides the legacy ``size`` selector;
+    ``plan`` (a :class:`~repro.core.filters.StencilPlan` or registered plan
+    name) overrides both — the tuning times the fused multi-stage kernel
+    and lands in the plan-identity cache slot (schema v6).
     ``devices``/``mesh`` slot the tuning for a sharded deployment — the
     sweep itself times the per-shard (h, w) block, which for a spatial mesh
     is the halo-extended local shape (see ``dispatch.choose_block_shape``).
@@ -552,15 +598,30 @@ def autotune(
     pipelining (depth 0) and a manual depth-2 DMA ring, recording the
     faster; an explicit depth pins the sweep (and the cache slot) to it.
     """
-    from repro.core.filters import get_operator, operator_for_size
+    from repro.core.filters import (
+        get_operator, operator_for_size, plan_identity, resolve_plan,
+    )
 
-    operator = operator or operator_for_size(size)
-    # Key on the *resolved* variant so the slot matches what actually ran
-    # (e.g. scharr3 has no diagonal transform: v2 -> separable).
-    variant = get_operator(operator).resolve_variant(variant)
+    plan = resolve_plan(plan)
+    if plan is not None:
+        spec = plan.gradient
+        if spec is None:
+            raise ValueError(
+                f"plan {plan.name!r} has no gradient stage; the edge kernel "
+                "autotune needs one"
+            )
+        operator = spec.name
+        variant = spec.resolve_variant(variant)
+        plan_seg = plan_identity(plan)
+    else:
+        operator = operator or operator_for_size(size)
+        # Key on the *resolved* variant so the slot matches what actually
+        # ran (e.g. scharr3 has no diagonal transform: v2 -> separable).
+        variant = get_operator(operator).resolve_variant(variant)
+        plan_seg = "-"
     cache = cache if cache is not None else get_default_cache()
     key = TuneKey(backend, dtype, operator, variant, h, w, padding, layout,
-                  devices, mesh, precision, pipeline_depth or 0)
+                  devices, mesh, precision, pipeline_depth or 0, plan_seg)
     if not refresh:
         hit = cache.lookup(key)
         if hit is not None:
@@ -570,6 +631,7 @@ def autotune(
         h, w, operator=operator, variant=variant, directions=directions,
         dtype=dtype, backend=backend, padding=padding, layout=layout,
         shapes=shapes, iters=iters, precision=precision, depths=depths,
+        plan=plan,
     )
     if not rows:
         raise ValueError(f"no legal block shapes for {key.to_str()}")

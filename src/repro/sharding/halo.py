@@ -136,13 +136,18 @@ def mesh_from_config(
 # Shard geometry + materialized boundary extension (outside shard_map)
 # ---------------------------------------------------------------------------
 
-def exchange_radius(spec, nms: bool = False) -> int:
+def exchange_radius(spec, nms: bool = False, *, plan=None) -> int:
     """Halo-exchange width (px) for one fused step of ``spec``.
 
     Delegates to :func:`repro.kernels.tiling.window_radius` so the
     cross-device exchange is sized by the same rule as the in-VMEM kernel
-    window — the HALO001 invariant checked by ``repro.analysis``.
+    window — the HALO001 invariant checked by ``repro.analysis``. A
+    multi-stage ``plan`` composes the radii of every linear stage
+    (``plan.linear_reach``) plus the NMS ring, so one exchange covers the
+    whole fused chain.
     """
+    if plan is not None:
+        return window_radius(plan.linear_reach, nms or plan.nms)
     return window_radius(spec.radius, nms)
 
 

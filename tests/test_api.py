@@ -1,10 +1,8 @@
 """The ``repro.api`` facade: EdgeConfig threading, EdgeResult fields,
-layout auto-detection, and the back-compat deprecation shims.
+layout auto-detection, and absence of the removed legacy entry points.
 
 No optional deps (runs without hypothesis).
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -238,73 +236,21 @@ def test_video_layout_rgb_normalized(rng):
 
 
 # ---------------------------------------------------------------------------
-# Back-compat shims: old signatures, DeprecationWarning, bit-exact output
+# Legacy entry points: removed outright with the stencil-platform refactor
 # ---------------------------------------------------------------------------
 
-def test_pipeline_shim_bit_exact(rng):
-    from repro.core.pipeline import edge_detect as legacy_edge_detect
+def test_legacy_entry_points_removed():
+    """repro.api is the single entry point; the deprecation shims
+    (core.pipeline.edge_detect, dispatch.{sobel,edge_detect}, kernels.ops)
+    were deleted — see README "Migrating from the legacy entry points"."""
+    from repro.core import pipeline
+    from repro.kernels import dispatch
 
-    rgbs = jnp.asarray(_img(rng, (2, 37, 53, 3), np.uint8))
-    for backend in ("xla", "pallas-interpret"):
-        with pytest.warns(DeprecationWarning):
-            old = legacy_edge_detect(rgbs, backend=backend, block_h=8, block_w=16)
-        new = edge_detect(rgbs, backend=backend, block_h=8, block_w=16).magnitude
-        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_dispatch_sobel_shim_bit_exact(rng):
-    from repro.kernels.dispatch import sobel as legacy_sobel
-
-    img = jnp.asarray(_img(rng, (1, 45, 61)))
-    for backend in ("xla", "pallas-interpret"):
-        with pytest.warns(DeprecationWarning):
-            old = legacy_sobel(img, backend=backend, block_h=8, block_w=16)
-        new = edge_detect(
-            img, EdgeConfig(normalize=False), backend=backend,
-            block_h=8, block_w=16,
-        ).magnitude
-        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_dispatch_edge_detect_shim_bit_exact(rng):
-    from repro.kernels.dispatch import edge_detect as legacy_edge_detect
-
-    img = jnp.asarray(_img(rng, (3, 29, 43)))
-    with pytest.warns(DeprecationWarning):
-        old = legacy_edge_detect(img, backend="pallas-interpret",
-                                 block_h=8, block_w=8)
-    new = edge_detect(img, backend="pallas-interpret",
-                      block_h=8, block_w=8).magnitude
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_ops_shims_warn_and_match(rng):
-    from repro.kernels.ops import edge_pipeline, sobel as ops_sobel
-
-    img = jnp.asarray(_img(rng, (1, 33, 41)))
-    with pytest.warns(DeprecationWarning):
-        old = ops_sobel(img, block_h=8, block_w=16, interpret=True)
-    new = edge_detect(img, EdgeConfig(normalize=False),
-                      **_PALLAS).magnitude
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-
-    rgbs = jnp.asarray(_img(rng, (1, 21, 27, 3), np.uint8))
-    with pytest.warns(DeprecationWarning):
-        old = edge_pipeline(rgbs, block_h=8, block_w=16, interpret=True)
-    new = edge_detect(rgbs, **_PALLAS).magnitude
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_shim_keeps_gray_contract_on_trailing_3(rng):
-    """dispatch.sobel historically treated input as grayscale always —
-    the shim must not let layout auto-detection reinterpret (..., H, 3)."""
-    from repro.kernels.dispatch import sobel as legacy_sobel
-
-    img = jnp.asarray(_img(rng, (2, 21, 3)))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        out = legacy_sobel(img, backend="xla")
-    assert out.shape == (2, 21, 3)
+    assert not hasattr(dispatch, "sobel")
+    assert not hasattr(dispatch, "edge_detect")
+    assert not hasattr(pipeline, "edge_detect")
+    with pytest.raises(ImportError):
+        import repro.kernels.ops  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

@@ -5,12 +5,10 @@ per-image peak is 0 — the worst case for the normalization rescale
 (``255 / peak``) and for the peak-fraction hysteresis thresholds. The
 facade guards the former with ``maximum(peak, 1e-8)`` and the latter with
 strict ``>`` thresholding; these regression tests pin that the guards hold
-on every backend for the facade, the legacy shims
-(``core.pipeline.edge_detect``, ``ops.edge_pipeline``,
-``dispatch.edge_detect``) and the serve traffic path's config.
+on every backend for the facade (the only entry point since the
+stencil-platform refactor removed the kwargs shims), for fused multi-stage
+plans, and for the serve traffic path's config.
 """
-import warnings
-
 import numpy as np
 import pytest
 
@@ -46,23 +44,24 @@ def test_facade_blank_frames(name, backend):
     assert not np.asarray(res.edges).any(), (name, backend)
 
 
+@pytest.mark.parametrize("plan", ["canny5", "blur_sobel5"])
 @pytest.mark.parametrize("name", sorted(_FRAMES))
 @pytest.mark.parametrize("backend", _BACKENDS)
-def test_legacy_shims_blank_frames(name, backend):
-    from repro.core.pipeline import edge_detect as legacy_pipeline
-    from repro.kernels.dispatch import edge_detect as legacy_dispatch
-    from repro.kernels.ops import edge_pipeline as legacy_ops
-
+def test_plan_blank_frames(name, backend, plan):
+    """Fused multi-stage plans on flat frames: the Gaussian pre-stage of a
+    constant frame is the same constant, so the gradient (and the NMS thin
+    map) must still be exactly zero — no NaNs from the normalization or the
+    peak-fraction thresholds."""
     x = _FRAMES[name]
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        out = legacy_pipeline(x, backend=backend, block_h=8, block_w=16)
-        assert _finite(out) and np.all(np.asarray(out) == 0.0), name
-        out = legacy_dispatch(x, backend=backend, block_h=8, block_w=16)
-        assert _finite(out) and np.all(np.asarray(out) == 0.0), name
-        if backend != "xla":  # ops.edge_pipeline is Pallas-only by contract
-            out = legacy_ops(x, block_h=8, block_w=16, interpret=True)
-            assert _finite(out) and np.all(np.asarray(out) == 0.0), name
+    res = edge_detect(x, EdgeConfig(
+        plan=plan, backend=backend, block_h=8, block_w=16,
+        hysteresis=(plan == "canny5"), with_max=True))
+    assert _finite(res.magnitude), (name, backend, plan)
+    assert np.all(np.asarray(res.magnitude) == 0.0), (name, backend, plan)
+    assert np.all(np.asarray(res.peak) == 0.0), (name, backend, plan)
+    if plan == "canny5":
+        assert _finite(res.thin) and np.all(np.asarray(res.thin) == 0.0)
+        assert not np.asarray(res.edges).any(), (name, backend, plan)
 
 
 @pytest.mark.parametrize("mode", ["nan", "inf"])

@@ -21,13 +21,47 @@ import numpy as np
 import pytest
 
 from repro import analysis
-from repro.core.pipeline import edge_detect, rgb_to_gray
+from repro.api import EdgeConfig, edge_detect as api_edge_detect
+from repro.core.pipeline import rgb_to_gray
 from repro.core.sobel import sobel as core_sobel
-from repro.kernels.ops import edge_pipeline, sobel as pallas_sobel
 
 
 def _img(rng, shape, dtype=np.float32):
     return rng.integers(0, 256, size=shape).astype(dtype)
+
+
+def pallas_sobel(img, *, size=5, directions=0, variant="v2",
+                 padding="reflect", block_h=None, block_w=None,
+                 interpret=True):
+    """Facade-routed fused Sobel magnitude (the old ops.sobel contract:
+    grayscale ``(..., H, W)`` in, unnormalized magnitude out)."""
+    cfg = EdgeConfig(
+        operator=f"sobel{size}", directions=directions, variant=variant,
+        padding=padding, normalize=False,
+        backend="pallas-interpret" if interpret else "pallas-tpu",
+        block_h=block_h, block_w=block_w,
+    )
+    layout = "N" * max(0, img.ndim - 2) + "HW"
+    return api_edge_detect(img, cfg, layout=layout).magnitude
+
+
+def edge_detect(images, *, padding="reflect", normalize=True, backend=None,
+                block_h=None, block_w=None):
+    """Full-pipeline magnitude via the facade (the old kwargs contract)."""
+    cfg = EdgeConfig(
+        padding=padding, normalize=normalize, backend=backend,
+        block_h=block_h, block_w=block_w,
+    )
+    return api_edge_detect(images, cfg).magnitude
+
+
+def edge_pipeline(x, *, block_h=None, block_w=None, normalize=True,
+                  interpret=True):
+    return edge_detect(
+        x, normalize=normalize,
+        backend="pallas-interpret" if interpret else "pallas-tpu",
+        block_h=block_h, block_w=block_w,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -160,12 +194,13 @@ def test_gray_normalize_parity(rng):
 def test_block_max_output(rng):
     """The per-block max emitted for fused normalization must equal the
     blockwise max of the magnitude, ignoring ragged overhang."""
-    from repro.kernels.sobel5x5 import sobel5x5_pallas
+    from repro.kernels.edge import edge_pallas
 
     img = jnp.asarray(_img(rng, (1, 37, 53)))
     bh, bw = 16, 32
-    mag, bmax = sobel5x5_pallas(
-        img, block_h=bh, block_w=bw, with_max=True, interpret=True
+    mag, bmax = edge_pallas(
+        img, operator="sobel5", block_h=bh, block_w=bw, with_max=True,
+        interpret=True,
     )
     mag = np.asarray(mag)
     bmax = np.asarray(bmax)

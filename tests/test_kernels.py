@@ -8,13 +8,29 @@ pytest.importorskip("hypothesis")  # optional [test] extra; module skips without
 from hypothesis import given, settings, strategies as st
 
 from repro.core.filters import SobelParams
-from repro.kernels import sobel as ksobel, sobel_ref
-from repro.kernels.sobel5x5 import sobel5x5_pallas
+from repro.kernels import sobel_ref
+from repro.kernels.edge import default_block_shape, edge_pallas, kernel_dtype
 
 
 def _img(rng, shape, dtype=np.float32):
     x = rng.integers(0, 256, size=shape)
     return x.astype(dtype)
+
+
+def ksobel(img, *, size=5, directions=0, variant="v2", params=None,
+           block_h=None, block_w=None, **kw):
+    """Raw-kernel magnitude with the old ops.sobel batch/default handling."""
+    x = kernel_dtype(img)
+    batch = x.shape[:-2]
+    h, w = x.shape[-2], x.shape[-1]
+    x = x.reshape((-1, h, w))
+    dbh, dbw = default_block_shape(h, w, size)
+    out = edge_pallas(
+        x, operator=f"sobel{size}", variant=variant, params=params,
+        directions=directions, block_h=block_h or dbh,
+        block_w=block_w or dbw, interpret=True, **kw,
+    )
+    return out.reshape(batch + (h, w))
 
 
 @pytest.mark.parametrize("variant", ["direct", "separable", "v1", "v2"])
@@ -70,7 +86,9 @@ def test_kernel_3x3(rng):
 
 def test_kernel_components_output(rng):
     img = jnp.asarray(_img(rng, (1, 32, 48)))
-    comps = sobel5x5_pallas(img, variant="v2", out_components=True, block_h=16, interpret=True)
+    comps = edge_pallas(img, operator="sobel5", variant="v2",
+                        out_components=True, block_h=16, block_w=48,
+                        interpret=True)
     assert comps.shape == (1, 4, 32, 48)
     from repro.kernels.ref import sobel_components_ref
 

@@ -56,13 +56,12 @@ def test_serve_step(arch):
 
 
 def test_sobel_hd_smoke():
-    from repro.core.pipeline import edge_detect
+    from repro.api import edge_detect
     from repro.data.synthetic import image_batch
 
     cfg = get_config("sobel-hd", smoke=True)
     imgs = jnp.asarray(image_batch(cfg, 2)["images"])
-    out = edge_detect(imgs, size=cfg.sobel_size, directions=cfg.sobel_directions,
-                      variant=cfg.sobel_variant)
+    out = edge_detect(imgs, cfg.edge_config()).magnitude
     assert out.shape == (2, cfg.image_h, cfg.image_w)
     assert np.all(np.isfinite(np.asarray(out)))
     assert float(out.max()) > 0

@@ -2,8 +2,14 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import edge_detect, rgb_to_gray
+from repro.api import EdgeConfig, edge_detect as api_edge_detect
+from repro.core.pipeline import rgb_to_gray
 from repro.core.ssim import ssim
+
+
+def edge_detect(img, *, variant="v2", normalize=True):
+    return api_edge_detect(
+        img, EdgeConfig(variant=variant, normalize=normalize)).magnitude
 
 
 def test_rgb_to_gray_weights():

@@ -9,14 +9,36 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import EdgeConfig, edge_detect as api_edge_detect
 from repro.core.sobel import sobel as core_sobel
 from repro.kernels import tiling
-from repro.kernels.dispatch import sobel as dispatch_sobel
-from repro.kernels.ops import sobel as pallas_sobel
+from repro.kernels.edge import default_block_shape, edge_pallas, kernel_dtype
 
 
 def _img(rng, shape, dtype=np.float32):
     return rng.integers(0, 256, size=shape).astype(dtype)
+
+
+def pallas_sobel(img, *, size=5, directions=0, variant="v2", padding="reflect",
+                 block_h=None, block_w=None, interpret=True, **kw):
+    """Raw-kernel magnitude with the historical ``ops.sobel`` defaults."""
+    x = kernel_dtype(img)
+    batch = x.shape[:-2]
+    h, w = x.shape[-2], x.shape[-1]
+    dbh, dbw = default_block_shape(h, w, size)
+    out = edge_pallas(
+        x.reshape((-1, h, w)), operator=f"sobel{size}", variant=variant,
+        directions=directions, padding=padding, block_h=block_h or dbh,
+        block_w=block_w or dbw, interpret=interpret, **kw,
+    )
+    return out.reshape(batch + (h, w))
+
+
+def dispatch_sobel(img, *, backend=None, variant="v2", block_h=None, block_w=None):
+    cfg = EdgeConfig(variant=variant, normalize=False, backend=backend,
+                     block_h=block_h, block_w=block_w)
+    layout = "N" * max(0, img.ndim - 2) + "HW"
+    return api_edge_detect(img, cfg, layout=layout).magnitude
 
 
 @pytest.mark.parametrize("variant", ["direct", "separable", "v1", "v2"])
@@ -89,11 +111,11 @@ def test_2d_tiling_uint8_input(rng):
 
 def test_components_output_2d(rng):
     from repro.kernels.ref import sobel_components_ref
-    from repro.kernels.sobel5x5 import sobel5x5_pallas
 
     img = jnp.asarray(_img(rng, (1, 32, 48)))
-    comps = sobel5x5_pallas(
-        img, variant="v2", out_components=True, block_h=16, block_w=16, interpret=True
+    comps = edge_pallas(
+        img, operator="sobel5", variant="v2", out_components=True,
+        block_h=16, block_w=16, interpret=True,
     )
     assert comps.shape == (1, 4, 32, 48)
     refs = sobel_components_ref(img)
@@ -105,11 +127,12 @@ def test_components_output_2d(rng):
 
 def test_edge_detect_backend_parity(rng):
     """Pipeline wiring: edge_detect(backend=...) must agree across backends."""
-    from repro.core.pipeline import edge_detect
-
     img = jnp.asarray(_img(rng, (2, 37, 53)))
-    x = np.asarray(edge_detect(img, backend="xla"))
-    p = np.asarray(edge_detect(img, backend="pallas-interpret", block_h=8, block_w=16))
+    base = EdgeConfig()
+    x = np.asarray(api_edge_detect(img, base.replace(backend="xla")).magnitude)
+    p = np.asarray(api_edge_detect(
+        img, base.replace(backend="pallas-interpret", block_h=8, block_w=16)
+    ).magnitude)
     np.testing.assert_array_equal(p, x)
 
 

@@ -16,6 +16,18 @@ def _img(rng, shape):
     return jnp.asarray(rng.integers(0, 256, size=shape).astype(np.float32))
 
 
+def _dsobel(img, *, tuning_cache=None, **cfg_kw):
+    """dispatch.edge magnitude with the historical ``sobel()`` defaults
+    (unnormalized, gray layout inferred from rank)."""
+    from repro.api import EdgeConfig
+
+    layout = "N" * max(0, img.ndim - 2) + "HW"
+    return dispatch.edge(
+        img, EdgeConfig(normalize=False, **cfg_kw), layout=layout,
+        tuning_cache=tuning_cache,
+    ).magnitude
+
+
 # ---------------------------------------------------------------------------
 # Legal shape enumeration
 # ---------------------------------------------------------------------------
@@ -125,7 +137,7 @@ def test_autotune_cache_roundtrip(tmp_path, rng):
 
     # The JSON on disk round-trips through a fresh cache object.
     raw = json.load(open(path))
-    assert any(k.endswith("/32x48/1/1x1x1/f32/0")
+    assert any(k.endswith("/32x48/1/1x1x1/f32/0/-")
                for k in raw if not k.startswith("__"))
     reloaded = tuning.TuningCache(path)
     key = tuning.TuneKey("pallas-interpret", "float32", "sobel5", "v2", 32, 48)
@@ -139,7 +151,7 @@ def test_autotune_cache_roundtrip(tmp_path, rng):
     assert got == (bh, bw, depth, "tuned")
     # ...and produces the reference output with the tuned shape.
     img = _img(rng, (1, 32, 48))
-    out = dispatch.sobel(img, backend="pallas-interpret", tuning_cache=reloaded)
+    out = _dsobel(img, backend="pallas-interpret", tuning_cache=reloaded)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(core_sobel(img)))
 
 
@@ -178,13 +190,13 @@ def test_cache_ignores_corrupt_file(tmp_path):
     assert len(cache) == 0
 
 
-def _v5_payload(**entries):
+def _cur_payload(**entries):
     payload = {"__meta__": {"version": tuning.TuningCache.VERSION}}
     payload.update(entries)
     return payload
 
 
-_V5_KEY = "pallas-interpret/float32/sobel5/v2/reflect/gray/64x64/1/1x1x1/f32/0"
+_CUR_KEY = "pallas-interpret/float32/sobel5/v2/reflect/gray/64x64/1/1x1x1/f32/0/-"
 
 
 def test_cache_from_the_future_skips_and_warns(tmp_path):
@@ -197,7 +209,7 @@ def test_cache_from_the_future_skips_and_warns(tmp_path):
         # plausible future key layout + value schema drift
         "pallas-tpu/float32/sobel5/v2/reflect/gray/64x64/1/1x1x1/f32/0/extra":
             {"block": [32, 128], "us": 1.0},
-        _V5_KEY: {"block_h": 8, "block_w": 32, "us": 1.0},
+        _CUR_KEY: {"block_h": 8, "block_w": 32, "us": 1.0},
     }))
     with pytest.warns(RuntimeWarning, match="newer than supported"):
         cache = tuning.TuningCache(str(path))
@@ -212,8 +224,8 @@ def test_cache_truncated_json_skips_and_warns(tmp_path):
     """A mid-write-truncated file (crash during a non-atomic copy) loads as
     empty with a warning instead of raising mid-edge_detect."""
     path = tmp_path / "trunc.json"
-    full = json.dumps(_v5_payload(**{
-        _V5_KEY: {"block_h": 8, "block_w": 32, "us": 1.0}}))
+    full = json.dumps(_cur_payload(**{
+        _CUR_KEY: {"block_h": 8, "block_w": 32, "us": 1.0}}))
     path.write_text(full[: len(full) // 2])
     with pytest.warns(RuntimeWarning, match="unreadable tuning cache"):
         cache = tuning.TuningCache(str(path))
@@ -225,17 +237,17 @@ def test_cache_truncated_json_skips_and_warns(tmp_path):
 def test_cache_corrupted_entries_skipped_individually(tmp_path):
     """One bad entry (wrong value shape / non-numeric blocks) must not sink
     the healthy ones."""
-    good_key = _V5_KEY
+    good_key = _CUR_KEY
     bad_keys = {
-        "pallas-interpret/float32/sobel5/v2/reflect/gray/32x32/1/1x1x1/f32/0":
+        "pallas-interpret/float32/sobel5/v2/reflect/gray/32x32/1/1x1x1/f32/0/-":
             {"block": "8x32"},                      # missing block_h/block_w
-        "pallas-interpret/float32/sobel5/v2/reflect/gray/16x16/1/1x1x1/f32/0":
+        "pallas-interpret/float32/sobel5/v2/reflect/gray/16x16/1/1x1x1/f32/0/-":
             {"block_h": "eight", "block_w": 32},    # non-numeric
-        "pallas-interpret/float32/sobel5/v2/reflect/gray/8x8/1/1x1x1/f32/0":
+        "pallas-interpret/float32/sobel5/v2/reflect/gray/8x8/1/1x1x1/f32/0/-":
             [8, 32],                                # not a dict
     }
     path = tmp_path / "mixed.json"
-    path.write_text(json.dumps(_v5_payload(
+    path.write_text(json.dumps(_cur_payload(
         **{good_key: {"block_h": 8, "block_w": 32, "us": 1.0}}, **bad_keys)))
     with pytest.warns(RuntimeWarning, match="corrupted tuning cache"):
         cache = tuning.TuningCache(str(path))
@@ -279,8 +291,8 @@ def test_cache_v1_migration(tmp_path):
     assert len(cache) == 1
     cache.save()
     raw = json.load(open(path))
-    assert raw["__meta__"]["version"] == tuning.TuningCache.VERSION == 5
-    assert ("pallas-interpret/float32/sobel5/v2/reflect/gray/64x512/1/1x1x1/f32/0"
+    assert raw["__meta__"]["version"] == tuning.TuningCache.VERSION == 6
+    assert ("pallas-interpret/float32/sobel5/v2/reflect/gray/64x512/1/1x1x1/f32/0/-"
             in raw)
 
 
@@ -329,13 +341,13 @@ def test_cache_v2_to_v3_migration(tmp_path, rng):
     got = dispatch.choose_block_shape(32, 48, backend="pallas-interpret", cache=cache)
     assert got == (16, 16, 0, "tuned")
     img = _img(rng, (1, 32, 48))
-    out = dispatch.sobel(img, backend="pallas-interpret", tuning_cache=cache)
+    out = _dsobel(img, backend="pallas-interpret", tuning_cache=cache)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(core_sobel(img)))
     # Re-save writes the current schema.
     cache.save()
     raw = json.load(open(path))
-    assert raw["__meta__"]["version"] == 5
-    assert ("pallas-interpret/float32/sobel5/v2/reflect/gray/32x48/1/1x1x1/f32/0"
+    assert raw["__meta__"]["version"] == 6
+    assert ("pallas-interpret/float32/sobel5/v2/reflect/gray/32x48/1/1x1x1/f32/0/-"
             in raw)
     assert not any("5x5" in k for k in raw if not k.startswith("__"))
 
@@ -361,8 +373,8 @@ def test_cache_v3_to_v4_migration(tmp_path):
     assert len(cache) == 1
     cache.save()
     raw = json.load(open(path))
-    assert raw["__meta__"]["version"] == 5
-    assert ("pallas-interpret/float32/scharr3/separable/edge/rgb/720x1280/1/1x1x1/f32/0"
+    assert raw["__meta__"]["version"] == 6
+    assert ("pallas-interpret/float32/scharr3/separable/edge/rgb/720x1280/1/1x1x1/f32/0/-"
             in raw)
 
 
@@ -393,9 +405,70 @@ def test_cache_v4_to_v5_migration(tmp_path):
     assert len(cache) == 2
     cache.save()
     raw = json.load(open(path))
-    assert raw["__meta__"]["version"] == 5
-    assert ("pallas-interpret/uint8/sobel5/v2/reflect/gray/720x1280/1/1x1x1/f32/0"
+    assert raw["__meta__"]["version"] == 6
+    assert ("pallas-interpret/uint8/sobel5/v2/reflect/gray/720x1280/1/1x1x1/f32/0/-"
             in raw)
+
+
+def test_cache_v5_to_v6_migration(tmp_path):
+    """v5 files (no plan segment) land in the single-operator ``-`` plan
+    slot of the v6 key space — and do not shadow plan-identified slots for
+    the same workload."""
+    path = tmp_path / "v5.json"
+    path.write_text(json.dumps({
+        "__meta__": {"version": 5},
+        "pallas-interpret/uint8/sobel5/v2/reflect/gray/720x1280/1/1x1x1/int/2":
+            {"block_h": 16, "block_w": 64, "depth": 2, "us": 7.0},
+        "pallas-tpu/float32/sobel5/v2/reflect/gray/1024x1024/4/1x2x2/f32/0":
+            {"block_h": 32, "block_w": 128, "us": 3.0},
+        "not/enough/segments": {"block_h": 1, "block_w": 1, "us": 1.0},
+    }))
+    cache = tuning.TuningCache(str(path))
+    base = dict(backend="pallas-interpret", dtype="uint8", operator="sobel5",
+                variant="v2", h=720, w=1280, precision="int", depth=2)
+    assert cache.lookup(tuning.TuneKey(**base)) == (16, 64, 2)
+    assert cache.lookup(
+        tuning.TuneKey("pallas-tpu", "float32", "sobel5", "v2", 1024, 1024,
+                       devices=4, mesh="1x2x2")
+    ) == (32, 128, 0)
+    # Pre-v6 tunings never claim plan-identified slots: a fused-plan kernel
+    # has a different inner loop, so its block tuning must re-measure.
+    from repro.core.filters import get_plan, plan_identity
+
+    plan_seg = plan_identity(get_plan("canny5"))
+    assert cache.lookup(tuning.TuneKey(**base, plan=plan_seg)) is None
+    assert len(cache) == 2
+    cache.save()
+    raw = json.load(open(path))
+    assert raw["__meta__"]["version"] == 6
+    assert ("pallas-interpret/uint8/sobel5/v2/reflect/gray/720x1280/1/1x1x1/int/2/-"
+            in raw)
+
+
+def test_key_distinguishes_plan(tmp_path):
+    """Schema v6: the same gradient operator tuned standalone vs inside a
+    fused plan — slots must not collide, and two plans sharing a gradient
+    stage keep separate slots (the plan identity hashes the full stage
+    sequence, not just the name)."""
+    from repro.core.filters import get_plan, make_plan, plan_identity
+
+    cache = tuning.TuningCache(str(tmp_path / "c.json"))
+    base = dict(backend="pallas-interpret", dtype="float32", operator="sobel5",
+                variant="v2", h=128, w=256)
+    canny = plan_identity(get_plan("canny5"))
+    blur = plan_identity(get_plan("blur_sobel5"))
+    assert canny != blur and canny.startswith("canny5.")
+    cache.record(tuning.TuneKey(**base), 8, 32, 1.0)
+    cache.record(tuning.TuneKey(**base, plan=canny), 16, 64, 2.0, depth=2)
+    cache.record(tuning.TuneKey(**base, plan=blur), 32, 128, 3.0)
+    assert cache.lookup(tuning.TuneKey(**base)) == (8, 32, 0)
+    assert cache.lookup(tuning.TuneKey(**base, plan=canny)) == (16, 64, 2)
+    assert cache.lookup(tuning.TuneKey(**base, plan=blur)) == (32, 128, 0)
+    # a re-registered plan with different stages gets a different identity
+    variant_plan = make_plan("canny5x", ("gaussian3", "sobel5", "nms"))
+    assert plan_identity(variant_plan) != canny
+    assert cache.lookup(
+        tuning.TuneKey(**base, plan=plan_identity(variant_plan))) is None
 
 
 def test_key_distinguishes_precision_and_depth(tmp_path):
@@ -472,17 +545,17 @@ def test_resolve_backend():
 
 def test_dispatch_xla_is_core(rng):
     img = _img(rng, (2, 33, 29))
-    out = dispatch.sobel(img, backend="xla")
+    out = _dsobel(img, backend="xla")
     np.testing.assert_array_equal(np.asarray(out), np.asarray(core_sobel(img)))
 
 
 @pytest.mark.parametrize("variant", ["direct", "separable", "v1", "v2"])
 def test_dispatch_backends_agree(variant, rng):
     img = _img(rng, (1, 45, 61))
-    x = np.asarray(dispatch.sobel(img, variant=variant, backend="xla"))
+    x = np.asarray(_dsobel(img, variant=variant, backend="xla"))
     p = np.asarray(
-        dispatch.sobel(img, variant=variant, backend="pallas-interpret",
-                       block_h=8, block_w=16)
+        _dsobel(img, variant=variant, backend="pallas-interpret",
+                block_h=8, block_w=16)
     )
     np.testing.assert_array_equal(p, x)
 
